@@ -1,0 +1,61 @@
+"""Gradient-compression benchmark: collective-bytes reduction in HLO.
+
+Lowers the dense psum vs the top-k compressed exchange on an emulated
+8-device mesh (subprocess-free: this bench runs as its own process via
+benchmarks.run, which sets the device count) and reports the parsed
+collective bytes — the distributed-optimization trick's receipt.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_print
+
+
+def run(**kw):
+    import jax
+    if len(jax.devices()) < 8:
+        print("# bench_compression: needs 8 emulated devices "
+              "(run via benchmarks.run --compression or set XLA_FLAGS); skipping")
+        return []
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.roofline.hlo import collective_bytes
+    from repro.train.dp_exchange import build_compressed_allreduce
+
+    mesh = jax.make_mesh((8,), ("data",))
+    n = 1 << 20
+    g = {"w": jnp.zeros((n,), jnp.float32)}
+    r = {"w": jnp.zeros((n,), jnp.float32)}
+
+    def dense(grads):
+        return shard_map(
+            lambda t: jax.tree.map(lambda x: jax.lax.psum(x, "data"), t),
+            mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), grads),),
+            out_specs=jax.tree.map(lambda _: P(), grads), check_rep=False,
+        )(grads)
+
+    comp = build_compressed_allreduce(mesh, k_frac=0.01)
+
+    rows = []
+    for name, fn, args in (
+        ("dense_psum", dense, (g,)),
+        ("topk_1pct", comp, (g, r)),
+    ):
+        lowered = jax.jit(fn).lower(*args)
+        hlo = lowered.compile().as_text()
+        cb = collective_bytes(hlo, scan_corrected=False)
+        rows.append([name, cb["all-reduce"], cb["all-gather"], cb["total"]])
+    csv_print(
+        "compression_collective_bytes",
+        ["exchange", "all_reduce_B", "all_gather_B", "total_B"],
+        rows,
+    )
+    if len(rows) == 2 and rows[1][3] > 0:
+        print(f"# reduction: {rows[0][3] / rows[1][3]:.1f}x fewer collective bytes")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

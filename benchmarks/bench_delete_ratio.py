@@ -1,0 +1,48 @@
+"""Paper Fig 5: MSE vs delete:insert ratio at fixed space.
+
+The paper's headline claim: SS± stays the most accurate up to ratio
+(logU-1)/logU ~ 0.94 for U = 2^16 while using the same space.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import UNIVERSE, csv_print, exact_freqs, make_sketches, mse, run_sketch
+from repro.core.streams import bounded_stream
+
+RATIOS = (0.0, 0.25, 0.5, 0.75, 0.9, 0.9375)
+
+
+def run(n_total: int = 200000, runs: int = 2, seed0: int = 0):
+    rows = []
+    budget = 500  # the paper's "500 logU bits" per sketch
+    for ratio in RATIOS:
+        alpha = 1.0 / (1.0 - ratio) if ratio < 1 else 16.0
+        n_insert = int(n_total / (1 + ratio))
+        agg = {}
+        for r in range(runs):
+            stream = bounded_stream(
+                "zipf", n_insert, ratio, universe=UNIVERSE, seed=seed0 + r
+            )
+            freqs = exact_freqs(stream)
+            sample = np.nonzero(freqs > 0)[0]
+            sketches = make_sketches(budget, alpha, n_stream=len(stream),
+                                     seed=seed0 + r)
+            for name, sk in sketches.items():
+                run_sketch(sk, stream)
+                agg.setdefault(name, []).append(mse(sk, freqs, sample))
+        for name, vals in agg.items():
+            rows.append([ratio, name, float(np.mean(vals))])
+    csv_print("fig5_mse_vs_delete_ratio", ["ratio", "sketch", "mse"], rows)
+    # the paper's claim at ratio <= 0.9375: SS± most accurate
+    by_ratio = {}
+    for ratio, name, m in rows:
+        by_ratio.setdefault(ratio, {})[name] = m
+    for ratio, d in by_ratio.items():
+        best = min(d, key=d.get)
+        print(f"ratio={ratio}: best={best}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

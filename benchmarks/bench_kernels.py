@@ -1,0 +1,107 @@
+"""Kernel benchmarks: parity + interpret-mode throughput for the Pallas
+kernels (sketch_update, flash_attention) against their jnp oracles.
+
+Wall-times here are CPU interpret-mode numbers — correctness and
+relative-shape trends only; the TPU story is the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_print
+from repro.core.streams import bounded_stream
+
+
+def bench_sketch_update(runs: int = 2):
+    from repro.kernels.sketch_update.ops import sketch_block_update
+    from repro.kernels.sketch_update.ref import sketch_update_ref
+    from repro.sketch import jax_sketch as js
+
+    rows = []
+    for k, block in ((1024, 1024), (4096, 4096)):
+        stream = bounded_stream("zipf", block, 0.5, seed=1)[:block]
+        items = jnp.asarray(stream[:, 0], jnp.int32)
+        weights = jnp.asarray(stream[:, 1], jnp.int32)
+        state = js.init(k)
+
+        out_k = sketch_block_update(state, items, weights)
+        rid, rcnt, rerr = sketch_update_ref(
+            state.ids, state.counts, state.errors, items, weights
+        )
+        parity = (
+            np.array_equal(np.asarray(out_k.ids), np.asarray(rid))
+            and np.array_equal(np.asarray(out_k.counts), np.asarray(rcnt))
+        )
+
+        t0 = time.perf_counter()
+        for _ in range(runs):
+            sketch_block_update(state, items, weights).ids.block_until_ready()
+        dt = (time.perf_counter() - t0) / runs
+        rows.append([f"sketch_update_k{k}", block, parity, dt * 1e3])
+    csv_print("kernel_sketch_update", ["kernel", "block", "parity", "ms"], rows)
+    return rows
+
+
+def bench_flash_attention(runs: int = 2):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    rows = []
+    for (B, S, H, KV, hd) in ((1, 256, 4, 2, 64), (1, 512, 8, 2, 128)):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        parity = bool(jnp.allclose(out, ref, atol=3e-5, rtol=3e-5))
+        t0 = time.perf_counter()
+        for _ in range(runs):
+            flash_attention(q, k, v, causal=True).block_until_ready()
+        dt = (time.perf_counter() - t0) / runs
+        rows.append([f"flash_B{B}_S{S}_H{H}", S, parity, dt * 1e3])
+    csv_print("kernel_flash_attention", ["kernel", "seq", "parity", "ms"], rows)
+    return rows
+
+
+def bench_decode_attention(runs: int = 2):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    rows = []
+    for (B, KV, G, hd, C) in ((2, 2, 4, 64, 512), (1, 4, 2, 128, 2048)):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, C, KV, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, C, KV, hd), jnp.float32)
+        valid = jax.random.uniform(ks[3], (B, C)) < 0.8
+        ctx, mass = decode_attention(q, k, v, valid)
+        ctx_r, mass_r = decode_attention_ref(q, k, v, valid)
+        parity = bool(
+            jnp.allclose(ctx, ctx_r, atol=3e-5, rtol=3e-5)
+            and jnp.allclose(mass, mass_r, atol=2e-5, rtol=2e-4)
+        )
+        t0 = time.perf_counter()
+        for _ in range(runs):
+            decode_attention(q, k, v, valid)[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / runs
+        rows.append([f"decode_C{C}_KV{KV}", C, parity, dt * 1e3])
+    csv_print("kernel_decode_attention", ["kernel", "cache", "parity", "ms"], rows)
+    return rows
+
+
+def run(**kw):
+    return {
+        "sketch_update": bench_sketch_update(),
+        "flash_attention": bench_flash_attention(),
+        "decode_attention": bench_decode_attention(),
+    }
+
+
+if __name__ == "__main__":
+    run()

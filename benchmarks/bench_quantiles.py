@@ -1,0 +1,100 @@
+"""Paper Figs 8-10: DSS± vs DCS vs KLL± — KS divergence vs space,
+vs delete ratio, and update time."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_print
+from repro.core.quantiles import KLLpm, dyadic_from_budget, ks_divergence
+from repro.core.streams import bounded_stream
+
+BITS = 16
+UNIVERSE = 1 << BITS
+
+
+def _run_quantile(sketch, stream: np.ndarray) -> float:
+    t0 = time.perf_counter()
+    if hasattr(sketch, "process"):
+        sketch.process(stream)
+    else:
+        for item, sign in stream:
+            sketch.update(int(item), int(sign))
+    return (time.perf_counter() - t0) / len(stream)
+
+
+def _sketches(budget: int, seed: int):
+    return {
+        "dss_pm": dyadic_from_budget(BITS, budget, "dss_pm", seed=seed),
+        "dcs": dyadic_from_budget(BITS, budget, "dcs", seed=seed),
+        "kll_pm": KLLpm(k=max(8, budget // 8), seed=seed),
+    }
+
+
+def _live_values(stream: np.ndarray) -> np.ndarray:
+    f = np.zeros(UNIVERSE, np.int64)
+    np.add.at(f, stream[:, 0], stream[:, 1])
+    return np.repeat(np.nonzero(f)[0], f[np.nonzero(f)[0]])
+
+
+def run_fig8(n_insert: int = 8000, runs: int = 2, seed0: int = 0):
+    rows = []
+    for budget in (500, 1000, 2000):
+        agg = {}
+        for r in range(runs):
+            for dist in ("zipf", "binomial", "caida"):
+                stream = bounded_stream(dist, n_insert, 0.5,
+                                        universe=UNIVERSE, seed=seed0 + r)
+                live = _live_values(stream)
+                for name, sk in _sketches(budget, seed0 + r).items():
+                    _run_quantile(sk, stream)
+                    ks = ks_divergence(sk, live)
+                    agg.setdefault((dist, name), []).append(ks)
+        for (dist, name), vals in agg.items():
+            rows.append([dist, budget, name, float(np.mean(vals))])
+    csv_print("fig8_quantile_ks_vs_space", ["dist", "budget", "sketch", "ks"], rows)
+    return rows
+
+
+def run_fig9(n_total: int = 8000, runs: int = 2, seed0: int = 0):
+    rows = []
+    budget = 1000
+    for ratio in (0.0, 0.25, 0.5, 0.75, 0.9):
+        agg = {}
+        n_insert = int(n_total / (1 + ratio))
+        for r in range(runs):
+            stream = bounded_stream("zipf", n_insert, ratio,
+                                    universe=UNIVERSE, seed=seed0 + r)
+            live = _live_values(stream)
+            for name, sk in _sketches(budget, seed0 + r).items():
+                _run_quantile(sk, stream)
+                agg.setdefault(name, []).append(ks_divergence(sk, live))
+        for name, vals in agg.items():
+            rows.append([ratio, name, float(np.mean(vals))])
+    csv_print("fig9_quantile_ks_vs_ratio", ["ratio", "sketch", "ks"], rows)
+    return rows
+
+
+def run_fig10(runs: int = 2, seed0: int = 0):
+    rows = []
+    budget = 1000
+    for n in (2000, 4000, 8000):
+        agg = {}
+        for r in range(runs):
+            stream = bounded_stream("zipf", int(n / 1.5), 0.5,
+                                    universe=UNIVERSE, seed=seed0 + r)
+            for name, sk in _sketches(budget, seed0 + r).items():
+                agg.setdefault(name, []).append(_run_quantile(sk, stream))
+        for name, vals in agg.items():
+            rows.append([n, name, float(np.mean(vals)) * 1e6])
+    csv_print("fig10_quantile_update_time", ["stream_len", "sketch", "us"], rows)
+    return rows
+
+
+def run(**kw):
+    return {"fig8": run_fig8(), "fig9": run_fig9(), "fig10": run_fig10()}
+
+
+if __name__ == "__main__":
+    run()

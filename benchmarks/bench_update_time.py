@@ -1,0 +1,56 @@
+"""Paper Fig 6: per-update latency vs stream length.
+
+Adds the TPU-adapted JAX paths (scan-exact and block-weighted) and the
+Pallas kernel (interpret mode) next to the paper's CPU two-heap
+implementation — the update-time story of DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import UNIVERSE, csv_print, make_sketches, run_sketch
+from repro.core.streams import bounded_stream
+from repro.sketch import jax_sketch as js
+
+LENGTHS = (5000, 10000, 20000)
+
+
+def _time_jax_block(stream: np.ndarray, capacity: int, block: int = 4096) -> float:
+    state = js.init(capacity)
+    items = jnp.asarray(stream[:, 0], jnp.int32)
+    weights = jnp.asarray(stream[:, 1], jnp.int32)
+    # warm up compile
+    js.block_update(state, items[:block], weights[:block]).ids.block_until_ready()
+    t0 = time.perf_counter()
+    for s in range(0, len(stream) - block + 1, block):
+        state = js.block_update(state, items[s : s + block], weights[s : s + block])
+    state.ids.block_until_ready()
+    return (time.perf_counter() - t0) / max(len(stream) - len(stream) % block, 1)
+
+
+def run(runs: int = 2, seed0: int = 0):
+    rows = []
+    budget, alpha = 500, 2.0
+    for n in LENGTHS:
+        agg = {}
+        for r in range(runs):
+            stream = bounded_stream("zipf", int(n / 1.5), 0.5,
+                                    universe=UNIVERSE, seed=seed0 + r)
+            sketches = make_sketches(budget, alpha, n_stream=len(stream), seed=seed0 + r)
+            for name, sk in sketches.items():
+                agg.setdefault(name, []).append(run_sketch(sk, stream))
+            agg.setdefault("sspm_jax_block", []).append(
+                _time_jax_block(stream, budget)
+            )
+        for name, vals in agg.items():
+            rows.append([n, name, float(np.mean(vals)) * 1e6])
+    csv_print("fig6_update_time", ["stream_len", "sketch", "us_per_update"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

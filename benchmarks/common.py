@@ -1,0 +1,92 @@
+"""Shared helpers for the paper-experiment benchmarks.
+
+Scaled defaults: the paper uses |F|1 = 1e5 (synthetic) / 1e6 (CAIDA)
+averaged over 5 runs; CI defaults here are 2e4 / 3 runs so the whole
+suite stays minutes on one CPU core. ``--full`` restores paper scale.
+Trends, not absolute values, are the comparison target (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+import numpy as np
+
+from repro.core.baselines import CSSS, CountMedian, CountMin
+from repro.core.spacesaving import LazySpaceSavingPM, SpaceSavingPM
+from repro.core.streams import bounded_stream
+
+DISTRIBUTIONS = ("zipf", "binomial", "caida")
+UNIVERSE = 1 << 16
+
+
+def exact_freqs(stream: np.ndarray, universe: int = UNIVERSE) -> np.ndarray:
+    f = np.zeros(universe, np.int64)
+    np.add.at(f, stream[:, 0], stream[:, 1])
+    return f
+
+
+def run_sketch(sketch, stream: np.ndarray) -> float:
+    """Feed the stream; returns seconds per update."""
+    t0 = time.perf_counter()
+    if hasattr(sketch, "process"):
+        sketch.process(stream)
+    else:
+        for item, sign in stream:
+            sketch.update(int(item), int(sign))
+    return (time.perf_counter() - t0) / len(stream)
+
+
+def mse(sketch, freqs: np.ndarray, sample: np.ndarray) -> float:
+    if hasattr(sketch, "query_many"):
+        est = np.asarray(sketch.query_many(sample), dtype=np.float64)
+    else:
+        est = np.asarray([sketch.query(int(i)) for i in sample], dtype=np.float64)
+    return float(np.mean((est - freqs[sample]) ** 2))
+
+
+def recall_precision(sketch, freqs: np.ndarray, phi: float):
+    live = freqs.sum()
+    thresh = phi * live
+    true_hot = set(np.nonzero(freqs >= thresh)[0].tolist())
+    cand = np.nonzero(freqs > 0)[0]
+    if hasattr(sketch, "query_many"):
+        est = np.asarray(sketch.query_many(cand), dtype=np.float64)
+    else:
+        est = np.asarray([sketch.query(int(i)) for i in cand], dtype=np.float64)
+    reported = set(cand[est >= thresh].tolist())
+    tp = len(true_hot & reported)
+    recall = tp / max(len(true_hot), 1)
+    precision = tp / max(len(reported), 1)
+    return recall, precision
+
+
+def make_sketches(budget: int, alpha: float, universe: int = UNIVERSE,
+                  n_stream: int = 0, seed: int = 0) -> Dict[str, object]:
+    """The paper's §5 lineup at EQUAL space (``budget`` counters each).
+
+    This mirrors the paper's Fig 5 setup ("the sketch space is 500 logU
+    bits" for every sketch): SS± variants spend the budget on k counters;
+    Count-Min / Count-Median arrange the same counter budget as
+    depth x width with the customary depth 5; CSSS runs its sampling
+    front-end over an equally-sized Count-Median.
+    """
+    depth = 5
+    width = max(2, budget // depth)
+    eps_implied = alpha / budget
+    return {
+        "lazy_sspm": LazySpaceSavingPM(capacity=budget),
+        "sspm": SpaceSavingPM(capacity=budget),
+        "count_min": CountMin(width=width, depth=depth, seed=seed),
+        "count_median": CountMedian(width=width, depth=depth, seed=seed),
+        "csss": CSSS(eps=eps_implied, delta=1.0 / universe, alpha=alpha,
+                     universe=universe, stream_len=max(n_stream, 1000),
+                     seed=seed, sample_const=4.0),
+    }
+
+
+def csv_print(name: str, header: List[str], rows: Iterable[Iterable]) -> None:
+    print(f"\n# {name}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{x:.6g}" if isinstance(x, float) else str(x) for x in r))

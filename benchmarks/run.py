@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: one bench per paper table/figure + kernels +
+the dry-run/roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run            # full CI suite
+    PYTHONPATH=src python -m benchmarks.run --only fig5
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _roofline_summary():
+    from pathlib import Path
+    from repro.roofline.report import load_records, markdown_table
+
+    d = Path("experiments/dryrun")
+    if not d.exists() or not list(d.glob("*__single.json")):
+        print("# roofline: no dry-run artifacts found "
+              "(run python -m repro.launch.dryrun --all); skipping")
+        return
+    recs = load_records(d, "single")
+    print(f"\n# roofline_summary ({len(recs)} single-pod cells)")
+    print(markdown_table(recs))
+
+
+BENCHES = {
+    "fig4": ("benchmarks.bench_mse_space", "Fig 4: MSE vs space"),
+    "fig5": ("benchmarks.bench_delete_ratio", "Fig 5: MSE vs delete ratio"),
+    "fig6": ("benchmarks.bench_update_time", "Fig 6: update time"),
+    "fig7": ("benchmarks.bench_recall_precision", "Fig 7: recall/precision"),
+    "quantiles": ("benchmarks.bench_quantiles", "Figs 8-10: quantile sketches"),
+    "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/time"),
+    "compression": ("benchmarks.bench_compression", "grad compression bytes"),
+    "h2o": ("benchmarks.bench_h2o_quality", "SS± KV-cache retention quality"),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(BENCHES)
+    t_all = time.time()
+    for name in names:
+        mod_name, desc = BENCHES[name]
+        print(f"\n{'='*70}\n== {name}: {desc}\n{'='*70}", flush=True)
+        t0 = time.time()
+        if name == "compression":
+            # needs emulated devices: run in a subprocess with XLA_FLAGS
+            # so this process keeps its single-device view
+            import os
+            import subprocess
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            out = subprocess.run(
+                [sys.executable, "-m", mod_name], env=env,
+                capture_output=True, text=True, timeout=600,
+            )
+            print(out.stdout)
+            if out.returncode != 0:
+                print(out.stderr[-1500:])
+        else:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        print(f"== {name} done in {time.time()-t0:.1f}s", flush=True)
+    _roofline_summary()
+    print(f"\nall benchmarks done in {time.time()-t_all:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

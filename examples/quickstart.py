@@ -1,0 +1,61 @@
+"""Quickstart: the SpaceSaving± public API in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers: the exact reference sketches (paper Algs 1-4 on the two-heap
+structure), the TPU-adapted JAX sketch (dense counter store), bounded-
+deletion accounting, mergeability, and the quantile sketch (DSS±).
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+# --- 1. the paper's reference implementation (two heaps + dict) ----------
+from repro.core import SpaceSavingPM, LazySpaceSavingPM, capacity_for
+from repro.core.streams import bounded_stream, exact_stats
+
+eps, alpha = 0.01, 2.0           # accuracy 1%, at most half the stream deleted
+sketch = SpaceSavingPM(capacity_for(eps, alpha))        # 2*alpha/eps counters
+
+stream = bounded_stream("zipf", n_insert=50_000, delete_ratio=0.5, seed=0)
+sketch.process(stream)
+
+f = np.zeros(1 << 16, np.int64)
+np.add.at(f, stream[:, 0], stream[:, 1])
+top_true = np.argsort(f)[::-1][:5]
+print("true top-5:", top_true.tolist())
+print("estimated :", [(int(i), sketch.query(int(i))) for i in top_true])
+# Thm 4 guarantee: |f - f_hat| <= eps * (I - D)
+I = int((stream[:, 1] > 0).sum()); D = int((stream[:, 1] < 0).sum())
+bound = eps * (I - D)
+errs = [abs(sketch.query(int(i)) - int(f[i])) for i in top_true]
+print(f"errors {errs} all <= eps*(I-D) = {bound:.0f}:", all(e <= bound for e in errs))
+
+# --- 2. the TPU-adapted JAX sketch (vectorized dense store) ---------------
+from repro.sketch import init, block_update, topk, merge
+
+state = init(capacity_for(eps, alpha))
+items = jnp.asarray(stream[:, 0], jnp.int32)
+weights = jnp.asarray(stream[:, 1], jnp.int32)
+for s in range(0, len(stream) - 8192 + 1, 8192):
+    state = block_update(state, items[s:s + 8192], weights[s:s + 8192])
+ids, counts = topk(state, 5)
+print("jax sketch top-5:", list(zip(np.asarray(ids).tolist(),
+                                    np.asarray(counts).tolist())))
+
+# --- 3. mergeability (the distributed-reduce property) --------------------
+half = len(stream) // 2
+a, b = init(512), init(512)
+a = block_update(a, items[:half], weights[:half])
+b = block_update(b, items[half:], weights[half:])
+merged = merge(a, b)
+print("merged top-3:", np.asarray(topk(merged, 3)[0]).tolist())
+
+# --- 4. quantiles in the bounded-deletion model (DSS±) --------------------
+from repro.core.quantiles import make_dss_pm
+
+q = make_dss_pm(bits=16, eps=0.05, alpha=2.0)
+q.process(stream)
+print("median estimate:", q.quantile(0.5),
+      "| p99 estimate:", q.quantile(0.99))
+print("done.")

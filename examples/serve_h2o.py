@@ -1,0 +1,61 @@
+"""Long-context serving with the SS± heavy-hitter KV cache.
+
+Demonstrates the paper-as-systems-feature: a gemma3-style model (5:1
+local:global attention) decodes far past the dense-cache budget; global
+layers keep only the SS± heavy-hitter set. Compares generated tokens
+against a dense-cache reference to show the heavy-hitter cache tracks it.
+
+    PYTHONPATH=src python examples/serve_h2o.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.serve.kv_cache as kvc
+from repro import configs
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.kv_cache import build_cache, cache_len_for
+
+
+def main():
+    cfg = configs.get_smoke("gemma3_27b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    B, prompt_len, new_tokens = 2, 48, 24
+    ctx = prompt_len + new_tokens
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len),
+                                0, cfg.vocab_size)
+
+    # reference: dense caches everywhere
+    eng_dense = ServeEngine(cfg=cfg, params=params, context=ctx)
+    out_dense = eng_dense.generate(prompt, max_new_tokens=new_tokens)
+
+    # SS± eviction: force the hh path at smoke scale (production trigger
+    # is context > 64k; here we lower it to exercise the machinery)
+    old = kvc.HH_ENGAGE_CTX
+    kvc.HH_ENGAGE_CTX = 16
+    try:
+        eng_hh = ServeEngine(cfg=cfg, params=params, context=ctx,
+                             decay_period=32)
+        out_hh = eng_hh.generate(prompt, max_new_tokens=new_tokens)
+    finally:
+        kvc.HH_ENGAGE_CTX = old
+
+    dense_toks = out_dense["tokens"][:, prompt_len:]
+    hh_toks = out_hh["tokens"][:, prompt_len:]
+    agree = (dense_toks == hh_toks).mean()
+    budget = cfg.hh_kv_budget
+    print(f"context {ctx}, global-layer budget {budget} slots "
+          f"(vs dense {ctx})")
+    print(f"dense  : {dense_toks[0][:12].tolist()}")
+    print(f"ss±-hh : {hh_toks[0][:12].tolist()}")
+    print(f"agreement with dense reference: {agree*100:.0f}% "
+          f"(greedy decode, random weights — divergence compounds)")
+    print("ok: long-context decode ran with bounded global-layer KV.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param qwen3-style LM for a few
+hundred steps on CPU with the full production stack — data pipeline,
+AdamW, checkpointing, SS± token statistics, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: d_model 512, 8 layers, vocab 32000 — a real, if small,
+language model; the same Trainer drives the 27B configs on a mesh.)
+"""
+import argparse
+import dataclasses
+import time
+
+from repro import configs
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import cosine_schedule
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="lm_100m", family="dense",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32000, qk_norm=True, tie_embeddings=True,
+    )
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, zipf_s=1.1)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=100, ckpt_dir=args.ckpt_dir,
+        log_every=20, token_stats_capacity=2048, token_stats_window=64,
+    )
+    opt = AdamWConfig(lr=cosine_schedule(3e-4, warmup=30, total=args.steps))
+
+    trainer = Trainer(cfg, data_cfg, tcfg, opt)
+    trainer.install_signal_handlers()
+    if trainer.try_resume():
+        print(f"resumed from step {trainer.step_num}")
+
+    n_params = sum(x.size for x in __import__("jax").tree.leaves(trainer.state.params))
+    print(f"model: {n_params/1e6:.1f}M params | {args.steps} steps "
+          f"| batch {args.batch}x{args.seq}")
+    t0 = time.time()
+    out = trainer.run()
+    dt = time.time() - t0
+
+    for rec in trainer.metrics_log:
+        print(f"  step {rec['step']:4d}  loss {rec['loss']:.4f}  "
+              f"gnorm {rec['grad_norm']:.2f}  {rec['step_time_s']*1e3:.0f}ms")
+    first, last = trainer.metrics_log[0], trainer.metrics_log[-1]
+    print(f"\nloss {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"in {out['final_step']} steps ({dt:.0f}s)")
+    hot = trainer.token_stats.topk(8)
+    print(f"SS± hot tokens (window stats): {hot.items.tolist()}")
+    print(f"   insertions={hot.insertions} deletions={hot.deletions} "
+          f"(empirical alpha={hot.alpha_bound:.2f})")
+    assert last["loss"] < first["loss"], "training must reduce loss"
+    print("ok.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""The paper's contribution: SpaceSaving± and friends.
+
+Public API:
+  streams     -- bounded-deletion stream generators + exact accounting
+  heaps       -- indexed min/max heaps (paper §3.6 structure)
+  spacesaving -- SpaceSaving / LazySpaceSavingPM / SpaceSavingPM references
+  baselines   -- MisraGries / CountMin / CountMedian / CSSS
+  quantiles   -- DyadicQuantile (DSS± / DCS / DCM), KLL± stand-in
+"""
+from .spacesaving import (
+    LazySpaceSavingPM,
+    SpaceSaving,
+    SpaceSavingPM,
+    capacity_for,
+    make_sketch,
+)
+from .streams import (
+    StreamStats,
+    bounded_stream,
+    exact_stats,
+    heavy_hitters,
+)
+
+__all__ = [
+    "SpaceSaving",
+    "LazySpaceSavingPM",
+    "SpaceSavingPM",
+    "make_sketch",
+    "capacity_for",
+    "StreamStats",
+    "bounded_stream",
+    "exact_stats",
+    "heavy_hitters",
+]

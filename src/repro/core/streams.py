@@ -1,0 +1,214 @@
+"""Bounded-deletion stream model: generators, patterns, and accounting.
+
+A stream is a sequence of (item_id, sign) pairs with sign in {+1, -1}.
+The bounded-deletion model [Jayaram & Woodruff '18] requires
+``D <= (1 - 1/alpha) * I`` and that every deletion targets a previously
+inserted item (all entries of the frequency vector stay non-negative).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Iterable, Iterator, Sequence, Tuple
+
+import numpy as np
+
+Update = Tuple[int, int]  # (item_id, +1 | -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Exact accounting for a bounded-deletion stream."""
+
+    insertions: int
+    deletions: int
+    frequencies: Counter
+
+    @property
+    def residual_mass(self) -> int:
+        """|F|_1 = I - D."""
+        return self.insertions - self.deletions
+
+    @property
+    def alpha(self) -> float:
+        """Smallest alpha such that D <= (1 - 1/alpha) I."""
+        if self.deletions == 0:
+            return 1.0
+        if self.deletions >= self.insertions:
+            return float("inf")
+        return self.insertions / (self.insertions - self.deletions)
+
+    def is_bounded(self, alpha: float) -> bool:
+        return self.deletions <= (1.0 - 1.0 / alpha) * self.insertions
+
+
+def exact_stats(stream: Iterable[Update]) -> StreamStats:
+    freq: Counter = Counter()
+    ins = dels = 0
+    for item, sign in stream:
+        if sign > 0:
+            ins += 1
+            freq[item] += 1
+        else:
+            dels += 1
+            freq[item] -= 1
+            if freq[item] < 0:
+                raise ValueError(
+                    f"stream is not strict-turnstile: item {item} deleted below 0"
+                )
+    return StreamStats(ins, dels, freq)
+
+
+def heavy_hitters(stats: StreamStats, phi: float) -> set:
+    """Ground-truth phi-frequent items: f(x) >= phi * |F|_1."""
+    thr = phi * stats.residual_mass
+    return {x for x, c in stats.frequencies.items() if c >= thr and c > 0}
+
+
+# ---------------------------------------------------------------------------
+# Insertion generators
+# ---------------------------------------------------------------------------
+
+def zipf_insertions(
+    n: int, universe: int, skew: float = 1.0, seed: int = 0
+) -> np.ndarray:
+    """n insertions with Zipf(skew) frequencies over ``universe`` ranks.
+
+    Uses the exact truncated-Zipf pmf (not numpy's unbounded zipf) so the
+    rank-frequency curve matches the paper's setup: f(R) = C / R^s.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, universe + 1, dtype=np.float64)
+    pmf = ranks ** (-skew)
+    pmf /= pmf.sum()
+    return rng.choice(universe, size=n, p=pmf).astype(np.int64)
+
+
+def binomial_insertions(
+    n: int, universe: int, p: float = 0.5, seed: int = 0
+) -> np.ndarray:
+    """n insertions drawn Binomial(universe - 1, p) — mild skew around the mode."""
+    rng = np.random.default_rng(seed)
+    return rng.binomial(universe - 1, p, size=n).astype(np.int64)
+
+
+def uniform_insertions(n: int, universe: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, universe, size=n, dtype=np.int64)
+
+
+def caida_like_insertions(n: int, universe: int = 1 << 16, seed: int = 0) -> np.ndarray:
+    """Surrogate for the CAIDA 2015 destination-IP trace.
+
+    Real trace is not redistributable offline; published analyses fit a
+    heavy-tailed rank-frequency curve close to Zipf(1.1-1.3) with a small
+    set of dominant flows plus a long uniform-ish tail. We synthesize a
+    90/10 mixture: Zipf(1.2) + uniform background over the same universe.
+    """
+    rng = np.random.default_rng(seed)
+    n_zipf = int(n * 0.9)
+    body = zipf_insertions(n_zipf, universe, skew=1.2, seed=seed)
+    tail = rng.integers(0, universe, size=n - n_zipf, dtype=np.int64)
+    out = np.concatenate([body, tail])
+    rng.shuffle(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Deletion patterns (paper §5.2)
+# ---------------------------------------------------------------------------
+
+def deletions_random(
+    insertions: np.ndarray, num_deletions: int, seed: int = 0
+) -> np.ndarray:
+    """Deletions chosen uniformly from the insertions (paper 'shuffled')."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(insertions), size=num_deletions, replace=False)
+    return insertions[idx]
+
+
+def deletions_targeted(insertions: np.ndarray, num_deletions: int) -> np.ndarray:
+    """Delete the least-frequent items first (paper 'targeted')."""
+    freq = Counter(insertions.tolist())
+    order = sorted(freq.items(), key=lambda kv: kv[1])  # least frequent first
+    out = []
+    for item, cnt in order:
+        take = min(cnt, num_deletions - len(out))
+        out.extend([item] * take)
+        if len(out) >= num_deletions:
+            break
+    return np.asarray(out, dtype=np.int64)
+
+
+def make_stream(
+    insertions: np.ndarray,
+    deletions: np.ndarray,
+    pattern: str = "inserts_first",
+    seed: int = 0,
+) -> np.ndarray:
+    """Build an (N, 2) array of (item, sign) updates.
+
+    pattern:
+      - 'inserts_first': all insertions then all deletions (the paper's
+        adversarial, locality-minimizing default).
+      - 'interleaved': deletions interleaved randomly after a warmup prefix
+        long enough that every deletion is strict (item already inserted).
+    """
+    ins = np.stack([insertions, np.ones_like(insertions)], axis=1)
+    dls = np.stack([deletions, -np.ones_like(deletions)], axis=1)
+    if pattern == "inserts_first":
+        return np.concatenate([ins, dls], axis=0)
+    if pattern == "interleaved":
+        # Place each deletion uniformly after its matching insertion index.
+        rng = np.random.default_rng(seed)
+        # Match deletions to insertion positions (first occurrence scan).
+        pos_of = {}
+        remaining = Counter(deletions.tolist())
+        matched_pos = []
+        matched_item = []
+        for i, item in enumerate(insertions.tolist()):
+            if remaining.get(item, 0) > 0:
+                remaining[item] -= 1
+                matched_pos.append(i)
+                matched_item.append(item)
+        if sum(remaining.values()) > 0:
+            raise ValueError("deletions not a sub-multiset of insertions")
+        events = [(i, insertions[i], 1) for i in range(len(insertions))]
+        for p, item in zip(matched_pos, matched_item):
+            # uniform position strictly after the insertion
+            t = rng.uniform(p + 0.5, len(insertions) + 0.5)
+            events.append((t, item, -1))
+        events.sort(key=lambda e: e[0])
+        return np.asarray([(it, sg) for _, it, sg in events], dtype=np.int64)
+    raise ValueError(f"unknown pattern {pattern!r}")
+
+
+def bounded_stream(
+    distribution: str,
+    n_insert: int,
+    delete_ratio: float,
+    universe: int = 1 << 16,
+    skew: float = 1.0,
+    delete_pattern: str = "random",
+    order: str = "inserts_first",
+    seed: int = 0,
+) -> np.ndarray:
+    """One-call stream factory used by benchmarks and tests."""
+    if distribution == "zipf":
+        ins = zipf_insertions(n_insert, universe, skew=skew, seed=seed)
+    elif distribution == "binomial":
+        ins = binomial_insertions(n_insert, universe, seed=seed)
+    elif distribution == "uniform":
+        ins = uniform_insertions(n_insert, universe, seed=seed)
+    elif distribution == "caida":
+        ins = caida_like_insertions(n_insert, universe, seed=seed)
+    else:
+        raise ValueError(f"unknown distribution {distribution!r}")
+    n_del = int(delete_ratio * n_insert)  # floor keeps D <= (1-1/alpha)I exactly
+    if delete_pattern == "random":
+        dels = deletions_random(ins, n_del, seed=seed + 1)
+    elif delete_pattern == "targeted":
+        dels = deletions_targeted(ins, n_del)
+    else:
+        raise ValueError(f"unknown delete_pattern {delete_pattern!r}")
+    return make_stream(ins, dels, pattern=order, seed=seed + 2)

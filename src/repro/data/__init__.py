@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic sharded synthetic token streams with
+checkpointable cursors + SS± token statistics integration."""
+from .pipeline import DataConfig, TokenPipeline
+from .caida_like import caida_like_tokens
+
+__all__ = ["DataConfig", "TokenPipeline", "caida_like_tokens"]

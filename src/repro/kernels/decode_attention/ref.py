@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the decode_attention kernel.
+
+Semantics = serve.decode._gqa_attend: one query token per sequence
+against a (possibly partially valid) KV cache, returning both the
+context and the per-slot attention mass — the quantity the SS±
+heavy-hitter KV cache ingests (serve/h2o.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e9
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q: (B,KV,G,hd); caches: (B,C,KV,hd); valid: (B,C) bool.
+
+    Returns (ctx (B,KV,G,hd) in v dtype, mass (B,C) f32)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum(
+        "bkgh,btkh->bkgt", q.astype(F32), k_cache.astype(F32)
+    ) / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    any_valid = valid.any(axis=1)[:, None, None, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    mass = probs.sum(axis=(1, 2))
+    ctx = jnp.einsum("bkgt,btkh->bkgh", probs.astype(v_cache.dtype), v_cache)
+    return ctx, mass

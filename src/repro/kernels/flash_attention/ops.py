@@ -1,0 +1,56 @@
+"""Public jit'd wrapper: model-layout in, kernel-layout inside.
+
+Takes (B, S, H, hd) / (B, T, KV, hd) exactly like models.layers.attention
+produces, folds heads into the grid batch, pads hd to the 128-lane width,
+and dispatches to the Pallas kernel (interpret mode on CPU, compiled on
+TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+LANES = 128
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bkv", "interpret")
+)
+def flash_attention(
+    q: jax.Array,             # (B, S, H, hd)
+    k: jax.Array,             # (B, T, KV, hd)
+    v: jax.Array,             # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    pad = (-hd) % LANES
+    if pad:
+        zq = [(0, 0)] * 3 + [(0, pad)]
+        q = jnp.pad(q, zq)
+        k = jnp.pad(k, zq)
+        v = jnp.pad(v, zq)
+    hdp = hd + pad
+
+    # fold heads into the grid batch: q -> (B*H, S, hdp), kv -> (B*KV, T, hdp)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hdp)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hdp)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hdp)
+
+    of = flash_attention_kernel(
+        qf, kf, vf, group=G, causal=causal, window=window,
+        bq=bq, bkv=bkv, scale=1.0 / (hd ** 0.5), interpret=interpret,
+    )
+    out = of.reshape(B, H, S, hdp).transpose(0, 2, 1, 3)
+    return out[..., :hd]

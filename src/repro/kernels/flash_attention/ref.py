@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Semantics: GQA causal attention with optional sliding window, computed
+with a full (S, T) score matrix in f32. This is the reference the kernel
+is swept against (tests/test_kernel_flash_attention.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax.nn
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,           # (B, S, H, hd)
+    k: jnp.ndarray,           # (B, T, KV, hd)
+    v: jnp.ndarray,           # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = unwindowed
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None] + (T - S)  # align ends (prefill: T == S)
+    kpos = jnp.arange(T)[None, :]
+    allowed = jnp.ones((S, T), bool)
+    if causal:
+        allowed &= kpos <= qpos
+    if window:
+        allowed &= kpos > qpos - window
+    scores = jnp.where(allowed[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

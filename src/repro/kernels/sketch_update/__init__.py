@@ -1,0 +1,3 @@
+from .ops import sketch_block_update
+
+__all__ = ["sketch_block_update"]

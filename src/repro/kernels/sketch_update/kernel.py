@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: SpaceSaving± block update over a VMEM counter store.
+
+TPU adaptation of the paper's §3.6 low-latency structure (see DESIGN.md §3):
+the (ids, counts, errors) arrays live in VMEM laid out (R, 128) —
+rows × lanes — and minCount / maxError are vectorized argmin/argmax over
+all k = R*128 counters instead of heap operations. The whole block of B
+updates is applied in one kernel launch: one HBM round-trip for the state
+per *block*, not per update.
+
+The update recurrence is inherently sequential (each update sees the
+previous state), so the grid is a single program and the parallelism is
+the k-wide lane dimension — exactly the trade the paper makes (heap ->
+stream-summary list) pushed one step further (list -> dense SIMD store).
+
+Weights are signed: w > 0 weighted insert, w < 0 weighted delete
+(variant: 1 = Lazy SS± Alg 3 / 2 = SS± Alg 4), w = 0 no-op (padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+_INT_MAX = 2**31 - 1  # python ints: pallas kernels must not close over arrays
+EMPTY = -1
+
+
+def _apply_one(ids, counts, errors, item, w, variant: int):
+    """Branchless weighted SpaceSaving± update on (R,128) arrays."""
+    # ---- insert path (w > 0) ------------------------------------------
+    wi = jnp.maximum(w, 0)
+    eq = ids == item
+    monitored = eq.any()
+    # flat argmin/argmax over the 2D store (row-major == 1D semantics)
+    flat_eq = eq.reshape(-1)
+    slot_mon = jnp.argmax(flat_eq)
+
+    empty = ids == EMPTY
+    has_empty = empty.any()
+    slot_empty = jnp.argmax(empty.reshape(-1))
+
+    cnt_for_min = jnp.where(empty, _INT_MAX, counts)
+    jmin = jnp.argmin(cnt_for_min.reshape(-1))
+    min_count = cnt_for_min.reshape(-1)[jmin]
+
+    sel_i = jnp.where(monitored, slot_mon, jnp.where(has_empty, slot_empty, jmin))
+    cnt_mon = counts.reshape(-1)[slot_mon]
+    err_mon = errors.reshape(-1)[slot_mon]
+    new_cnt_i = jnp.where(monitored, cnt_mon + wi, jnp.where(has_empty, wi, min_count + wi))
+    new_err_i = jnp.where(monitored, err_mon, jnp.where(has_empty, 0, min_count))
+
+    ids_i = ids.reshape(-1).at[sel_i].set(item).reshape(ids.shape)
+    counts_i = counts.reshape(-1).at[sel_i].set(new_cnt_i).reshape(counts.shape)
+    errors_i = errors.reshape(-1).at[sel_i].set(new_err_i).reshape(errors.shape)
+
+    # ---- delete path (w < 0) ------------------------------------------
+    wd = jnp.maximum(-w, 0)
+    cnt_d = counts.reshape(-1).at[slot_mon].add(jnp.where(monitored, -wd, 0)).reshape(counts.shape)
+
+    if variant == 1:  # Lazy: ignore unmonitored deletions
+        counts_d, errors_d = cnt_d, errors
+    else:  # SS±: spread over max-error items
+        def cond(carry):
+            rem, _, errs = carry
+            return (rem > 0) & (errs.max() > 0)
+
+        def body(carry):
+            rem, cnts, errs = carry
+            jerr = jnp.argmax(errs.reshape(-1))
+            max_err = errs.reshape(-1)[jerr]
+            d = jnp.minimum(rem, max_err)
+            cnts = cnts.reshape(-1).at[jerr].add(-d).reshape(cnts.shape)
+            errs = errs.reshape(-1).at[jerr].add(-d).reshape(errs.shape)
+            return rem - d, cnts, errs
+
+        rem0 = jnp.where(monitored, 0, wd)
+        _, counts_d, errors_d = jax.lax.while_loop(cond, body, (rem0, cnt_d, errors))
+
+    # ---- select by sign -------------------------------------------------
+    is_ins = w > 0
+    is_del = w < 0
+    ids_out = jnp.where(is_ins, ids_i, ids)
+    counts_out = jnp.where(is_ins, counts_i, jnp.where(is_del, counts_d, counts))
+    errors_out = jnp.where(is_ins, errors_i, jnp.where(is_del, errors_d, errors))
+    return ids_out, counts_out, errors_out
+
+
+def _kernel(items_ref, weights_ref, ids_ref, counts_ref, errors_ref,
+            ids_out, counts_out, errors_out, *, variant: int, block: int):
+    # Load the counter store into registers/VMEM once per block.
+    def body(i, carry):
+        ids, counts, errors = carry
+        item = items_ref[i]
+        w = weights_ref[i]
+        return _apply_one(ids, counts, errors, item, w, variant)
+
+    ids, counts, errors = jax.lax.fori_loop(
+        0, block, body, (ids_ref[...], counts_ref[...], errors_ref[...])
+    )
+    ids_out[...] = ids
+    counts_out[...] = counts
+    errors_out[...] = errors
+
+
+def sketch_update_kernel(
+    ids: jax.Array,      # (R, 128) int32
+    counts: jax.Array,   # (R, 128) int32
+    errors: jax.Array,   # (R, 128) int32
+    items: jax.Array,    # (B,) int32
+    weights: jax.Array,  # (B,) int32 signed
+    *,
+    variant: int = 2,
+    interpret: bool = True,
+):
+    assert ids.ndim == 2 and ids.shape[1] == LANES, ids.shape
+    B = items.shape[0]
+    R = ids.shape[0]
+    out_shape = [jax.ShapeDtypeStruct((R, LANES), jnp.int32)] * 3
+    kern = functools.partial(_kernel, variant=variant, block=B)
+    state_spec = pl.BlockSpec((R, LANES), lambda: (0, 0))
+    upd_spec = pl.BlockSpec((B,), lambda: (0,))
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        in_specs=[upd_spec, upd_spec, state_spec, state_spec, state_spec],
+        out_specs=[state_spec] * 3,
+        input_output_aliases={2: 0, 3: 1, 4: 2},  # state updated in place
+        interpret=interpret,
+    )(items, weights, ids, counts, errors)

@@ -1,0 +1,57 @@
+"""Public jit'd wrapper around the sketch_update Pallas kernel.
+
+Handles layout (1D k -> (R,128) VMEM tiles), capacity padding with
+blocked sentinel slots, and exposes the same SketchState interface as
+``repro.sketch.jax_sketch``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.jax_sketch import SketchState
+from .kernel import LANES, sketch_update_kernel
+
+_INT_MAX = jnp.int32(2**31 - 1)
+_BLOCKED = jnp.int32(-2)  # padded slots: never empty, never min, never max-err
+
+
+def _pad_state(state: SketchState):
+    k = state.ids.shape[0]
+    rows = -(-k // LANES)
+    pad = rows * LANES - k
+    if pad == 0:
+        return state, k
+    return SketchState(
+        ids=jnp.concatenate([state.ids, jnp.full((pad,), _BLOCKED, jnp.int32)]),
+        counts=jnp.concatenate([state.counts, jnp.full((pad,), _INT_MAX, jnp.int32)]),
+        errors=jnp.concatenate([state.errors, jnp.full((pad,), -1, jnp.int32)]),
+    ), k
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def sketch_block_update(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = 2,
+    interpret: bool = True,
+) -> SketchState:
+    """Apply a block of signed weighted updates via the Pallas kernel."""
+    padded, k = _pad_state(state)
+    rows = padded.ids.shape[0] // LANES
+    ids2 = padded.ids.reshape(rows, LANES)
+    cnt2 = padded.counts.reshape(rows, LANES)
+    err2 = padded.errors.reshape(rows, LANES)
+    ids2, cnt2, err2 = sketch_update_kernel(
+        ids2, cnt2, err2,
+        items.astype(jnp.int32), weights.astype(jnp.int32),
+        variant=variant, interpret=interpret,
+    )
+    return SketchState(
+        ids=ids2.reshape(-1)[:k],
+        counts=cnt2.reshape(-1)[:k],
+        errors=err2.reshape(-1)[:k],
+    )

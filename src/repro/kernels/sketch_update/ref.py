@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the sketch_update kernel.
+
+Exactly the same semantics as the kernel (flat argmin/argmax over the
+dense store, weighted inserts/deletes, variant 1=lazy / 2=SS±) expressed
+as a lax.scan over updates — no pallas involved. Used by the shape/dtype
+sweep tests and as the numerically-trusted implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.jax_sketch import SketchState, apply_update
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def sketch_update_ref(
+    ids: jax.Array,      # (k,) int32
+    counts: jax.Array,   # (k,) int32
+    errors: jax.Array,   # (k,) int32
+    items: jax.Array,    # (B,) int32
+    weights: jax.Array,  # (B,) int32 signed
+    variant: int = 2,
+):
+    state = SketchState(ids, counts, errors)
+
+    def step(st, xw):
+        item, w = xw
+        new = apply_update(st, item, w, variant)
+        skip = w == 0
+        return jax.tree.map(lambda a, b: jnp.where(skip, a, b), st, new), None
+
+    state, _ = jax.lax.scan(
+        step, state, (items.astype(jnp.int32), weights.astype(jnp.int32))
+    )
+    return state.ids, state.counts, state.errors

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   Placeholder host devices let jax.make_mesh build the production mesh;
+#   nothing is ever allocated (ShapeDtypeStruct in, AOT compile only).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell and extract the roofline terms from the compiled artifact.
+
+Per cell this produces experiments/dryrun/<arch>__<shape>__<mesh>.json:
+  - compile wall time, per-device memory_analysis
+  - cost_analysis FLOPs / bytes (raw, and scan-corrected via the P=1/P=2
+    depth probes — XLA counts while bodies once)
+  - collective bytes per kind (trip-corrected HLO parse)
+  - the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio
+and gzips the optimized HLO for offline inspection (hillclimbing reads
+these).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, supported_cells
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.parallel.sharding import (
+    act_specs,
+    default_rules,
+    param_specs,
+    use_mesh,
+)
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.model import HW, model_flops, roofline_terms
+from repro.serve.decode import build_serve_step
+from repro.serve.kv_cache import cache_spec
+from repro.serve.prefill import build_prefill_step
+from repro.train.step import abstract_state, build_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+HLO_DIR = Path(__file__).resolve().parents[3] / "experiments" / "hlo"
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return model.batch_spec(B, S)
+    if shape.kind == "prefill":
+        spec = model.batch_spec(B, S)
+        spec.pop("labels", None)
+        return spec
+    # decode: one token against a cache of S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_axes(spec):
+    """Logical axes for a batch spec dict."""
+    table = {
+        "tokens": "batch,seq",
+        "labels": "batch,seq",
+        "mask": "batch,seq",
+        "vision": "batch,seq,embed",
+        "frames": "batch,seq,embed",
+    }
+    return {k: table[k] for k in spec}
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+
+def _params_only_abstract(cfg):
+    model = build_model(cfg)
+    captured = {}
+
+    def f(k):
+        p, a = model.init(k)
+        captured["axes"] = a
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, captured["axes"]
+
+
+def lower_cell(cfg, shape, mesh, rules, train_kw=None):
+    """Returns (lowered, compiled) for the cell's step fn."""
+    train_kw = dict(train_kw or {})
+    zero1 = train_kw.pop("zero1", False)
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            state_sds, state_axes_tree = abstract_state(cfg)
+            step = build_train_step(cfg, **train_kw)
+            state_spec = param_specs(state_sds, state_axes_tree)
+            if zero1:
+                # ZeRO-1: params TP-only (no per-layer FSDP gathers);
+                # ONLY the optimizer state (master/m/v) shards over data.
+                # GSPMD then reduce-scatters grads into the update and
+                # all-gathers new params ONCE per step instead of per
+                # layer per microbatch. §Perf iteration 6.
+                from repro.train.step import TrainState
+                from repro.optim.adamw import AdamWState
+                multi = "pod" in mesh.axis_names
+                tp_rules = default_rules(multi_pod=multi, fsdp=False)
+                with use_mesh(mesh, tp_rules):
+                    p_tp = param_specs(state_sds.params, state_axes_tree.params)
+                state_spec = TrainState(
+                    params=p_tp,
+                    opt=state_spec.opt,
+                )
+            bspec = input_specs(cfg, shape)
+            bshard = act_specs(bspec, batch_axes(bspec))
+            fn = jax.jit(
+                step,
+                in_shardings=(state_spec, bshard),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state_sds, bspec)
+        elif shape.kind == "prefill":
+            params_sds, axes = _params_only_abstract(cfg)
+            step = build_prefill_step(cfg, context=shape.seq_len, with_cache=True)
+            pspec = param_specs(params_sds, axes)
+            bspec = input_specs(cfg, shape)
+            bshard = act_specs(bspec, batch_axes(bspec))
+            fn = jax.jit(step, in_shardings=(pspec, bshard))
+            lowered = fn.lower(params_sds, bspec)
+        else:  # decode
+            params_sds, axes = _params_only_abstract(cfg)
+            step = build_serve_step(cfg, context=shape.seq_len)
+            pspec = param_specs(params_sds, axes)
+            csds, caxes = cache_spec(cfg, shape.global_batch, shape.seq_len)
+            cshard = act_specs(csds, caxes)
+            tok = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+            tshard = act_specs(tok, {"tokens": "batch,"})
+            fn = jax.jit(
+                step,
+                in_shardings=(pspec, cshard, tshard["tokens"]),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params_sds, csds, tok["tokens"])
+        compiled = lowered.compile()
+        return lowered, compiled
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def probe_cfg(cfg, n_periods: int):
+    """Reduced-depth UNROLLED probe config: exactly n_periods periods, no
+    remainder, scan replaced by a python loop (XLA cost analysis counts
+    while bodies once — unrolling makes F(2)-F(1) the exact per-period
+    cost for every metric, including collectives)."""
+    plen = len(cfg.layer_pattern()[0])
+    kw = {"num_layers": plen * n_periods, "unroll_scan": True}
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = n_periods
+    return dataclasses.replace(cfg, name=f"{cfg.name}_p{n_periods}", **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, do_probe: bool = True,
+             train_kw=None, suffix: str = "", serve_fsdp: bool = False):
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    rules = default_rules(
+        multi_pod=multi, seq_shard=(shape.name == "long_500k")
+    )
+
+    # Serving policy (§Perf iteration: gemma3 long_500k): params are
+    # TP-only for inference — FSDP's per-layer all-gather of the weights
+    # is an optimizer-state-driven TRAINING trade and was the measured
+    # 0.036s/step collective floor of batch-1 decode. fsdp=True restores
+    # the old behavior for comparison (--serve-fsdp).
+    if shape.kind != "train" and not serve_fsdp:
+        rules = default_rules(
+            multi_pod=multi, seq_shard=(shape.name == "long_500k"), fsdp=False
+        )
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "ok": False, "train_kw": train_kw or {},
+    }
+    t0 = time.time()
+    try:
+        lowered, compiled = lower_cell(cfg, shape, mesh, rules, train_kw)
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["ok"] = True
+    rec["memory"] = _memory_analysis_dict(compiled)
+    cost = _cost(compiled)
+    rec["cost_raw"] = {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+    }
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, scan_corrected=True)
+    rec["collectives"] = coll
+
+    HLO_DIR.mkdir(parents=True, exist_ok=True)
+    hlo_name = f"{arch}__{shape_name}__{mesh_kind}{suffix}.hlo.gz"
+    with gzip.open(HLO_DIR / hlo_name, "wt") as f:
+        f.write(hlo)
+
+    # scan-correction probes: unrolled P=1 / P=2 depth sweeps isolate the
+    # per-period cost of every metric (flops, bytes, collective bytes).
+    # Probes run on the single-pod mesh only; the multi-pod cell reuses the
+    # single-pod corrected/raw ratio (body-vs-outside proportions are mesh-
+    # scale invariant to first order).
+    if do_probe and mesh_kind == "multi":
+        single = OUT_DIR / f"{arch}__{shape_name}__single.json"
+        if single.exists():
+            s = json.loads(single.read_text())
+            if s.get("cost_corrected") and s.get("cost_raw"):
+                ratios = {
+                    "flops": s["cost_corrected"]["flops"] / max(s["cost_raw"]["flops"], 1.0),
+                    "bytes": s["cost_corrected"]["bytes"] / max(s["cost_raw"]["bytes"], 1.0),
+                    "collective": s["cost_corrected"]["collective"]
+                    / max(float(s["collectives"]["total"]), 1.0),
+                }
+                rec["cost_corrected"] = {
+                    "flops": rec["cost_raw"]["flops"] * ratios["flops"],
+                    "bytes": rec["cost_raw"]["bytes"] * ratios["bytes"],
+                    "collective": float(coll["total"]) * ratios["collective"],
+                }
+                rec["correction_source"] = "single-pod ratio"
+                do_probe = False
+    if do_probe:
+        try:
+            corr = {}
+            for P in (1, 2):
+                pc = probe_cfg(cfg, P)
+                _, pcomp = lower_cell(pc, shape, mesh, rules, train_kw)
+                c = _cost(pcomp)
+                pcoll = collective_bytes(pcomp.as_text(), scan_corrected=False)
+                corr[P] = {
+                    "flops": c.get("flops", 0.0),
+                    "bytes": c.get("bytes accessed", 0.0),
+                    "collective": float(pcoll["total"]),
+                }
+            plen = max(len(cfg.layer_pattern()[0]), 1)
+            n_periods = cfg.layer_pattern()[1]
+            n_rem = len(cfg.layer_pattern()[2])
+            keys = ("flops", "bytes", "collective")
+            per = {k: corr[2][k] - corr[1][k] for k in keys}
+            rec["probe"] = {"p1": corr[1], "p2": corr[2], "per_period": per,
+                            "n_periods": n_periods, "n_remainder": n_rem}
+            # remainder layers approximated as per_period/plen each
+            rec["cost_corrected"] = {
+                k: corr[1][k] + per[k] * (n_periods - 1) + (per[k] / plen) * n_rem
+                for k in keys
+            }
+        except Exception as e:
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    corrected = rec.get("cost_corrected")
+    flops_dev = corrected["flops"] if corrected else rec["cost_raw"]["flops"]
+    bytes_dev = corrected["bytes"] if corrected else rec["cost_raw"]["bytes"]
+    coll_dev = corrected["collective"] if corrected else float(coll["total"])
+    terms = roofline_terms(
+        hlo_flops_global=flops_dev * chips,
+        hlo_bytes_global=bytes_dev * chips,
+        collective_bytes_global=coll_dev * chips,
+        chips=chips,
+        cfg=cfg,
+        shape=shape,
+        microbatches=(train_kw or {}).get("microbatches", 1),
+        remat=(train_kw or {}).get("remat", True),
+    )
+    rec["roofline"] = terms.to_dict()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    # §Perf hillclimb knobs (train cells only)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="params TP-only; optimizer state FSDP (ZeRO-1)")
+    ap.add_argument("--suffix", default="", help="artifact name suffix")
+    args = ap.parse_args()
+    train_kw = {}
+    if args.microbatches != 1:
+        train_kw["microbatches"] = args.microbatches
+    if args.no_remat:
+        train_kw["remat"] = False
+    if args.zero1:
+        train_kw["zero1"] = True
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = configs.get(arch)
+        shapes = (
+            [SHAPES[args.shape]] if args.shape else supported_cells(arch)
+        )
+        for shape in shapes:
+            for mk in meshes:
+                name = f"{arch}__{shape.name}__{mk}{args.suffix}"
+                t0 = time.time()
+                rec = run_cell(arch, shape.name, mk, do_probe=not args.no_probe,
+                               train_kw=train_kw or None, suffix=args.suffix)
+                (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+                status = "OK " if rec["ok"] else "FAIL"
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                mfu = rec.get("roofline", {}).get("mfu", 0.0)
+                print(
+                    f"[{status}] {name:55s} {time.time()-t0:7.1f}s "
+                    f"dom={dom:10s} mfu={mfu:.3f}",
+                    flush=True,
+                )
+                if not rec["ok"]:
+                    print("       " + rec.get("error", ""), flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

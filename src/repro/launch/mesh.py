@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax call, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ("data", "model") / ("pod", "data", "model"). The pod axis is
+    the slow (DCI) dimension; batch shards over (pod, data), params TP
+    over model and FSDP over data (see parallel.sharding.default_rules).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests)."""
+    if n_devices <= 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    d = n_devices // 2
+    return jax.make_mesh((d, 2), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Smoke scale (CPU, 1 device):
+    python -m repro.launch.train --arch qwen3_0_6b --smoke --steps 50
+
+Production posture (single-controller pjit; on real hardware run one
+process per host with jax.distributed.initialize() — the flag below
+emulates the mesh on CPU for integration testing):
+    python -m repro.launch.train --arch qwen3_0_6b --emulate-mesh 8 \
+        --steps 10 --data-axis 4 --model-axis 2
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--emulate-mesh", type=int, default=0,
+                    help="force N host-platform devices (set BEFORE jax import)")
+    ap.add_argument("--data-axis", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.emulate_mesh:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.emulate_mesh}"
+        )
+
+    import jax
+    from repro import configs
+    from repro.data import DataConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.schedules import cosine_schedule
+    from repro.parallel.sharding import default_rules
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    mesh = rules = None
+    if args.emulate_mesh:
+        d = args.data_axis or args.emulate_mesh // 2
+        m = args.model_axis or 2
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        rules = default_rules()
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        log_every=args.log_every,
+    )
+    opt_cfg = AdamWConfig(lr=cosine_schedule(args.lr, args.warmup, args.steps))
+    trainer = Trainer(cfg, data_cfg, tcfg, opt_cfg, mesh=mesh, rules=rules)
+    trainer.install_signal_handlers()
+    if args.resume and trainer.try_resume():
+        print(f"resumed from step {trainer.step_num}")
+    out = trainer.run()
+    for rec in trainer.metrics_log:
+        print(rec)
+    print("done:", out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,287 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (full / sliding
+window / banded-local), decode attention with per-slot attention mass
+(feeds the SS± KV-eviction path), and the MLP flavors of the assigned
+archs (SwiGLU, GeLU, squared-ReLU, biased QKV, qk-norm).
+
+All functions are pure; params are nested dicts of jax arrays with a
+mirrored "axes" tree of logical dim names (see parallel.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import shard
+
+F32 = jnp.float32
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, hd); positions: (seq,) or broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions.astype(F32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # add head dim
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(x, p, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _softmax_lowmem(scores, mask):
+    """Masked softmax with bf16 S^2 residency.
+
+    The MXU accumulates the score dot in f32 internally but writes bf16
+    (preferred_element_type) — every S^2-sized tensor in the chain stays
+    bf16, halving the dominant HBM term of full-attention layers (§Perf
+    gemma3 iteration). Row max/sum reductions are exact/f32. This is the
+    same HBM dtype profile as the Pallas flash kernel (kernels/
+    flash_attention), which keeps f32 only in VMEM scratch.
+    """
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.asarray(NEG_INF, scores.dtype))
+    m = jax.lax.stop_gradient(scores.max(axis=-1, keepdims=True))
+    p = jnp.exp((scores - m))                       # bf16 S^2
+    denom = p.astype(F32).sum(axis=-1, keepdims=True)
+    return (p / denom.astype(p.dtype))
+
+
+def _causal_full(q, k, v, causal: bool):
+    """q: (B,S,KV,G,hd)  k/v: (B,T,KV,hd) -> (B,S,KV,G,hd)."""
+    S, T = q.shape[1], k.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    # S^2 residency follows the input dtype: bf16 models keep every
+    # S^2 tensor bf16 (the flash kernel's HBM profile); f32 stays f32.
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", (q * scale).astype(q.dtype), k,
+        preferred_element_type=q.dtype,
+    )
+    mask = None
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+    probs = _softmax_lowmem(scores, mask).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def _banded_local(q, k, v, window: int):
+    """Sliding-window causal attention via w-sized blocks attending to the
+    previous + current key block: O(S*w) instead of O(S^2). Query i sees
+    keys j with j <= i and j > i - window."""
+    B, S, KV, G, hd = q.shape
+    w = window
+    assert S % w == 0, f"seq {S} must be a multiple of window {w}"
+    nb = S // w
+    qb = q.reshape(B, nb, w, KV, G, hd)
+    kb = k.reshape(B, nb, w, KV, hd)
+    vb = v.reshape(B, nb, w, KV, hd)
+    # previous block (zero-padded for block 0)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k_ext = jnp.concatenate([kprev, kb], axis=2)  # (B,nb,2w,KV,hd)
+    v_ext = jnp.concatenate([vprev, vb], axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum(
+        "bnqkgh,bntkh->bnkgqt", (qb * scale).astype(qb.dtype), k_ext,
+        preferred_element_type=qb.dtype,
+    )
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :]
+    allowed = (kpos - w <= qpos) & (kpos > qpos)  # causal + window band
+    blk = jnp.arange(nb)[:, None, None]
+    allowed = allowed[None] & ((blk > 0) | (kpos >= w))  # block 0: no prev
+    probs = _softmax_lowmem(scores, allowed[None, :, None, None]).astype(q.dtype)
+    out = jnp.einsum("bnkgqt,bntkh->bnqkgh", probs, v_ext)
+    return out.reshape(B, S, KV, G, hd)
+
+
+def attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,                      # full | swa | local | global | encoder
+    positions: jax.Array,
+    cross_states: Optional[jax.Array] = None,
+    return_kv: bool = False,
+):
+    """Training/prefill attention. cross_states: encoder hidden states
+    (B, F, D) for whisper cross-attention — K/V are projected from them
+    with this block's wk/wv and the attention is non-causal.
+
+    With ``return_kv`` also returns the (rope'd) per-layer K/V — the
+    prefill path collects these into the decode KV cache."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    if cross_states is None:
+        q, kk, vv = _project_qkv(x, p, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        kk = rope(kk, positions, cfg.rope_theta)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        kk = jnp.einsum("bsd,dhk->bshk", cross_states, p["wk"])
+        vv = jnp.einsum("bsd,dhk->bshk", cross_states, p["wv"])
+    q = shard(q, "batch", "seq", "heads", None)
+    kk = shard(kk, "batch", "seq", "kv", None)
+    q5 = q.reshape(B, S, KV, G, hd)
+    if kind in ("swa", "local") and cross_states is None and S > cfg.window:
+        out = _banded_local(q5, kk, vv, cfg.window)
+    else:
+        causal = kind != "encoder" and cross_states is None
+        out = _causal_full(q5, kk, vv, causal)
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    out = shard(out, "batch", "seq", "embed")
+    if return_kv:
+        return out, (kk, vv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a KV cache) + attention mass
+# ---------------------------------------------------------------------------
+
+def attention_decode(
+    x: jax.Array,                   # (B, 1, D)
+    p: dict,
+    cfg: ModelConfig,
+    cache_k: jax.Array,             # (B, C, KV, hd)  — RoPE already applied
+    cache_v: jax.Array,             # (B, C, KV, hd)
+    valid: jax.Array,               # (B, C) bool
+    position: jax.Array,            # (B,) current absolute position
+) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out (B,1,D), mass (B,C) f32, (k_new, v_new)).
+
+    ``mass`` is the softmax probability mass each cache slot received,
+    summed over heads — the quantity the SS± KV-eviction sketch ingests.
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    q, k, v = _project_qkv(x, p, cfg)
+    q = rope(q, position[:, None], cfg.rope_theta)
+    k = rope(k, position[:, None], cfg.rope_theta)
+    q4 = q[:, 0].reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", q4, cache_k, preferred_element_type=F32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    mass = probs.sum(axis=(1, 2))  # (B, C) f32
+    out = jnp.einsum("bkgt,btkh->bkgh", probs.astype(x.dtype), cache_v)
+    out = out.reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, mass, (k[:, 0], v[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_gated:
+        h = _act(jnp.einsum("bsd,df->bsf", x, p["wi0"]), cfg.act)
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wi1"])
+    else:
+        h = _act(jnp.einsum("bsd,df->bsf", x, p["wi0"]), cfg.act)
+    h = shard(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Param init helpers (params tree + logical-axes tree, same structure)
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "wq": _norm_init(ks[0], (D, H, hd), s, dtype),
+        "wk": _norm_init(ks[1], (D, KV, hd), s, dtype),
+        "wv": _norm_init(ks[2], (D, KV, hd), s, dtype),
+        "wo": _norm_init(ks[3], (H * hd, D), s / math.sqrt(2 * cfg.num_layers), dtype),
+    }
+    a = {
+        "wq": "embed,heads,head_dim",
+        "wk": "embed,kv,head_dim",
+        "wv": "embed,kv,head_dim",
+        "wo": "heads,embed",  # fused (H*hd) dim shards like heads
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+        a["bq"], a["bk"], a["bv"] = "heads,head_dim", "kv,head_dim", "kv,head_dim"
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+        a["q_norm"] = a["k_norm"] = "head_dim"
+    return p, a
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 0.02
+    p = {
+        "wi0": _norm_init(ks[0], (D, F), s, dtype),
+        "wo": _norm_init(ks[2], (F, D), s / math.sqrt(2 * cfg.num_layers), dtype),
+    }
+    a = {"wi0": "embed,ff", "wo": "ff,embed"}
+    if cfg.mlp_gated:
+        p["wi1"] = _norm_init(ks[1], (D, F), s, dtype)
+        a["wi1"] = "embed,ff"
+    return p, a

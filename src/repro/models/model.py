@@ -1,0 +1,56 @@
+"""Model facade: build a (init / loss / forward) bundle from a ModelConfig."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable          # key -> (params, axes)
+    forward: Callable       # (params, tokens, vision=, frames=) -> (logits, aux)
+    loss: Callable          # (params, batch) -> (loss, aux)
+
+    def batch_spec(self, batch_size: int, seq_len: int):
+        """Abstract input batch (ShapeDtypeStructs) for this model/shape.
+
+        The modality frontends are stubs per the assignment: llava gets
+        precomputed patch embeddings, whisper precomputed frame embeddings.
+        """
+        cfg = self.cfg
+        text = seq_len - cfg.vision_tokens
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((batch_size, text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch_size, text), jnp.int32),
+        }
+        if cfg.vision_tokens:
+            spec["vision"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (batch_size, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+            )
+        return spec
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key, dtype=jnp.bfloat16):
+        return transformer.init_params(key, cfg, dtype)
+
+    def forward(params, tokens, vision=None, frames=None, remat=False):
+        return transformer.forward(
+            params, cfg, tokens, vision=vision, frames=frames, remat=remat
+        )
+
+    def loss(params, batch, remat=True):
+        return transformer.loss_fn(params, cfg, batch, remat=remat)
+
+    return Model(cfg=cfg, init=init, forward=forward, loss=loss)

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts FFN with capacity-based sort/gather dispatch.
+
+FLOPs scale with tokens×top_k×capacity_factor (not with num_experts):
+tokens are sorted by assigned expert, truncated at per-expert capacity C,
+scattered into an (E, C, D) buffer, processed by a batched expert matmul,
+and combined back weighted by router gates.
+
+Sharding adapts per arch through the divisibility rules (see
+parallel.sharding): olmoe (64e) shards the expert dim on "model" (pure
+EP — the buffer scatter becomes an all-to-all); mixtral (8e on a 16-way
+axis) falls back to TP on d_ff inside each expert. The SS± expert-load
+sketch consumes the dispatch counts (see repro.sketch.load_stats).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, _norm_init
+from repro.parallel.sharding import shard
+
+F32 = jnp.float32
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "router": _norm_init(ks[0], (D, E), s, F32),  # router kept f32
+        "wi0": _norm_init(ks[1], (E, D, F), s, dtype),
+        "wi1": _norm_init(ks[2], (E, D, F), s, dtype),
+        "wo": _norm_init(ks[3], (E, F, D), s / math.sqrt(2 * cfg.num_layers), dtype),
+    }
+    a = {
+        "router": "embed,experts",
+        "wi0": "experts,embed,ff",
+        "wi1": "experts,embed,ff",
+        "wo": "experts,ff,embed",
+    }
+    return p, a
+
+
+def _num_dispatch_groups(T: int) -> int:
+    """Dispatch-group count = DP shard count of the active mesh.
+
+    GShard-style local dispatch: every group routes its own tokens into
+    its own (E, C_local) buffer, so the sort / searchsorted / scatter /
+    combine all stay shard-local under GSPMD (the ops are batched over
+    the group dim, which is the sharded dim). A global dispatch instead
+    makes GSPMD all-reduce the (E*C, D) buffer per layer — measured 8TB
+    per device per step on mixtral train_4k (EXPERIMENTS.md §Perf it.2).
+    """
+    from repro.parallel.sharding import current_mesh, current_rules
+
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return 1
+    ax = rules.act.get("groups")
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n if (n > 1 and T % n == 0) else 1
+
+
+def moe_ffn(
+    x: jax.Array, p: dict, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), expert_counts (E,) int32).
+
+    Group-local capacity dispatch (see _num_dispatch_groups). Capacity is
+    enforced per group (standard GShard semantics). expert_counts is the
+    per-expert routed-token count — the stream the SS± load sketch ingests.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G = _num_dispatch_groups(T)
+    Tl = T // G
+    C = max(1, int(math.ceil(Tl * K * cfg.capacity_factor / E)))
+
+    xf = x.reshape(G, Tl, D)
+    xf = shard(xf, "groups", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                    # (G, Tl, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # flatten assignments and sort by expert id — per group (axis 1)
+    e_flat = expert.reshape(G, Tl * K)
+    g_flat = gate.reshape(G, Tl * K)
+    t_flat = jnp.tile(jnp.repeat(jnp.arange(Tl), K)[None], (G, 1))
+    order = jnp.argsort(e_flat, axis=1)
+    e_s = jnp.take_along_axis(e_flat, order, axis=1)
+    g_s = jnp.take_along_axis(g_flat, order, axis=1)
+    t_s = jnp.take_along_axis(t_flat, order, axis=1)
+
+    # position within each expert's run; drop beyond capacity
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_s)
+    pos = jnp.arange(Tl * K)[None] - jnp.take_along_axis(starts, e_s, axis=1)
+    keep = pos < C
+    dest = jnp.where(keep, e_s * C + pos, E * C)              # (G, Tl*K)
+
+    # dispatch: (G, E*C+1, D) buffer, group-batched expert matmul.
+    # All gathers/scatters are vmapped over the group dim: jnp's
+    # take_along_axis would broadcast indices to (G, Tl*K, D) u32 — a
+    # measured 69GB all-gather per device on mixtral (§Perf iteration 3);
+    # vmapped fancy indexing keeps indices (G, Tl*K).
+    picked = jax.vmap(lambda xg, tg: xg[tg])(xf, t_s)         # (G, Tl*K, D)
+    buf = jax.vmap(
+        lambda d, v: jnp.zeros((E * C + 1, D), x.dtype).at[d].set(v)
+    )(dest, picked)
+    xb = buf[:, : E * C].reshape(G, E, C, D)
+    xb = shard(xb, "groups", "experts", None, "embed")
+
+    h = _act(jnp.einsum("gecd,edf->gecf", xb, p["wi0"]), cfg.act)
+    h = h * jnp.einsum("gecd,edf->gecf", xb, p["wi1"])
+    h = shard(h, "groups", "experts", None, "ff")
+    yb = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    yb = shard(yb, "groups", "experts", None, "embed")
+
+    # combine: gather back to token order, weight by gate, scatter-add
+    yflat = jnp.concatenate(
+        [yb.reshape(G, E * C, D), jnp.zeros((G, 1, D), x.dtype)], axis=1
+    )
+    contrib = jax.vmap(lambda yg, dg: yg[dg])(yflat, dest)    # (G, Tl*K, D)
+    contrib = contrib * g_s[..., None].astype(x.dtype) * keep[..., None]
+    out = jax.vmap(
+        lambda t, c: jnp.zeros((Tl, D), x.dtype).at[t].add(c)
+    )(t_s, contrib)
+    out = shard(out, "groups", None, "embed")
+
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat.reshape(-1)].add(1)
+    return out.reshape(B, S, D), counts

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) in chunked matmul form.
+
+TPU adaptation: the SSD algorithm is expressed as chunk-local attention-like
+einsums (MXU-friendly) plus a tiny inter-chunk state scan, exactly the
+formulation of [arXiv:2405.21060 §6]. n_groups = 1.
+
+Layer params:
+  in_proj:  (D, 2*Din + 2*N + nh)   -> [z, x, B, C, dt]
+  conv_w:   (4, Din + 2*N)          depthwise causal conv over [x, B, C]
+  conv_b:   (Din + 2*N,)
+  A_log:    (nh,)    dt_bias: (nh,)    skip D: (nh,)
+  norm:     (Din,)   gated RMSNorm
+  out_proj: (Din, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _norm_init, rms_norm
+from repro.parallel.sharding import shard
+
+F32 = jnp.float32
+
+
+def dims(cfg: ModelConfig):
+    Din = cfg.ssm_expand * cfg.d_model
+    nh = Din // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = Din + 2 * N
+    return Din, nh, N, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    D = cfg.d_model
+    Din, nh, N, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "in_proj": _norm_init(ks[0], (D, 2 * Din + 2 * N + nh), s, dtype),
+        "conv_w": _norm_init(ks[1], (4, conv_dim), 0.2, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(F32),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "skip": jnp.ones((nh,), F32),
+        "norm": jnp.ones((Din,), dtype),
+        "out_proj": _norm_init(ks[3], (Din, D), s / math.sqrt(2 * max(cfg.num_layers, 1)), dtype),
+    }
+    a = {
+        "in_proj": "embed,inner",
+        "conv_w": "conv,inner",
+        "conv_b": "inner",
+        "A_log": "state",       # tiny; replicated (logical 'state' -> None)
+        "dt_bias": "state",
+        "skip": "state",
+        "norm": "inner",
+        "out_proj": "inner,embed",
+    }
+    return p, a
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel 4: (B, S, C) -> (B, S, C)."""
+    K = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - i, 0), (0, 0)))[:, : x.shape[1]] if i < K - 1 else x
+            for i in range(K)]
+    out = sum(pads[i] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out)
+
+
+def _split_proj(u, p, cfg: ModelConfig):
+    Din, nh, N, conv_dim = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z = zxbcdt[..., :Din]
+    xBC = zxbcdt[..., Din : Din + conv_dim]
+    dt = zxbcdt[..., Din + conv_dim :]
+    return z, xBC, dt
+
+
+def mamba_layer(
+    u: jax.Array, p: dict, cfg: ModelConfig, return_state: bool = False
+):
+    """Training/prefill SSD. u: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns the decode cache after the full
+    sequence: {'conv': last K-1 pre-conv inputs, 'state': final SSM state}
+    — layout-identical to ``init_ssm_cache`` so prefill hands straight
+    into ``mamba_decode_step``."""
+    B, S, D = u.shape
+    Din, nh, N, conv_dim = dims(cfg)
+    hp = cfg.ssm_head_dim
+    cl = min(cfg.ssm_chunk, S)
+    assert S % cl == 0, f"seq {S} % chunk {cl} != 0"
+    nc = S // cl
+
+    z, xBC, dt = _split_proj(u, p, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x = xBC[..., :Din]
+    Bm = xBC[..., Din : Din + N].astype(F32)
+    Cm = xBC[..., Din + N :].astype(F32)
+
+    x = shard(x, "batch", "seq", "inner")
+    xh = x.reshape(B, S, nh, hp).astype(F32)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])            # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                        # (nh,)
+    dA = dt * a                                                     # (B,S,nh)
+
+    # chunk
+    xc = xh.reshape(B, nc, cl, nh, hp)
+    dtc = dt.reshape(B, nc, cl, nh)
+    dAc = dA.reshape(B, nc, cl, nh)
+    Bc = Bm.reshape(B, nc, cl, N)
+    Cc = Cm.reshape(B, nc, cl, N)
+
+    cum = jnp.cumsum(dAc, axis=2)                                   # (B,nc,cl,nh)
+    # intra-chunk "attention": L[q,t] = exp(cum_q - cum_t) for q >= t.
+    # Mask BEFORE exp: for q < t the exponent is positive and can overflow
+    # to inf, and where(mask, inf, 0) NaNs the backward pass (inf * 0).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,q,t,nh)
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcqn,bctn->bcqt", Cc, Bc)
+    M = scores[..., None] * decay                                   # (B,nc,q,t,nh)
+    xdt = xc * dtc[..., None]                                       # (B,nc,cl,nh,hp)
+    y_intra = jnp.einsum("bcqth,bcthp->bcqhp", M, xdt)
+
+    # chunk states: S_c = sum_t exp(cum_last - cum_t) * dt_t * B_t x_t^T
+    last = cum[:, :, -1:, :]                                        # (B,nc,1,nh)
+    rem = jnp.exp(last - cum)                                       # (B,nc,cl,nh)
+    Sc = jnp.einsum("bctn,bcth,bcthp->bchpn", Bc, rem * dtc, xc)
+
+    # inter-chunk recurrence (tiny scan over nc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                         # (B,nc,nh)
+
+    def step(s_prev, inp):
+        sc, cd = inp  # (B,nh,hp,N), (B,nh)
+        s_new = s_prev * cd[:, :, None, None] + sc
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B, nh, hp, N), F32)
+    _, s_prevs = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                           # (B,nc,nh,hp,N)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cum), s_prevs)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hp)
+    y = y + xh * p["skip"][None, None, :, None]
+    y = y.reshape(B, S, Din).astype(u.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = shard(out, "batch", "seq", "embed")
+    if not return_state:
+        return out
+    # decode cache: final state = state after the last chunk; conv history =
+    # last K-1 *pre-conv* inputs (what the depthwise conv needs next step).
+    final_state = (
+        s_prevs[:, -1] * chunk_decay[:, -1][:, :, None, None] + Sc[:, -1]
+    )
+    xBC_pre = _split_proj(u, p, cfg)[1]          # (B, S, conv_dim) pre-conv
+    if S < 3:
+        xBC_pre = jnp.pad(xBC_pre, ((0, 0), (3 - S, 0), (0, 0)))
+    cache = {"conv": xBC_pre[:, -3:].astype(jnp.bfloat16), "state": final_state}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-size state recurrence
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    Din, nh, N, conv_dim = dims(cfg)
+    hp = cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, 3, conv_dim), jnp.bfloat16),  # last K-1 inputs
+        "state": jnp.zeros((batch, nh, hp, N), F32),
+    }
+
+
+def mamba_decode_step(
+    u: jax.Array, cache: dict, p: dict, cfg: ModelConfig
+) -> Tuple[jax.Array, dict]:
+    """u: (B, 1, D); cache: {'conv', 'state'} -> (out (B,1,D), new cache)."""
+    B = u.shape[0]
+    Din, nh, N, conv_dim = dims(cfg)
+    hp = cfg.ssm_head_dim
+
+    z, xBC, dt = _split_proj(u, p, cfg)
+    xBC = xBC[:, 0]                                                  # (B, conv_dim)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :].astype(jnp.bfloat16)], axis=1)
+    w = p["conv_w"]                                                  # (4, conv_dim)
+    conv_out = jax.nn.silu((hist * w[None]).sum(axis=1) + p["conv_b"])
+    new_conv = hist[:, 1:]
+
+    x = conv_out[..., :Din]
+    Bm = conv_out[..., Din : Din + N].astype(F32)
+    Cm = conv_out[..., Din + N :].astype(F32)
+    xh = x.reshape(B, nh, hp).astype(F32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"])       # (B, nh)
+    a = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * a)                                            # (B, nh)
+
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm, dt1, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state) + xh * p["skip"][None, :, None]
+    y = y.reshape(B, 1, Din).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "state": state}

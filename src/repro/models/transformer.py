@@ -1,0 +1,378 @@
+"""Unified decoder-only / encoder-decoder transformer covering the dense,
+MoE, SSM and hybrid families.
+
+Layer stacking: the config's ``layer_pattern()`` gives a repeating period
+(e.g. gemma3: 5×local + 1×global; zamba2: 5×mamba + 1×mamba+shared-attn).
+Params for each period position are stacked with a leading (num_periods,)
+dim and the model lax.scan's over periods — HLO size is O(period), not
+O(depth), which keeps 62-layer configs compiling in seconds. Remainder
+layers are unrolled after the scan.
+
+Zamba2's signature shared attention block (one set of weights applied at
+every 'mamba_attn' position) lives outside the scan xs and is closed over.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import init_mamba, mamba_layer
+from repro.parallel.sharding import shard
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    if kind.startswith("mamba"):
+        mp, ma = init_mamba(ks[0], cfg, dtype)
+        return {"ln1": jnp.ones((D,), dtype), "mamba": mp}, {"ln1": "embed", "mamba": ma}
+    p = {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype)}
+    a = {"ln1": "embed", "ln2": "embed"}
+    ap, aa = L.init_attention(ks[0], cfg, dtype)
+    p["attn"], a["attn"] = ap, aa
+    if kind == "decoder_x":  # whisper decoder: + cross-attention
+        xp, xa = L.init_attention(ks[1], cfg, dtype)
+        p["xattn"], a["xattn"] = xp, xa
+        p["lnx"], a["lnx"] = jnp.ones((D,), dtype), "embed"
+    if cfg.family == "moe":
+        fp, fa = init_moe(ks[2], cfg, dtype)
+    else:
+        fp, fa = L.init_mlp(ks[2], cfg, dtype)
+    p["ffn"], a["ffn"] = fp, fa
+    return p, a
+
+
+def _stack(trees):
+    """Stack a list of (param, axes) pairs along a new leading 'period' dim."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[t[0] for t in trees])
+    axes = jax.tree.map(lambda s: f"period,{s}" if s else "period", trees[0][1])
+    return params, axes
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Returns (params, axes) pytrees with identical structure."""
+    pattern, n_periods, remainder = cfg.layer_pattern()
+    n_keys = len(pattern) * n_periods + len(remainder) + cfg.encoder_layers + 8
+    keys = iter(jax.random.split(key, n_keys))
+    D, V = cfg.d_model, cfg.vocab_size
+    dec_kind = [("decoder_x" if cfg.family == "encdec" else k) for k in pattern]
+
+    # std 0.02 (GPT-2-style): with tie_embeddings the same matrix is the
+    # unembed, so std 1.0 would give sqrt(D)-scale logits (loss >> ln V).
+    params: Dict = {"embed": L._norm_init(next(keys), (V, D), 0.02, dtype)}
+    axes: Dict = {"embed": "vocab,embed"}
+
+    stacked_p, stacked_a = {}, {}
+    for pos, kind in enumerate(dec_kind):
+        per_period = [_init_layer(next(keys), kind, cfg, dtype) for _ in range(n_periods)]
+        sp, sa = _stack(per_period)
+        stacked_p[f"pos{pos}"], stacked_a[f"pos{pos}"] = sp, sa
+    params["periods"], axes["periods"] = stacked_p, stacked_a
+
+    for i, kind in enumerate(remainder):
+        rk = "decoder_x" if cfg.family == "encdec" else kind
+        rp, ra = _init_layer(next(keys), rk, cfg, dtype)
+        params[f"rem{i}"], axes[f"rem{i}"] = rp, ra
+
+    if cfg.family == "hybrid":
+        sp = {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype)}
+        sa = {"ln1": "embed", "ln2": "embed"}
+        ap, aa = L.init_attention(next(keys), cfg, dtype)
+        mp, ma = L.init_mlp(next(keys), cfg, dtype)
+        sp["attn"], sa["attn"] = ap, aa
+        sp["mlp"], sa["mlp"] = mp, ma
+        params["shared_attn"], axes["shared_attn"] = sp, sa
+
+    if cfg.family == "encdec":
+        enc_layers = [_init_layer(next(keys), "encoder", cfg, dtype) for _ in range(cfg.encoder_layers)]
+        ep, ea = _stack(enc_layers)
+        params["encoder"] = {"layers": ep, "final_norm": jnp.ones((D,), dtype)}
+        axes["encoder"] = {"layers": ea, "final_norm": "embed"}
+
+    params["final_norm"] = jnp.ones((D,), dtype)
+    axes["final_norm"] = "embed"
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._norm_init(next(keys), (D, V), 0.02, dtype)
+        axes["unembed"] = "embed,vocab"
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def maybe_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan, or an unrolled python loop when cfg.unroll_scan is set
+    (the dry-run's depth probes — see configs.base.ModelConfig)."""
+    if not cfg.unroll_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda p: p[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *v: jnp.stack(v), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked
+
+
+def _ring_from_prefill(k, v, ctx_len: int):
+    """Scatter the last min(C, S) prefill K/V into ring-slot order.
+
+    Token t lives at ring slot t % C; after S tokens the ring holds the
+    last C' = min(C, S) tokens. Produces exactly the cache a step-by-step
+    decode would have built (verified by tests/test_serve.py)."""
+    B, S = k.shape[0], k.shape[1]
+    C = ctx_len
+    Cp = min(C, S)
+    idx = jnp.arange(S - Cp, S)
+    slots = idx % C
+    kc = jnp.zeros((B, C) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -Cp:])
+    vc = jnp.zeros((B, C) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -Cp:])
+    return kc, vc
+
+
+def _collect_attn_entry(k, v, kind, cfg: ModelConfig, collect_ctx: int):
+    """Build the decode cache entry for one attention layer from prefill K/V."""
+    from repro.serve.kv_cache import cache_len_for, _is_hh  # no cycle at import
+
+    C = cache_len_for(cfg, kind, collect_ctx)
+    kc, vc = _ring_from_prefill(k, v, C)
+    entry = {"k": kc, "v": vc}
+    if _is_hh(cfg, kind, collect_ctx):
+        # cold-start residents: the last C prefill tokens, uniform counts.
+        # Decode's mass feedback corrects the ranking within a few steps.
+        B, S = k.shape[0], k.shape[1]
+        Cp = min(C, S)
+        idx = jnp.arange(S - Cp, S)
+        ids = jnp.full((B, C), -1, jnp.int32).at[:, idx % C].set(
+            jnp.broadcast_to(idx, (B, Cp)).astype(jnp.int32))
+        entry["ids"] = ids
+        entry["counts"] = jnp.where(ids >= 0, 1, 0).astype(jnp.int32)
+        entry["errors"] = jnp.zeros((B, C), jnp.int32)
+    return entry
+
+
+def _shared_block(x, sp, cfg: ModelConfig, positions, collect_ctx=None):
+    """Zamba2 shared attention+MLP block (weights reused across the stack)."""
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if collect_ctx is None:
+        x = x + L.attention(h, sp["attn"], cfg, "full", positions)
+        entry = None
+    else:
+        a, (k, v) = L.attention(h, sp["attn"], cfg, "full", positions, return_kv=True)
+        x = x + a
+        entry = _collect_attn_entry(k, v, "mamba_attn", cfg, collect_ctx)
+    x = x + L.mlp(L.rms_norm(x, sp["ln2"], cfg.norm_eps), sp["mlp"], cfg)
+    return x, entry
+
+
+def _decoder_layer(x, lp, kind, cfg: ModelConfig, positions, cross_states,
+                   shared, collect_ctx=None):
+    """Returns (x, expert_counts, cache_entry|None)."""
+    E = max(cfg.num_experts, 1)
+    counts = jnp.zeros((E,), jnp.int32)
+    entry = None
+    if kind.startswith("mamba"):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if collect_ctx is None:
+            x = x + mamba_layer(h, lp["mamba"], cfg)
+        else:
+            y, entry = mamba_layer(h, lp["mamba"], cfg, return_state=True)
+            x = x + y
+        if kind == "mamba_attn":
+            x, attn_entry = _shared_block(x, shared, cfg, positions, collect_ctx)
+            if collect_ctx is not None:
+                entry = {**entry, "attn": attn_entry}
+        return x, counts, entry
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    akind = "encoder" if kind == "encoder" else kind
+    if collect_ctx is None:
+        x = x + L.attention(h, lp["attn"], cfg, akind, positions)
+    else:
+        a, (k, v) = L.attention(h, lp["attn"], cfg, akind, positions, return_kv=True)
+        x = x + a
+        entry = _collect_attn_entry(k, v, kind, cfg, collect_ctx)
+    if "xattn" in lp:
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + L.attention(h, lp["xattn"], cfg, "full", positions, cross_states=cross_states)
+        if collect_ctx is not None:
+            # precomputed cross K/V for decode (no rope on cross attention)
+            entry["xk"] = jnp.einsum("bsd,dhk->bshk", cross_states, lp["xattn"]["wk"])
+            entry["xv"] = jnp.einsum("bsd,dhk->bshk", cross_states, lp["xattn"]["wv"])
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, counts = moe_ffn(h, lp["ffn"], cfg)
+    else:
+        y = L.mlp(h, lp["ffn"], cfg)
+    return x + y, counts, entry
+
+
+def _run_stack(x, params, cfg: ModelConfig, positions, cross_states,
+               kinds_period, remainder, remat: bool = True, collect_ctx=None):
+    """Returns (x, expert_counts, cache|None)."""
+    shared = params.get("shared_attn")
+    expert_counts = jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)
+
+    def period_body(x, period_params):
+        counts = jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)
+        entries = {}
+        for pos, kind in enumerate(kinds_period):
+            x, c, e = _decoder_layer(
+                x, period_params[f"pos{pos}"], kind, cfg, positions,
+                cross_states, shared, collect_ctx,
+            )
+            counts = counts + c
+            if collect_ctx is not None:
+                entries[f"pos{pos}"] = e
+        return x, (counts, entries)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, (counts, period_entries) = maybe_scan(cfg, body, x, params["periods"])
+    expert_counts = expert_counts + counts.sum(axis=0)
+    cache = None
+    if collect_ctx is not None:
+        cache = {"periods": period_entries}
+    for i, kind in enumerate(remainder):
+        x, c, e = _decoder_layer(
+            x, params[f"rem{i}"], kind, cfg, positions, cross_states, shared, collect_ctx
+        )
+        expert_counts = expert_counts + c
+        if collect_ctx is not None:
+            cache[f"rem{i}"] = e
+    return x, expert_counts, cache
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S_text)
+    vision: Optional[jax.Array] = None,      # (B, Fv, D) llava patch embeds
+    frames: Optional[jax.Array] = None,      # (B, Fa, D) whisper frame embeds
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), expert_counts (E,)). S = vision+text."""
+    pattern, n_periods, remainder = cfg.layer_pattern()
+    kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in pattern)
+    rem_kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in remainder)
+
+    x = params["embed"].astype(jnp.bfloat16)[tokens] * math.sqrt(cfg.d_model)
+    if vision is not None:
+        x = jnp.concatenate([vision.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    cross_states = None
+    if cfg.family == "encdec":
+        assert frames is not None, "whisper needs frame embeddings"
+        enc = shard(frames.astype(x.dtype), "batch", "seq", "embed")
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(h, lp):
+            h, _, _ = _decoder_layer(h, lp, "encoder", cfg, enc_pos, None, None)
+            return h, None
+
+        enc, _ = maybe_scan(cfg, enc_body, enc, params["encoder"]["layers"])
+        cross_states = L.rms_norm(enc, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    x, expert_counts, _ = _run_stack(
+        x, params, cfg, positions, cross_states, kinds, rem_kinds, remat=remat
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    return shard(logits, "batch", "seq", "vocab"), expert_counts
+
+
+def prefill_forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    context: int,
+    vision: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+):
+    """Full-sequence forward that also fills the decode cache.
+
+    Returns (last-token logits (B, 1, V), cache) where ``cache`` is
+    layout-identical to ``serve.kv_cache.build_cache(cfg, B, context)``
+    after S decode steps (ring slots, SSD state, whisper cross K/V;
+    SS± entries are cold-started, see _collect_attn_entry).
+    """
+    pattern, n_periods, remainder = cfg.layer_pattern()
+    kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in pattern)
+    rem_kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in remainder)
+
+    x = params["embed"].astype(jnp.bfloat16)[tokens] * math.sqrt(cfg.d_model)
+    if vision is not None:
+        x = jnp.concatenate([vision.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+
+    cross_states = None
+    if cfg.family == "encdec":
+        assert frames is not None, "whisper needs frame embeddings"
+        enc = shard(frames.astype(x.dtype), "batch", "seq", "embed")
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(h, lp):
+            h, _, _ = _decoder_layer(h, lp, "encoder", cfg, enc_pos, None, None)
+            return h, None
+
+        enc, _ = maybe_scan(cfg, enc_body, enc, params["encoder"]["layers"])
+        cross_states = L.rms_norm(enc, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    x, _, cache = _run_stack(
+        x, params, cfg, positions, cross_states, kinds, rem_kinds,
+        remat=False, collect_ctx=context,
+    )
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    return shard(logits, "batch", None, "vocab"), cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat: bool = True):
+    """Masked next-token cross-entropy; returns (loss, aux)."""
+    logits, expert_counts = forward(
+        params,
+        cfg,
+        batch["tokens"],
+        vision=batch.get("vision"),
+        frames=batch.get("frames"),
+        remat=remat,
+    )
+    labels = batch["labels"]
+    S_text = labels.shape[1]
+    logits = logits[:, -S_text:]  # vision prefix predicts nothing
+    lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(F32), labels[..., None], axis=-1
+    )[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, F32)
+    loss = ((lse - picked) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"expert_counts": expert_counts}

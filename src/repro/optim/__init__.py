@@ -1,0 +1,25 @@
+"""Optimizer subsystem — built from scratch in JAX (no optax).
+
+  adamw      -- AdamW with fp32 master state over bf16 params, decoupled
+                weight decay, global-norm clipping
+  schedules  -- warmup + cosine / linear decay
+  compress   -- top-k gradient compression with error feedback (DP-axis
+                collective-bytes reduction; see train.dp_exchange)
+"""
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm, clip_by_global_norm
+from .schedules import cosine_schedule, linear_schedule, constant_schedule
+from .compress import topk_compress, topk_decompress, error_feedback_update
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_schedule",
+    "constant_schedule",
+    "topk_compress",
+    "topk_decompress",
+    "error_feedback_update",
+]

@@ -1,0 +1,118 @@
+"""AdamW from scratch.
+
+Conventions (large-scale posture):
+  - params are stored bf16 (or whatever the model init chose); the
+    optimizer keeps fp32 master copies + fp32 (m, v) moments. The update
+    is computed in fp32 against the master weights and cast back — this
+    is the standard mixed-precision recipe (no loss scaling needed under
+    bf16).
+  - moment/master state inherits the *param* sharding (same logical axes),
+    so FSDP-sharded params get FSDP-sharded optimizer state (ZeRO-style).
+  - weight decay is decoupled (AdamW) and skipped for 1-D params
+    (norm scales, biases) by default, matching common LM practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    master: Any              # fp32 param copies (pytree like params)
+    m: Any                   # first moment (fp32)
+    v: Any                   # second moment (fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    decay_min_ndim: int = 2   # skip decay for params with ndim < this
+
+
+def adamw_init(params) -> AdamWState:
+    master = jax.tree.map(lambda p: p.astype(F32), params)
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=master,
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(F32), grads)
+        gnorm = global_norm(grads)
+
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.asarray(cfg.lr, F32)
+    b1, b2 = cfg.b1, cfg.b2
+    # bias correction
+    c1 = 1.0 - b1 ** step.astype(F32)
+    c2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(g, m, v, w):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and w.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * w
+        return m, v, w - lr * delta
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_w = jax.tree.leaves(state.master)
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+
+    master = jax.tree.unflatten(treedef, new_w)
+    params_dtypes = jax.tree.leaves(params)
+    new_params = jax.tree.unflatten(
+        treedef,
+        [w.astype(p.dtype) for w, p in zip(new_w, params_dtypes)],
+    )
+    new_state = AdamWState(
+        step=step,
+        master=master,
+        m=jax.tree.unflatten(treedef, new_m),
+        v=jax.tree.unflatten(treedef, new_v),
+    )
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

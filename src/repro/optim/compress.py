@@ -1,0 +1,52 @@
+"""Top-k gradient compression with error feedback.
+
+For the data-parallel gradient exchange at 1000+ node scale the dominant
+collective is the DP all-reduce of every gradient leaf. Top-k compression
+exchanges only (values, flat indices) of the k largest-magnitude
+coordinates per leaf — an all-gather of 2k elements per DP rank instead
+of an all-reduce of the full leaf — plus local error feedback (the
+residual is added back into the next step's gradient) which is the
+standard convergence-preserving trick [Stich et al.; Lin et al. DGC].
+
+Used by ``repro.train.dp_exchange.compressed_psum`` inside shard_map.
+The compression is exact-k per leaf; leaves smaller than 2*k are left
+dense (compression would not reduce bytes).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class TopK(NamedTuple):
+    values: jax.Array   # (k,) f32
+    indices: jax.Array  # (k,) int32 flat index
+    shape: Tuple[int, ...]
+
+
+def topk_compress(g: jax.Array, k: int) -> TopK:
+    flat = g.reshape(-1).astype(F32)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return TopK(values=flat[idx], indices=idx.astype(jnp.int32), shape=g.shape)
+
+
+def topk_decompress(t: TopK) -> jax.Array:
+    n = 1
+    for d in t.shape:
+        n *= d
+    out = jnp.zeros((n,), F32).at[t.indices].add(t.values)
+    return out.reshape(t.shape)
+
+
+def error_feedback_update(
+    g: jax.Array, residual: jax.Array, k: int
+) -> Tuple[TopK, jax.Array]:
+    """Compress (g + residual); return (compressed, new residual)."""
+    corrected = g.astype(F32) + residual
+    comp = topk_compress(corrected, k)
+    new_residual = corrected - topk_decompress(comp)
+    return comp, new_residual

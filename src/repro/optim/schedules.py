@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.asarray(lr, F32)
+    return f
+
+
+def linear_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    """Linear warmup to ``peak`` over ``warmup`` steps, linear decay to
+    ``floor`` at ``total``."""
+    def f(step):
+        s = step.astype(F32)
+        wu = peak * s / jnp.maximum(warmup, 1)
+        frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        dec = peak + (floor - peak) * frac
+        return jnp.where(s < warmup, wu, dec).astype(F32)
+    return f
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_frac * peak``."""
+    floor = peak * floor_frac
+
+    def f(step):
+        s = step.astype(F32)
+        wu = peak * s / jnp.maximum(warmup, 1)
+        frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        dec = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, wu, dec).astype(F32)
+    return f

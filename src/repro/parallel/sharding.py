@@ -1,0 +1,206 @@
+"""Logical-axis sharding: one rules table, GSPMD does the rest.
+
+Every tensor dimension in the framework carries a *logical* name
+("batch", "heads", "ff", "experts", ...). A ``ShardingRules`` table maps
+logical names to mesh axes; ``shard(x, *names)`` applies a
+``with_sharding_constraint`` inside jit (no-op when no mesh is active, so
+all CPU tests run unchanged).
+
+Divisibility guard: a logical dim is only bound to a mesh axis when its
+size divides evenly; otherwise it silently falls back to replication
+(e.g. qwen2's 28 q-heads on a 16-way model axis — d_ff/vocab still give
+full TP benefit). This keeps every (arch × mesh) cell lowerable without
+GSPMD padding surprises.
+
+Parallelism coverage:
+  DP    batch -> ("pod", "data")
+  FSDP  param embed dim -> "data"  (ZeRO-3 style; GSPMD all-gathers per use)
+  TP    heads/kv/ff/vocab/inner -> "model"  (Megatron-style)
+  EP    experts -> "model"  (token all-to-all at dispatch)
+  SP    long-context KV cache length -> "data" (batch=1 decode)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical dim name -> mesh axis (or tuple of axes, or None)."""
+
+    act: Dict[str, Axis]
+    param: Dict[str, Axis]
+
+    def lookup(self, table: Dict[str, Axis], name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        return table.get(name)
+
+
+def default_rules(
+    *,
+    multi_pod: bool = False,
+    fsdp: bool = True,
+    seq_shard: bool = False,
+) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    act = {
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        # MoE dispatch groups (GShard local dispatch): one group per DP
+        # shard; the capacity dim inside a group stays local.
+        "groups": dp,
+        "capacity": None,
+        "inner": "model",
+        "state": None,
+        "frames": None,
+        # KV-cache length: sharded over the model axis (cache sequence
+        # parallelism — 16x memory reduction for decode caches; attention
+        # over the slot dim psums across "model"). With seq_shard (batch=1
+        # long context) it additionally takes the data axis.
+        "cache": ("model",) + tuple(dp) if seq_shard else "model",
+    }
+    param = {
+        "embed": dp if fsdp else None,   # FSDP / ZeRO-3 storage sharding
+        "heads": "model",
+        "kv": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "inner": "model",
+        "state": None,
+        "conv": None,
+        "period": None,                  # stacked-layer leading dim
+        "frames": None,
+        None: None,
+    }
+    return ShardingRules(act=act, param=param)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    """Activate (mesh, rules) for shard()/act_spec()/param_specs()."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules or (
+        default_rules(multi_pod=mesh is not None and "pod" in mesh.axis_names)
+        if mesh is not None
+        else None
+    )
+    try:
+        with mesh or contextlib.nullcontext():
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(table: Dict[str, Axis], names, shape, mesh: Mesh) -> P:
+    spec = []
+    used: set = set()
+    for name, dim in zip(names, shape):
+        ax = table.get(name) if name is not None else None
+        # an axis may appear at most once in a PartitionSpec
+        flat = (ax,) if isinstance(ax, str) else tuple(ax or ())
+        if ax is None or any(a in used for a in flat):
+            spec.append(None)
+            continue
+        if dim % _axis_size(mesh, ax) != 0:
+            spec.append(None)  # divisibility fallback -> replicate
+            continue
+        used.update(flat)
+        spec.append(ax)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain activation x's dims to the logical names' mesh axes."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    spec = _resolve(rules.act, names, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def act_spec(shape, *names: Optional[str]) -> Optional[NamedSharding]:
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, _resolve(rules.act, names, shape, mesh))
+
+
+def parse_axes(names_str: str):
+    """'period,embed,ff' -> ('period', 'embed', 'ff'); '' dims -> None."""
+    return tuple(n if n else None for n in names_str.split(",")) if names_str else ()
+
+
+def param_specs(param_tree, axes_tree):
+    """PartitionSpec pytree for a param pytree + logical-axes pytree.
+
+    ``axes_tree`` mirrors ``param_tree`` with comma-joined logical dim
+    names as (string) leaves, e.g. "period,embed,ff".
+    """
+    return _tree_specs(param_tree, axes_tree, "param")
+
+
+def act_specs(tree, axes_tree):
+    """Like param_specs but resolved against the activation rules table
+    (batch/cache/seq layouts — KV caches, input batches)."""
+    return _tree_specs(tree, axes_tree, "act")
+
+
+def _tree_specs(tree, axes_tree, table_name: str):
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return jax.tree.map(lambda _: None, tree)
+    table = getattr(rules, table_name)
+
+    def one(p, names_str):
+        names = parse_axes(names_str)
+        assert len(names) == len(p.shape), (names_str, p.shape)
+        return NamedSharding(mesh, _resolve(table, names, p.shape, mesh))
+
+    return jax.tree.map(one, tree, axes_tree)

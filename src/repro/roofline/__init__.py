@@ -1,0 +1,13 @@
+"""Roofline analysis: HLO collective-bytes parsing + 3-term model."""
+from .hlo import collective_bytes, parse_shape_bytes, while_trip_counts
+from .model import RooflineTerms, roofline_terms, model_flops, HW
+
+__all__ = [
+    "collective_bytes",
+    "parse_shape_bytes",
+    "while_trip_counts",
+    "RooflineTerms",
+    "roofline_terms",
+    "model_flops",
+    "HW",
+]

@@ -1,0 +1,148 @@
+"""Parse collective ops (and while-loop trip counts) out of HLO text.
+
+cost_analysis() does not report collective bytes, so we sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized HLO (compiled.as_text()).
+
+Scan correction: XLA's cost analysis counts while-loop bodies ONCE.
+Collectives inside a while body are therefore multiplied here by the
+trip count, which we recover from the loop's induction-variable compare
+(the canonical `compare(iv, constant), direction=LT` pattern XLA emits
+for lax.scan).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[16,4096,512]{2,1,0}  /  f32[]  /  u32[2]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array literals in a shape string (incl. tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# an HLO instruction line:  %name = <result-shape> op-name(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)(?:\.\d+)?\(",
+)
+
+# while-loop trip count: XLA canonicalizes scan loops to
+#   %compare = pred[] compare(%iv, %const), direction=LT   inside _cond
+_TRIP_RE = re.compile(
+    r"_cond[\s\S]{0,2000}?compare\([^)]*\),\s*direction=LT", re.MULTILINE
+)
+
+
+def _computation_blocks(hlo: str) -> Dict[str, str]:
+    """Split HLO text into computation-name -> body blocks."""
+    blocks: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("ENTRY ", "%")) and stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            if cur_name is not None:
+                blocks[cur_name] = "\n".join(cur_lines)
+            header = stripped.split("(")[0].strip()
+            cur_name = header.lstrip("%").replace("ENTRY", "").strip()
+            cur_lines = []
+        elif stripped == "}" and cur_name is not None:
+            blocks[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            cur_lines = []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        blocks[cur_name] = "\n".join(cur_lines)
+    return blocks
+
+
+def while_trip_counts(hlo: str) -> Dict[str, int]:
+    """Map while-body computation name -> trip count (best effort).
+
+    Recovers the constant bound from the loop condition's
+    compare(iv, c), direction=LT pattern.
+    """
+    trips: Dict[str, int] = {}
+    # while instrs: %w = (...) while(...), condition=%name.cond, body=%name.body
+    for m in re.finditer(
+        r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", hlo
+    ):
+        cond_name, body_name = m.group(1), m.group(2)
+        # find the cond computation, grab its LT-compare constant
+        cond_block = re.search(
+            rf"%?{re.escape(cond_name)}[\s\S]*?\n}}", hlo
+        )
+        trip = None
+        if cond_block:
+            block = cond_block.group(0)
+            cmpm = re.search(r"compare\((?:[^)]*)\),\s*direction=LT", block)
+            if cmpm:
+                # constants in the cond block: take the largest s32 constant
+                consts = re.findall(r"constant\((\d+)\)", block)
+                if consts:
+                    trip = max(int(c) for c in consts)
+        trips[body_name] = trip if trip else 1
+    return trips
+
+
+def collective_bytes(hlo: str, scan_corrected: bool = True) -> Dict[str, int]:
+    """Sum result bytes per collective kind over the whole module.
+
+    With ``scan_corrected``, collectives inside while bodies are weighted
+    by the recovered trip count.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    trips = while_trip_counts(hlo) if scan_corrected else {}
+    blocks = _computation_blocks(hlo)
+
+    def weight_for(comp_name: str) -> int:
+        for body, t in trips.items():
+            if comp_name and body in comp_name:
+                return t
+        return 1
+
+    for name, body in blocks.items():
+        w = weight_for(name)
+        for line in body.splitlines():
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            base = op.rstrip("0123456789").rstrip(".")
+            # "all-reduce-start"/"-done": count the start only (async pair)
+            if base.endswith("-done"):
+                continue
+            base = base.replace("-start", "")
+            if base in _COLLECTIVES:
+                out[base] += w * parse_shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,23 @@
+"""Serving runtime: KV caches, prefill/decode step builders, engine.
+
+  kv_cache -- cache pytree builders + ShapeDtypeStruct specs (dry-run)
+  h2o      -- SS±-driven heavy-hitter KV cache (the paper's algorithm as
+              an eviction policy; enables long_500k on global-attention
+              layers)
+  decode   -- serve_step builder: one token for the whole stack
+  prefill  -- prefill_step builder: full-sequence forward + cache fill
+  engine   -- smoke-scale batched serving loop (greedy sampling)
+"""
+from .kv_cache import build_cache, cache_spec, cache_len_for
+from .decode import build_serve_step
+from .prefill import build_prefill_step
+from .engine import ServeEngine
+
+__all__ = [
+    "build_cache",
+    "cache_spec",
+    "cache_len_for",
+    "build_serve_step",
+    "build_prefill_step",
+    "ServeEngine",
+]

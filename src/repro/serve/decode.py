@@ -1,0 +1,220 @@
+"""serve_step builder: advance every sequence in the batch by one token.
+
+One lax.scan over the period-stacked params+cache (HLO stays O(period) in
+depth, same trick as training). Per layer kind:
+
+  attention   ring-buffer write + GQA decode attention over valid slots
+  hh (SS±)    SpaceSaving replacement insert -> attend -> weighted
+              monitored inserts of the received mass -> periodic halving
+  mamba       constant-state SSD recurrence
+  mamba_attn  mamba + the zamba2 shared attention block (own cache)
+  decoder_x   whisper: self-attn ring + non-causal cross-attn over
+              precomputed encoder K/V
+
+Returns (logits (B,1,V), new_cache, aux) — aux carries per-step MoE
+expert counts (ingested by the SS± load sketch, repro.sketch.stats).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+from repro.models.ssm import mamba_decode_step
+from repro.parallel.sharding import shard
+from repro.serve import h2o
+from repro.serve.kv_cache import cache_len_for, _is_hh
+
+F32 = jnp.float32
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Attention decode primitives
+# ---------------------------------------------------------------------------
+
+def _gqa_attend(q, cache_k, cache_v, valid):
+    """q: (B,KV,G,hd); cache: (B,C,KV,hd); valid: (B,C) ->
+    (ctx (B,KV,G,hd), mass (B,C))."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgh,btkh->bkgt", q, cache_k, preferred_element_type=F32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # guard fully-invalid rows (empty cache): probs would be uniform garbage
+    any_valid = valid.any(axis=1)[:, None, None, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    mass = probs.sum(axis=(1, 2))
+    ctx = jnp.einsum("bkgt,btkh->bkgh", probs.astype(cache_v.dtype), cache_v)
+    return ctx, mass
+
+
+def _project_decode(x, p, cfg: ModelConfig, pos, use_rope: bool = True):
+    """x: (B,1,D) -> q (B,KV,G,hd), k_new/v_new (B,KV,hd)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    q, k, v = L._project_qkv(x, p, cfg)
+    if use_rope:
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+    return q[:, 0].reshape(B, KV, G, hd), k[:, 0], v[:, 0]
+
+
+def _ring_attn_decode(x, p, cfg: ModelConfig, entry, pos):
+    """Ring-buffer KV decode. entry: {'k','v'} (B,C,KV,hd); pos: (B,)."""
+    B = x.shape[0]
+    C = entry["k"].shape[1]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k_new, v_new = _project_decode(x, p, cfg, pos)
+    slot = pos % C
+    bidx = jnp.arange(B)
+    k_cache = entry["k"].at[bidx, slot].set(k_new.astype(entry["k"].dtype))
+    v_cache = entry["v"].at[bidx, slot].set(v_new.astype(entry["v"].dtype))
+    valid = jnp.arange(C)[None, :] < jnp.minimum(pos + 1, C)[:, None]
+    ctx, _ = _gqa_attend(q, k_cache, v_cache, valid)
+    out = jnp.einsum("bh,hd->bd", ctx.reshape(B, H * hd), p["wo"])[:, None]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _hh_attn_decode(x, p, cfg: ModelConfig, entry, pos, decay_period: int):
+    """SS± heavy-hitter KV decode (see serve/h2o.py)."""
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k_new, v_new = _project_decode(x, p, cfg, pos)
+    entry, _ = h2o.hh_insert(entry, pos, k_new.astype(entry["k"].dtype),
+                             v_new.astype(entry["v"].dtype))
+    valid = h2o.hh_valid(entry)
+    ctx, mass = _gqa_attend(q, entry["k"], entry["v"], valid)
+    entry = h2o.hh_add_mass(entry, mass / max(cfg.num_heads, 1))
+    if decay_period:
+        decayed = h2o.hh_decay(entry)
+        tick = (pos[0] % decay_period) == (decay_period - 1)
+        entry = jax.tree.map(
+            lambda a, b: jnp.where(tick, a, b) if a.dtype == jnp.int32 else b,
+            decayed, entry,
+        )
+    out = jnp.einsum("bh,hd->bd", ctx.reshape(B, H * hd), p["wo"])[:, None]
+    return out, entry
+
+
+def _cross_attn_decode(x, p, entry, cfg: ModelConfig):
+    """Whisper cross-attention against precomputed encoder K/V (no rope)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0].reshape(B, KV, G, hd)
+    valid = jnp.ones(entry["xk"].shape[:2], bool)
+    ctx, _ = _gqa_attend(q, entry["xk"], entry["xv"], valid)
+    return jnp.einsum("bh,hd->bd", ctx.reshape(B, H * hd), p["wo"])[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode
+# ---------------------------------------------------------------------------
+
+def _decode_layer(x, lp, entry, kind, cfg: ModelConfig, pos, shared,
+                  hh: bool, decay_period: int):
+    """Returns (x, new_entry, expert_counts)."""
+    E = max(cfg.num_experts, 1)
+    counts = jnp.zeros((E,), jnp.int32)
+
+    if kind.startswith("mamba"):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, new_ssm = mamba_decode_step(h, {"conv": entry["conv"], "state": entry["state"]},
+                                       lp["mamba"], cfg)
+        x = x + y
+        new_entry = dict(new_ssm)
+        if kind == "mamba_attn":
+            h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            if hh:
+                a, new_attn = _hh_attn_decode(h, shared["attn"], cfg, entry["attn"], pos, decay_period)
+            else:
+                a, new_attn = _ring_attn_decode(h, shared["attn"], cfg, entry["attn"], pos)
+            x = x + a
+            x = x + L.mlp(L.rms_norm(x, shared["ln2"], cfg.norm_eps), shared["mlp"], cfg)
+            new_entry["attn"] = new_attn
+        return x, new_entry, counts
+
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if hh:
+        a, new_entry = _hh_attn_decode(h, lp["attn"], cfg, entry, pos, decay_period)
+    else:
+        ring = {"k": entry["k"], "v": entry["v"]}
+        a, new_entry = _ring_attn_decode(h, lp["attn"], cfg, ring, pos)
+        if kind == "decoder_x":
+            new_entry = {**new_entry, "xk": entry["xk"], "xv": entry["xv"]}
+    x = x + a
+    if kind == "decoder_x":
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attn_decode(h, lp["xattn"], entry, cfg)
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, counts = moe_ffn(h, lp["ffn"], cfg)
+    else:
+        y = L.mlp(h, lp["ffn"], cfg)
+    return x + y, new_entry, counts
+
+
+# ---------------------------------------------------------------------------
+# serve_step
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ModelConfig, context: int, decay_period: int = 8192):
+    """Returns serve_step(params, cache, tokens (B,1)) ->
+    (logits (B,1,V), new_cache, aux)."""
+    pattern, n_periods, remainder = cfg.layer_pattern()
+    kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in pattern)
+    rem_kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in remainder)
+    hh_flags = {k: _is_hh(cfg, k, context) for k in set(kinds) | set(rem_kinds)}
+
+    def serve_step(params, cache, tokens):
+        B = tokens.shape[0]
+        x = params["embed"].astype(jnp.bfloat16)[tokens] * math.sqrt(cfg.d_model)
+        x = shard(x, "batch", None, "embed")
+        pos = cache["pos"]                                  # (B,)
+        shared = params.get("shared_attn")
+        E = max(cfg.num_experts, 1)
+
+        def period_body(x, xs):
+            lp, ce = xs
+            new_entries = {}
+            counts = jnp.zeros((E,), jnp.int32)
+            for i, kind in enumerate(kinds):
+                x, ne, c = _decode_layer(
+                    x, lp[f"pos{i}"], ce[f"pos{i}"], kind, cfg, pos,
+                    shared, hh_flags[kind], decay_period,
+                )
+                new_entries[f"pos{i}"] = ne
+                counts = counts + c
+            return x, (new_entries, counts)
+
+        from repro.models.transformer import maybe_scan
+        x, (new_periods, counts) = maybe_scan(
+            cfg, period_body, x, (params["periods"], cache["periods"])
+        )
+        expert_counts = counts.sum(axis=0)
+
+        new_cache = {"periods": new_periods, "pos": pos + 1}
+        for i, kind in enumerate(rem_kinds):
+            x, ne, c = _decode_layer(
+                x, params[f"rem{i}"], cache[f"rem{i}"], kind, cfg, pos,
+                shared, hh_flags[kind], decay_period,
+            )
+            new_cache[f"rem{i}"] = ne
+            expert_counts = expert_counts + c
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        unembed = (
+            params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        ).astype(jnp.bfloat16)
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+        logits = shard(logits, "batch", None, "vocab")
+        return logits, new_cache, {"expert_counts": expert_counts}
+
+    return serve_step

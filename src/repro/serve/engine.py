@@ -1,0 +1,61 @@
+"""Smoke-scale batched serving engine.
+
+Drives prefill + decode for a batch of requests with greedy sampling.
+This is the CPU-testable counterpart of the production serve launcher
+(repro.launch.serve); the jitted step functions are the same objects the
+dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.decode import build_serve_step
+from repro.serve.prefill import build_prefill_step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: dict
+    context: int
+    decay_period: int = 8192
+
+    def __post_init__(self):
+        self._prefill = jax.jit(build_prefill_step(self.cfg, self.context))
+        self._step = jax.jit(build_serve_step(self.cfg, self.context, self.decay_period))
+
+    def generate(
+        self,
+        tokens: jax.Array,                 # (B, S) prompt
+        max_new_tokens: int,
+        vision: Optional[jax.Array] = None,
+        frames: Optional[jax.Array] = None,
+        stop_token: Optional[int] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Greedy decode. Returns {'tokens': (B, S+T), 'steps': int}."""
+        batch = {"tokens": tokens}
+        if vision is not None:
+            batch["vision"] = vision
+        if frames is not None:
+            batch["frames"] = frames
+        logits, cache = self._prefill(self.params, batch)
+        out = [np.asarray(tokens)]
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        done = jnp.zeros((tokens.shape[0],), bool)
+        steps = 0
+        for _ in range(max_new_tokens):
+            out.append(np.asarray(cur))
+            logits, cache, _aux = self._step(self.params, cache, cur)
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            steps += 1
+            if stop_token is not None:
+                done = done | (cur[:, 0] == stop_token)
+                if bool(done.all()):
+                    break
+        return {"tokens": np.concatenate(out, axis=1), "steps": steps}

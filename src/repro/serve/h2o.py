@@ -1,0 +1,103 @@
+"""SS±-driven heavy-hitter KV cache ("H2O via SpaceSaving±").
+
+The observation (DESIGN.md §2): a bounded KV cache with accumulated-
+attention-mass eviction IS the SpaceSaving algorithm — the cache's slot
+set is the sketch's monitored set, quantized attention mass is the
+count, and the paper's replacement rule (evict argmin count; newcomer
+inherits minCount as estimated error) is the eviction policy. The paper's
+guarantees then say: any token whose accumulated attention mass exceeds
+ε·(total mass) is still resident (Lemma 3 / Thm 5) — exactly the H2O
+"heavy hitters dominate attention" property, but with a deterministic
+bound instead of a heuristic.
+
+Deletions (the ± part): long-context serving wants *windowed* mass, not
+all-time mass (a token heavily attended 400k steps ago should be
+evictable). Every ``decay_period`` steps we delete half of each monitored
+count — a bounded-deletion stream applied to monitored items (per window:
+D = I/2 ⇒ α = 2), handled by the monitored-deletion path of Alg 3/4.
+Sketch capacity is sized 2α/ε per Thm 4 with ε implied by the budget.
+
+Per (batch row, layer): one sketch fused with the KV payload —
+ids (C,) i32 absolute positions, counts (C,) i32 quantized mass,
+errors (C,) i32. All ops are branchless selects, vmapped over batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+F32 = jnp.float32
+EMPTY = jnp.int32(-1)
+MASS_SCALE = 1024.0  # quantization: 1.0 attention mass -> 1024 counts
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+def quantize_mass(mass: jax.Array) -> jax.Array:
+    return jnp.round(mass * MASS_SCALE).astype(I32)
+
+
+def _insert_token_row(ids, counts, errors, k_row, v_row, pos, k_new, v_new):
+    """SpaceSaving insert of one (position, kv) into one row's cache.
+
+    ids/counts/errors: (C,); k_row/v_row: (C, KV, hd). Returns updated
+    tuple + the slot index written.
+    """
+    empty = ids == EMPTY
+    has_empty = empty.any()
+    slot_empty = jnp.argmax(empty)
+    jmin = jnp.argmin(jnp.where(empty, _INT_MAX, counts))
+    min_count = jnp.where(has_empty, 0, counts[jmin])
+    sel = jnp.where(has_empty, slot_empty, jmin)
+
+    # paper Alg 1: newcomer count = minCount + w (w = its first-step mass,
+    # added right after by add_mass), error = minCount.
+    ids = ids.at[sel].set(pos)
+    counts = counts.at[sel].set(min_count)
+    errors = errors.at[sel].set(min_count)
+    k_row = k_row.at[sel].set(k_new)
+    v_row = v_row.at[sel].set(v_new)
+    return ids, counts, errors, k_row, v_row, sel
+
+
+def hh_insert(entry: Dict[str, jax.Array], pos: jax.Array, k_new, v_new):
+    """Vmapped-over-batch SpaceSaving replacement insert.
+
+    entry: {'k': (B,C,KV,hd), 'v': ..., 'ids': (B,C), 'counts', 'errors'}
+    pos: (B,) absolute position; k_new/v_new: (B, KV, hd).
+    """
+    ids, counts, errors, k, v, sel = jax.vmap(_insert_token_row)(
+        entry["ids"], entry["counts"], entry["errors"],
+        entry["k"], entry["v"], pos, k_new, v_new,
+    )
+    return {"ids": ids, "counts": counts, "errors": errors, "k": k, "v": v}, sel
+
+
+def hh_add_mass(entry: Dict[str, jax.Array], mass: jax.Array) -> Dict[str, jax.Array]:
+    """Weighted monitored inserts: every resident slot's count grows by the
+    attention mass it just received (mass: (B, C) f32)."""
+    q = quantize_mass(mass)
+    q = jnp.where(entry["ids"] == EMPTY, 0, q)
+    return {**entry, "counts": entry["counts"] + q}
+
+
+def hh_decay(entry: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Windowed-mass deletion: halve monitored counts (and errors — the
+    overestimate bound shrinks with the mass it bounds). A bounded-deletion
+    batch with α = 2 applied via the monitored-deletion rule."""
+    counts = jnp.where(entry["ids"] == EMPTY, 0, entry["counts"] // 2)
+    errors = jnp.where(entry["ids"] == EMPTY, 0, entry["errors"] // 2)
+    return {**entry, "counts": counts, "errors": errors}
+
+
+def hh_valid(entry: Dict[str, jax.Array]) -> jax.Array:
+    return entry["ids"] != EMPTY  # (B, C)
+
+
+def hh_heavy_positions(entry: Dict[str, jax.Array], m: int):
+    """Top-m resident positions by estimated mass (diagnostics)."""
+    key = jnp.where(entry["ids"] == EMPTY, jnp.int32(-(2**31)), entry["counts"])
+    vals, idx = jax.lax.top_k(key, m)
+    return jnp.take_along_axis(entry["ids"], idx, axis=1), vals

@@ -1,0 +1,168 @@
+"""KV-cache pytree builders.
+
+Layout: one cache entry per period position (mirroring the stacked-param
+layout of ``repro.models.transformer``), each with a leading
+(num_periods,) dim so the decode step can lax.scan over periods carrying
+(period_params, period_cache) together. Remainder layers get unstacked
+entries. Kinds:
+
+  'full'       ring buffer, capacity = context length
+  'swa'/'local' ring buffer, capacity = min(window, context)
+  'global'     ring buffer, or SS± heavy-hitter cache when the config
+               sets hh_kv_budget and the context exceeds it (long_500k)
+  'mamba'      SSD constant-size state {'conv', 'state'}
+  'mamba_attn' mamba + a KV entry for the shared attention block
+  'decoder_x'  (whisper) self-attn ring + precomputed cross K/V
+
+Physical-capacity note: the input-shape spec fixes the *logical* context
+(seq_len); the physical slot count is an arch-dependent optimization —
+window for SWA layers, hh_kv_budget for SS±-evicted global layers. This
+is what makes long_500k memory-feasible and is recorded in DESIGN.md.
+
+All builders come in two flavors: concrete (jnp zeros — smoke scale) and
+spec (ShapeDtypeStruct — dry-run, no allocation), driven by the same
+layout function so they can never diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def cache_len_for(cfg: ModelConfig, kind: str, context: int) -> int:
+    """Physical slot count for a layer kind at a given logical context."""
+    if kind in ("swa", "local"):
+        return min(cfg.window, context)
+    if _is_hh(cfg, kind, context):
+        return cfg.hh_kv_budget
+    return context
+
+
+# SS± eviction engages only when a dense cache would be long-context
+# infeasible; decode_32k keeps faithful dense caches.
+HH_ENGAGE_CTX = 65536
+
+
+def _is_hh(cfg: ModelConfig, kind: str, context: int) -> bool:
+    """SS± heavy-hitter eviction applies to unwindowed attention layers
+    (gemma3 'global' layers, zamba2's shared 'mamba_attn' block) when the
+    context is beyond dense feasibility and the config sets a budget."""
+    if kind not in ("global", "mamba_attn", "full"):
+        return False
+    return bool(cfg.hh_kv_budget) and context > HH_ENGAGE_CTX
+
+
+def _attn_entry(cfg: ModelConfig, B: int, C: int, hh: bool) -> Dict[str, Tuple]:
+    """(shape, dtype, logical axes) triplets for one attention KV entry."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    e = {
+        "k": ((B, C, KV, hd), BF16, ("batch", "cache", "kv", None)),
+        "v": ((B, C, KV, hd), BF16, ("batch", "cache", "kv", None)),
+    }
+    if hh:
+        # SS± sketch state fused with the KV payload: ids = absolute token
+        # positions, counts = quantized accumulated attention mass,
+        # errors = SS± estimated error. See serve/h2o.py.
+        e["ids"] = ((B, C), I32, ("batch", "cache"))
+        e["counts"] = ((B, C), I32, ("batch", "cache"))
+        e["errors"] = ((B, C), I32, ("batch", "cache"))
+    return e
+
+
+def _mamba_entry(cfg: ModelConfig, B: int) -> Dict[str, Tuple]:
+    Din, nh, N, conv_dim = ssm_mod.dims(cfg)
+    hp = cfg.ssm_head_dim
+    return {
+        "conv": ((B, 3, conv_dim), BF16, ("batch", None, "inner")),
+        "state": ((B, nh, hp, N), F32, ("batch", "inner", None, None)),
+    }
+
+
+def _entry_layout(cfg: ModelConfig, kind: str, B: int, context: int):
+    """Layout dict for one layer position."""
+    C = cache_len_for(cfg, kind, context)
+    if kind == "mamba":
+        return _mamba_entry(cfg, B)
+    if kind == "mamba_attn":
+        out = _mamba_entry(cfg, B)
+        out["attn"] = _attn_entry(cfg, B, C, _is_hh(cfg, kind, context))
+        return out
+    if kind == "decoder_x":
+        out = _attn_entry(cfg, B, C, False)
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        Fr = cfg.encoder_frames
+        out["xk"] = ((B, Fr, KV, hd), BF16, ("batch", "frames", "kv", None))
+        out["xv"] = ((B, Fr, KV, hd), BF16, ("batch", "frames", "kv", None))
+        return out
+    return _attn_entry(cfg, B, C, _is_hh(cfg, kind, context))
+
+
+def _layout(cfg: ModelConfig, B: int, context: int):
+    """Full cache layout: {periods: {pos_i: entry}, rem_i: entry, pos: ...}.
+
+    Period entries get a leading (num_periods,) dim (scan xs layout).
+    """
+    pattern, n_periods, remainder = cfg.layer_pattern()
+    kinds = tuple("decoder_x" if cfg.family == "encdec" else k for k in pattern)
+    rem = tuple("decoder_x" if cfg.family == "encdec" else k for k in remainder)
+
+    def add_period_dim(entry):
+        return jax.tree.map(
+            lambda t: ((n_periods,) + t[0], t[1], ("period",) + t[2]),
+            entry,
+            is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], tuple),
+        )
+
+    layout = {"periods": {}, "pos": ((B,), I32, ("batch",))}
+    for i, kind in enumerate(kinds):
+        layout["periods"][f"pos{i}"] = add_period_dim(_entry_layout(cfg, kind, B, context))
+    for i, kind in enumerate(rem):
+        layout[f"rem{i}"] = _entry_layout(cfg, kind, B, context)
+    return layout
+
+
+_IS_LEAF = lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], tuple)
+
+
+def build_cache(cfg: ModelConfig, batch: int, context: int):
+    """Concrete zero-initialized cache (smoke scale)."""
+    lay = _layout(cfg, batch, context)
+
+    cache = jax.tree.map(lambda t: jnp.zeros(t[0], t[1]), lay, is_leaf=_IS_LEAF)
+    # hh 'ids' must start at EMPTY (-1): redo those leaves by name.
+    return _fix_hh_ids(cache, lay)
+
+
+def _fix_hh_ids(cache, lay):
+    def walk(c, l, name=None):
+        if isinstance(c, dict):
+            return {k: walk(c[k], l[k], k) for k in c}
+        if name == "ids":
+            return jnp.full(c.shape, -1, I32)
+        return c
+    return walk(cache, lay)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, context: int):
+    """ShapeDtypeStruct cache (dry-run) + logical-axes tree (same shape)."""
+    lay = _layout(cfg, batch, context)
+    sds = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t[0], t[1]), lay, is_leaf=_IS_LEAF
+    )
+    axes = jax.tree.map(lambda t: ",".join(a or "" for a in t[2]), lay, is_leaf=_IS_LEAF)
+    return sds, axes
+
+
+def cache_axes(cfg: ModelConfig, batch: int, context: int):
+    """Just the logical-axes tree (strings) for sharding-spec resolution."""
+    return cache_spec(cfg, batch, context)[1]

@@ -1,0 +1,39 @@
+"""prefill_step builder — thin wrapper over transformer.prefill_forward.
+
+The prefill pass is the same stack walk as training (one code path,
+``transformer._run_stack``); with ``collect_ctx`` set it additionally
+emits the decode cache: ring K/V tails in slot order, SSD final states,
+whisper cross K/V, and cold-started SS± entries for hh layers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def build_prefill_step(cfg: ModelConfig, context: int, with_cache: bool = True):
+    """Returns prefill_step(params, batch) -> (logits, cache|None).
+
+    ``batch``: {'tokens': (B, S)} plus optional 'vision'/'frames' stubs.
+    ``context`` is the decode context the cache is sized for (>= S).
+    """
+
+    def prefill_step(params, batch):
+        if with_cache:
+            return transformer.prefill_forward(
+                params, cfg, batch["tokens"], context,
+                vision=batch.get("vision"), frames=batch.get("frames"),
+            )
+        logits, _ = transformer.forward(
+            params, cfg, batch["tokens"],
+            vision=batch.get("vision"), frames=batch.get("frames"),
+            remat=False,
+        )
+        return logits[:, -1:], None
+
+    return prefill_step

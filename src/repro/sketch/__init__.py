@@ -1,0 +1,30 @@
+"""JAX-native SpaceSaving± — the TPU-adapted implementation of the paper.
+
+The sketch state is three dense arrays (ids/counts/errors) instead of the
+paper's two heaps (see DESIGN.md §3 for the hardware-adaptation rationale).
+All ops are pure functions, jit/vmap/scan-compatible, and mirrored by a
+Pallas TPU kernel in ``repro.kernels.sketch_update``.
+"""
+from .jax_sketch import (
+    EMPTY,
+    SketchState,
+    block_update,
+    init,
+    merge,
+    process_stream,
+    query,
+    query_many,
+    topk,
+)
+
+__all__ = [
+    "EMPTY",
+    "SketchState",
+    "init",
+    "process_stream",
+    "block_update",
+    "query",
+    "query_many",
+    "merge",
+    "topk",
+]

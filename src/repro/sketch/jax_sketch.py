@@ -1,0 +1,285 @@
+"""Vectorized SpaceSaving± in pure JAX (dense counter store).
+
+State layout (the TPU adaptation of the paper's two-heap structure):
+    ids:    (k,) int32   item ids, EMPTY = -1 for free slots
+    counts: (k,) int32   estimated counts  (min over lanes ~ paper's min-heap)
+    errors: (k,) int32   estimated errors  (max over lanes ~ paper's max-heap)
+
+All updates are *branchless* (jnp.where selects) so they vectorize on the
+VPU and vmap across many sketches (per-expert / per-layer / per-host).
+
+Semantics: identical to the reference `repro.core.spacesaving` classes up
+to argmin/argmax tie-breaking (reference heaps break ties by heap order;
+here ties break to the lowest flat index). All paper guarantees
+(Thms 2/4/5) are tie-break independent and are property-tested for this
+implementation directly.
+
+``variant``: 1 = Lazy SS± (Alg 3), 2 = SS± (Alg 4). Insertions (Alg 1) are
+shared. Weighted updates follow the standard weighted SpaceSaving
+extension (replacement absorbs the whole weight; deletion of unmonitored
+mass spreads over max-error items, each absorbing up to its error).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+VARIANT_LAZY = 1
+VARIANT_SSPM = 2
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+class SketchState(NamedTuple):
+    ids: jax.Array     # (k,) int32
+    counts: jax.Array  # (k,) int32
+    errors: jax.Array  # (k,) int32
+
+
+def init(capacity: int) -> SketchState:
+    return SketchState(
+        ids=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((capacity,), dtype=jnp.int32),
+        errors=jnp.zeros((capacity,), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single weighted update (branchless)
+# ---------------------------------------------------------------------------
+
+def _insert(state: SketchState, item: jax.Array, w: jax.Array) -> SketchState:
+    ids, counts, errors = state
+    eq = ids == item
+    monitored = eq.any()
+    slot_mon = jnp.argmax(eq)
+
+    empty = ids == EMPTY
+    has_empty = empty.any()
+    slot_empty = jnp.argmax(empty)
+
+    jmin = jnp.argmin(jnp.where(empty, _INT_MAX, counts))
+    min_count = counts[jmin]
+
+    sel = jnp.where(monitored, slot_mon, jnp.where(has_empty, slot_empty, jmin))
+    new_count = jnp.where(
+        monitored, counts[slot_mon] + w, jnp.where(has_empty, w, min_count + w)
+    )
+    new_error = jnp.where(
+        monitored, errors[slot_mon], jnp.where(has_empty, 0, min_count)
+    )
+    return SketchState(
+        ids=ids.at[sel].set(item),
+        counts=counts.at[sel].set(new_count),
+        errors=errors.at[sel].set(new_error),
+    )
+
+
+def _delete(
+    state: SketchState, item: jax.Array, w: jax.Array, variant: int
+) -> SketchState:
+    ids, counts, errors = state
+    eq = ids == item
+    monitored = eq.any()
+    slot_mon = jnp.argmax(eq)
+
+    # monitored: subtract w at the monitored slot
+    counts_mon = counts.at[slot_mon].add(jnp.where(monitored, -w, 0))
+
+    if variant == VARIANT_LAZY:
+        return SketchState(ids, counts_mon, errors)
+
+    # SS± (Alg 4): unmonitored deletion decrements (count, error) of the
+    # max-error item; weight spreads across items, each absorbing <= error_j.
+    def spread(carry):
+        rem, cnts, errs = carry
+        jerr = jnp.argmax(errs)
+        max_err = errs[jerr]
+        d = jnp.minimum(rem, max_err)
+        return (
+            rem - d,
+            cnts.at[jerr].add(-d),
+            errs.at[jerr].add(-d),
+        )
+
+    def cond(carry):
+        rem, _, errs = carry
+        return (rem > 0) & (errs.max() > 0)
+
+    rem0 = jnp.where(monitored, 0, w)
+    _, counts_un, errors_un = jax.lax.while_loop(
+        cond, lambda c: spread(c), (rem0, counts_mon, errors)
+    )
+    return SketchState(ids, counts_un, errors_un)
+
+
+def apply_update(
+    state: SketchState, item: jax.Array, weight: jax.Array, variant: int = VARIANT_SSPM
+) -> SketchState:
+    """One signed, weighted update. weight > 0 insert, < 0 delete, 0 no-op."""
+    ins = _insert(state, item, jnp.maximum(weight, 0))
+    dele = _delete(state, item, jnp.maximum(-weight, 0), variant)
+    pick = weight > 0
+    return jax.tree.map(
+        lambda a, b: jnp.where(pick, a, b), ins, dele
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stream / block processing
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def process_stream(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """Exact sequential semantics via lax.scan (the oracle path)."""
+
+    def step(st, xw):
+        item, w = xw
+        return apply_update(st, item, w, variant), None
+
+    state, _ = jax.lax.scan(step, state, (items.astype(jnp.int32), weights.astype(jnp.int32)))
+    return state
+
+
+def _aggregate_block(items: jax.Array, weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Net weight per unique item in the block (sort + segment-sum).
+
+    Returns (uids, net) of the same length; padding slots have uid == EMPTY
+    and net == 0. Net weight order: uniques appear in ascending id order.
+    """
+    order = jnp.argsort(items)
+    s = items[order].astype(jnp.int32)
+    w = weights[order].astype(jnp.int32)
+    # segment heads
+    head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    seg = jnp.cumsum(head) - 1  # segment index per element
+    net = jax.ops.segment_sum(w, seg, num_segments=items.shape[0])
+    uid_pos = jnp.where(head, jnp.arange(items.shape[0]), items.shape[0] - 1)
+    uids = jax.ops.segment_min(s, seg, num_segments=items.shape[0])
+    n_seg = head.sum()
+    idx = jnp.arange(items.shape[0])
+    uids = jnp.where(idx < n_seg, uids, EMPTY)
+    net = jnp.where(idx < n_seg, net, 0)
+    return uids, net
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def block_update(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """Block (weighted) update: segment-aggregate then apply per-unique.
+
+    This is the production TPU path: the O(B) serial recurrence collapses to
+    O(U_B) weighted applies (U_B = uniques per block), each a k-lane vector
+    op. Guarantees are those of weighted SpaceSaving± (see module docstring);
+    equivalence to unit-update processing holds up to within-block
+    reordering, which the bounded-deletion model's guarantees are stable to.
+    """
+    uids, net = _aggregate_block(items, weights)
+
+    def step(st, xw):
+        uid, w = xw
+        new = apply_update(st, uid, w, variant)
+        skip = (uid == EMPTY) | (w == 0)
+        return jax.tree.map(lambda a, b: jnp.where(skip, a, b), st, new), None
+
+    state, _ = jax.lax.scan(step, state, (uids, net))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Queries / merge
+# ---------------------------------------------------------------------------
+
+def query(state: SketchState, item) -> jax.Array:
+    eq = state.ids == jnp.int32(item)
+    return jnp.where(eq.any(), jnp.where(eq, state.counts, 0).sum(), 0)
+
+
+@jax.jit
+def query_many(state: SketchState, items: jax.Array) -> jax.Array:
+    eq = state.ids[None, :] == items.astype(jnp.int32)[:, None]  # (n, k)
+    return jnp.where(eq, state.counts[None, :], 0).sum(axis=1) * eq.any(axis=1)
+
+
+def topk(state: SketchState, m: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-m (ids, counts) by estimated count (heavy-hitter report)."""
+    counts = jnp.where(state.ids == EMPTY, jnp.int32(-2**31), state.counts)
+    vals, idx = jax.lax.top_k(counts, m)
+    return state.ids[idx], vals
+
+
+@jax.jit
+def merge(a: SketchState, b: SketchState) -> SketchState:
+    """Mergeable-summaries merge (same rule as the reference `merge`).
+
+    Items in both: counts/errors add. Items in one: the other sketch bounds
+    the unseen frequency by its minCount (only if it is full). Keep top-k.
+    Used for cross-host reduction of data-parallel sketches.
+    """
+    k = a.ids.shape[0]
+
+    def mincount(s: SketchState):
+        full = (s.ids != EMPTY).all()
+        mc = jnp.where(s.ids == EMPTY, _INT_MAX, s.counts).min()
+        return jnp.where(full, mc, 0)
+
+    m_a, m_b = mincount(a), mincount(b)
+
+    ids = jnp.concatenate([a.ids, b.ids])
+    counts = jnp.concatenate([a.counts, b.counts])
+    errors = jnp.concatenate([a.errors, b.errors])
+    cross = jnp.concatenate([jnp.full((k,), m_b), jnp.full((k,), m_a)])
+    cross = jnp.where(ids == EMPTY, 0, cross).astype(jnp.int32)
+
+    # combine duplicates: sort by id; adjacent-equal pairs fold together.
+    order = jnp.argsort(ids)
+    ids_s = ids[order]
+    cnt_s = counts[order] + cross[order]
+    err_s = errors[order] + cross[order]
+    dup_prev = jnp.concatenate([jnp.zeros((1,), bool), ids_s[1:] == ids_s[:-1]])
+    # fold each duplicate's (count,error) into the *first* of its run.
+    seg = jnp.cumsum(~dup_prev) - 1
+    n = ids.shape[0]
+    cnt_m = jax.ops.segment_sum(cnt_s, seg, num_segments=n)
+    err_m = jax.ops.segment_sum(err_s, seg, num_segments=n)
+    id_m = jax.ops.segment_max(ids_s, seg, num_segments=n)
+    # duplicates were double-cross-counted: a duplicate pair means the item is
+    # in both sketches, so no cross term applies — subtract both cross adds.
+    had_dup = jax.ops.segment_sum(dup_prev.astype(jnp.int32), seg, num_segments=n)
+    cnt_m = cnt_m - had_dup * (m_a + m_b)
+    err_m = err_m - had_dup * (m_a + m_b)
+    n_seg = (~dup_prev).sum()
+    valid = (jnp.arange(n) < n_seg) & (id_m != EMPTY)
+    # top-k by merged count
+    key = jnp.where(valid, cnt_m, jnp.int32(-2**31))
+    _, idx = jax.lax.top_k(key, k)
+    sel_valid = valid[idx]
+    return SketchState(
+        ids=jnp.where(sel_valid, id_m[idx], EMPTY).astype(jnp.int32),
+        counts=jnp.where(sel_valid, cnt_m[idx], 0).astype(jnp.int32),
+        errors=jnp.where(sel_valid, err_m[idx], 0).astype(jnp.int32),
+    )
+
+
+def to_dict(state: SketchState) -> dict:
+    """Materialize to {item: (count, error)} for test comparison."""
+    out = {}
+    ids = jax.device_get(state.ids)
+    cnts = jax.device_get(state.counts)
+    errs = jax.device_get(state.errors)
+    for i, c, e in zip(ids, cnts, errs):
+        if i != -1:
+            out[int(i)] = (int(c), int(e))
+    return out

@@ -1,0 +1,174 @@
+"""Framework integrations of the SS± sketch: token statistics and MoE
+expert-load tracking over sliding windows (bounded deletions by design).
+
+Both classes follow the same pattern:
+  - insertions: each new batch's items are block-ingested (weighted);
+  - deletions: when a batch falls out of the ``window`` horizon, its
+    (aggregated) items are re-ingested with negated weights.
+Per window step at most 1/window of the live mass is deleted, so the
+stream is bounded-deletion with alpha = window/(window-1) per step and
+alpha <= 2 cumulatively for window >= 2 — the exact regime the paper's
+Thm 4 sizes capacity for (2*alpha/eps counters).
+
+The sketch state is pure JAX (repro.sketch.jax_sketch) and is part of the
+training checkpoint; sketches merge across data-parallel hosts with the
+mergeable-summaries merge (jax_sketch.merge), giving the global view the
+paper's distributed-setting footnote describes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sketch import jax_sketch as js
+
+
+def _aggregate_np(tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    uids, counts = np.unique(np.asarray(tokens).ravel(), return_counts=True)
+    return uids.astype(np.int32), counts.astype(np.int32)
+
+
+@dataclasses.dataclass
+class StatsReport:
+    items: np.ndarray
+    counts: np.ndarray
+    insertions: int
+    deletions: int
+
+    @property
+    def alpha_bound(self) -> float:
+        """Empirical alpha: I/(I-D) (paper Table 2)."""
+        live = max(self.insertions - self.deletions, 1)
+        return self.insertions / live
+
+
+class TokenStats:
+    """SS± heavy-token tracking over a sliding window of batches."""
+
+    def __init__(
+        self,
+        capacity: int = 4096,
+        window: int = 64,
+        variant: int = js.VARIANT_SSPM,
+        block: int = 8192,
+    ):
+        self.capacity = capacity
+        self.window = window
+        self.variant = variant
+        self.block = block
+        self.state = js.init(capacity)
+        self._fifo: Deque[Tuple[np.ndarray, np.ndarray]] = collections.deque()
+        self.insertions = 0
+        self.deletions = 0
+
+    def _ingest(self, uids: np.ndarray, weights: np.ndarray) -> None:
+        # pad to the fixed block length so the jitted update never retraces
+        n = len(uids)
+        for s in range(0, n, self.block):
+            chunk_u = uids[s : s + self.block]
+            chunk_w = weights[s : s + self.block]
+            pad = self.block - len(chunk_u)
+            if pad:
+                chunk_u = np.pad(chunk_u, (0, pad), constant_values=0)
+                chunk_w = np.pad(chunk_w, (0, pad), constant_values=0)
+            self.state = js.block_update(
+                self.state, jnp.asarray(chunk_u), jnp.asarray(chunk_w), self.variant
+            )
+
+    def update(self, tokens) -> None:
+        uids, counts = _aggregate_np(np.asarray(tokens))
+        self._ingest(uids, counts)
+        self.insertions += int(counts.sum())
+        self._fifo.append((uids, counts))
+        while len(self._fifo) > self.window:
+            du, dc = self._fifo.popleft()
+            self._ingest(du, -dc)
+            self.deletions += int(dc.sum())
+
+    def topk(self, m: int = 16) -> StatsReport:
+        ids, counts = js.topk(self.state, min(m, self.capacity))
+        return StatsReport(
+            items=np.asarray(ids), counts=np.asarray(counts),
+            insertions=self.insertions, deletions=self.deletions,
+        )
+
+    def query(self, items) -> np.ndarray:
+        return np.asarray(js.query_many(self.state, jnp.asarray(items, jnp.int32)))
+
+    def merge_from(self, other: "TokenStats") -> None:
+        """Cross-host reduction (mergeable summaries)."""
+        self.state = js.merge(self.state, other.state)
+        self.insertions += other.insertions
+        self.deletions += other.deletions
+
+    # checkpointing
+    def state_dict(self) -> dict:
+        return {
+            "ids": np.asarray(self.state.ids),
+            "counts": np.asarray(self.state.counts),
+            "errors": np.asarray(self.state.errors),
+            "insertions": self.insertions,
+            "deletions": self.deletions,
+            "fifo_u": [u for u, _ in self._fifo],
+            "fifo_c": [c for _, c in self._fifo],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = js.SketchState(
+            ids=jnp.asarray(d["ids"]), counts=jnp.asarray(d["counts"]),
+            errors=jnp.asarray(d["errors"]),
+        )
+        self.insertions = int(d["insertions"])
+        self.deletions = int(d["deletions"])
+        self._fifo = collections.deque(
+            (np.asarray(u), np.asarray(c)) for u, c in zip(d["fifo_u"], d["fifo_c"])
+        )
+
+
+class ExpertLoadStats:
+    """SS± over the (expert-id) stream of a MoE model.
+
+    Ingests the per-step ``expert_counts`` aux ((E,) int32 routed-token
+    counts) as weighted insertions; a sliding window of steps expires via
+    bounded deletions. Drives capacity-factor tuning: a persistent heavy
+    set => raise capacity for those experts / rebalance router.
+    """
+
+    def __init__(self, num_experts: int, capacity: Optional[int] = None,
+                 window: int = 128, variant: int = js.VARIANT_SSPM):
+        self.E = num_experts
+        self.capacity = capacity or max(8, num_experts // 2)
+        self.window = window
+        self.variant = variant
+        self.state = js.init(self.capacity)
+        self._fifo: Deque[np.ndarray] = collections.deque()
+        self._ids = jnp.arange(num_experts, dtype=jnp.int32)
+        self.insertions = 0
+        self.deletions = 0
+
+    def update(self, expert_counts) -> None:
+        w = jnp.asarray(expert_counts, jnp.int32)
+        self.state = js.block_update(self.state, self._ids, w, self.variant)
+        self.insertions += int(np.asarray(expert_counts).sum())
+        self._fifo.append(np.asarray(expert_counts))
+        while len(self._fifo) > self.window:
+            old = self._fifo.popleft()
+            self.state = js.block_update(
+                self.state, self._ids, -jnp.asarray(old, jnp.int32), self.variant
+            )
+            self.deletions += int(old.sum())
+
+    def hot_experts(self, phi: float = 0.125) -> StatsReport:
+        """Experts with windowed load >= phi * live mass (paper's phi-HH)."""
+        ids, counts = js.topk(self.state, self.capacity)
+        live = max(self.insertions - self.deletions, 1)
+        mask = np.asarray(counts) >= phi * live
+        return StatsReport(
+            items=np.asarray(ids)[mask], counts=np.asarray(counts)[mask],
+            insertions=self.insertions, deletions=self.deletions,
+        )

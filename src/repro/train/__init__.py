@@ -1,0 +1,17 @@
+"""Training runtime: step builder, trainer loop, checkpointing, fault
+tolerance, straggler mitigation, DP gradient exchange."""
+from .step import TrainState, build_train_step, abstract_state, state_axes, init_state
+from .trainer import Trainer, TrainerConfig
+from .straggler import StragglerMonitor, StragglerConfig
+
+__all__ = [
+    "TrainState",
+    "build_train_step",
+    "abstract_state",
+    "state_axes",
+    "init_state",
+    "Trainer",
+    "TrainerConfig",
+    "StragglerMonitor",
+    "StragglerConfig",
+]

@@ -1,0 +1,78 @@
+"""Data-parallel gradient exchange with top-k compression.
+
+The plain pjit path all-reduces every gradient leaf over the data axis
+(bytes = leaf size x steps). ``compressed_psum`` exchanges only the
+top-k (value, index) pairs per DP shard inside shard_map — an
+all-gather of 2k elements per rank instead of a full all-reduce — with
+error feedback keeping the residual local (convergence-preserving, DGC-
+style). For a leaf of n elements on an A-way axis:
+
+    dense all-reduce   ~ 2n bytes on the wire (ring)
+    compressed         ~ A x 2k x 4 bytes  (all-gather of pairs)
+
+i.e. a win whenever k << n/A. The collective-bytes reduction is visible
+directly in the lowered HLO and is benchmarked in
+benchmarks/bench_compression.py; it is an OPTIONAL path (off by default)
+because it changes numerics (top-k is lossy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.compress import topk_compress, topk_decompress
+
+F32 = jnp.float32
+
+
+def compressed_psum_leaf(g: jax.Array, residual: jax.Array, k: int, axis: str):
+    """Inside shard_map: compress (g+residual), all-gather pairs, sum.
+
+    Returns (summed dense gradient, new residual). Leaves smaller than
+    4k stay dense (compression would not reduce bytes)."""
+    n = g.size
+    if n <= 4 * k:
+        return jax.lax.psum(g.astype(F32), axis), residual
+    corrected = g.astype(F32) + residual
+    flat = corrected.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    new_residual = flat.at[idx].set(0.0).reshape(g.shape)
+    all_vals = jax.lax.all_gather(vals, axis)        # (A, k)
+    all_idx = jax.lax.all_gather(idx, axis)          # (A, k)
+    dense = jnp.zeros((n,), F32).at[all_idx.reshape(-1)].add(all_vals.reshape(-1))
+    return dense.reshape(g.shape), new_residual
+
+
+def build_compressed_allreduce(mesh, k_frac: float = 0.01, axis: str = "data"):
+    """Returns allreduce(grads, residuals) -> (grads_summed, residuals).
+
+    grads are per-DP-shard gradients (shard_map over ``axis``); all other
+    dims replicated. Use at smoke scale / benchmarks; the production path
+    keeps GSPMD's dense all-reduce unless the collective term dominates.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def allreduce(grads, residuals):
+        def body(g_tree, r_tree):
+            def per_leaf(g, r):
+                k = max(1, int(g.size * k_frac))
+                return compressed_psum_leaf(g, r, k, axis)
+            pairs = jax.tree.map(per_leaf, g_tree, r_tree)
+            gs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            rs = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            return gs, rs
+
+        specs_in = jax.tree.map(lambda _: P(), grads)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(specs_in, specs_in),
+            out_specs=(specs_in, specs_in),
+            check_rep=False,
+        )(grads, residuals)
+
+    return allreduce

@@ -1,0 +1,135 @@
+"""train_step builder.
+
+One fused jitted step: loss -> grad -> clip -> AdamW -> sketch feeds.
+State/sharding contracts:
+  - params: bf16, logical axes from model.init (TP over "model",
+    FSDP over "data"/"pod" on the embed dim).
+  - opt state: fp32 master + moments, same logical axes as params.
+  - batch: tokens/labels sharded ("batch" -> (pod, data)).
+  - expert_counts aux feeds the SS± MoE-load sketch (repro.sketch.stats)
+    OUTSIDE the step (host callback-free; the counts are tiny).
+
+``abstract_state`` builds the ShapeDtypeStruct state + logical-axes trees
+without allocating — the dry-run and the checkpoint restorer share it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.optim import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import AdamWConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def state_axes(param_axes) -> TrainState:
+    """Logical-axes tree mirroring TrainState (for sharding specs)."""
+    return TrainState(
+        params=param_axes,
+        opt=AdamWState(
+            step="",                     # scalar, replicated
+            master=param_axes,
+            m=param_axes,
+            v=param_axes,
+        ),
+    )
+
+
+def abstract_state(cfg: ModelConfig, key=None):
+    """(TrainState of ShapeDtypeStructs, TrainState of logical axes).
+
+    Runs init under eval_shape — no allocation at any model size.
+    """
+    model = build_model(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def f(k):
+        params, axes = model.init(k)
+        captured["axes"] = axes
+        return TrainState(params=params, opt=adamw_init(params))
+
+    sds = jax.eval_shape(f, key)
+    return sds, state_axes(captured["axes"])
+
+
+def init_state(cfg: ModelConfig, key) -> Tuple[TrainState, TrainState]:
+    """Concrete (state, axes) — smoke scale."""
+    model = build_model(cfg)
+    params, axes = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params)), state_axes(axes)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    remat: bool = True,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches`` > 1 runs gradient accumulation: the global batch is
+    split into M slices scanned sequentially with fp32 grad accumulation
+    — activation temp memory scales ~1/M at the cost of M smaller (lower
+    arithmetic-intensity) matmuls. The standard fit-the-HBM knob; the
+    §Perf log records the measured trade-off per cell.
+    """
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+            expert_counts = aux["expert_counts"]
+        else:
+            M = microbatches
+
+            def split(x):
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            E = max(cfg.num_experts, 1)
+
+            def body(carry, mslice):
+                acc_g, acc_l, acc_c = carry
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mslice
+                )
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / M, acc_g, g
+                )
+                return (acc_g, acc_l + l / M, acc_c + aux["expert_counts"]), None
+
+            init = (zero_g, jnp.zeros((), jnp.float32), jnp.zeros((E,), jnp.int32))
+            if cfg.unroll_scan:  # dry-run depth probes: no hidden loops
+                carry = init
+                for i in range(M):
+                    carry, _ = body(carry, jax.tree.map(lambda x: x[i], mb))
+                grads, loss, expert_counts = carry
+            else:
+                (grads, loss, expert_counts), _ = jax.lax.scan(body, init, mb)
+        params, opt, metrics = adamw_update(grads, state.opt, state.params, opt_cfg)
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "expert_counts": expert_counts,
+            **metrics,
+        }
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

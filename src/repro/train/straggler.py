@@ -1,0 +1,68 @@
+"""Straggler detection: per-step wall-time EWMA + z-score.
+
+At real multi-host scale each host reports its step time into this
+monitor (an all-gather of one float); a host whose time is a sustained
+z > threshold outlier triggers the ``on_straggler`` hook (log, alert,
+or initiate hot-spare replacement). In single-process CI the monitor is
+driven by injected delays (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma_alpha: float = 0.1
+    z_threshold: float = 3.0
+    min_steps: int = 8           # warmup before detection
+    sustained: int = 2           # consecutive outliers before firing
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        cfg: StragglerConfig = StragglerConfig(),
+        on_straggler: Optional[Callable[[int, float, float], None]] = None,
+    ):
+        self.cfg = cfg
+        self.on_straggler = on_straggler or (lambda host, t, z: None)
+        self._mean: Dict[int, float] = {}
+        self._var: Dict[int, float] = {}
+        self._steps: Dict[int, int] = {}
+        self._outlier_run: Dict[int, int] = {}
+        self.flagged: List[int] = []
+
+    def observe(self, host: int, step_time: float) -> Optional[float]:
+        """Record one host's step time; returns its z-score (or None in
+        warmup). Fires on_straggler on sustained outliers."""
+        a = self.cfg.ewma_alpha
+        n = self._steps.get(host, 0)
+        if n == 0:
+            self._mean[host] = step_time
+            self._var[host] = 0.0
+            self._steps[host] = 1
+            return None
+        mean = self._mean[host]
+        var = self._var[host]
+        z = None
+        if n >= self.cfg.min_steps and var > 0:
+            z = (step_time - mean) / (var ** 0.5)
+            if z > self.cfg.z_threshold:
+                run = self._outlier_run.get(host, 0) + 1
+                self._outlier_run[host] = run
+                if run >= self.cfg.sustained:
+                    if host not in self.flagged:
+                        self.flagged.append(host)
+                    self.on_straggler(host, step_time, z)
+            else:
+                self._outlier_run[host] = 0
+        # EWMA update (skip updating stats with extreme outliers so a
+        # straggler does not poison its own baseline)
+        if z is None or z <= self.cfg.z_threshold:
+            delta = step_time - mean
+            self._mean[host] = mean + a * delta
+            self._var[host] = (1 - a) * (var + a * delta * delta)
+        self._steps[host] = n + 1
+        return z

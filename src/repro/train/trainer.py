@@ -1,0 +1,194 @@
+"""Trainer loop: step, log, checkpoint, resume, preemption, stragglers.
+
+Single-controller (pjit/GSPMD) posture: the loop below is what each
+controller runs; at scale the same code drives multi-host jax with a
+shared mesh. Everything that must survive a restart — TrainState, data
+cursor, host RNG, SS± sketch states — goes through train.checkpoint.
+
+Fault tolerance:
+  - save every ``ckpt_every`` steps (atomic, keep-N);
+  - SIGTERM/SIGINT => finish the in-flight step, save, exit cleanly
+    (preemption-safe: GKE/Borg-style 30s warning is plenty);
+  - on start, auto-resume from the latest checkpoint if present;
+  - elastic: the checkpoint restores onto whatever mesh is active.
+
+Straggler mitigation: per-step wall time feeds StragglerMonitor; the
+default hook logs, a deployment would wire replace/evict logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, TokenPipeline
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import act_specs, param_specs, use_mesh
+from repro.sketch.stats import ExpertLoadStats, TokenStats
+from repro.train import checkpoint as ckpt
+from repro.train.step import TrainState, build_train_step, init_state
+from repro.train.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    milestone_every: int = 0
+    log_every: int = 10
+    seed: int = 0
+    # sketch integration
+    token_stats_capacity: int = 1024
+    token_stats_window: int = 32
+    track_tokens: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        data_cfg: DataConfig,
+        tcfg: TrainerConfig = TrainerConfig(),
+        opt_cfg: AdamWConfig = AdamWConfig(),
+        mesh=None,
+        rules=None,
+    ):
+        self.cfg, self.data_cfg, self.tcfg = cfg, data_cfg, tcfg
+        self.mesh, self.rules = mesh, rules
+        self.pipeline = TokenPipeline(data_cfg)
+        self.monitor = StragglerMonitor()
+        self.token_stats = TokenStats(
+            capacity=tcfg.token_stats_capacity, window=tcfg.token_stats_window
+        ) if tcfg.track_tokens else None
+        self.expert_stats = (
+            ExpertLoadStats(cfg.num_experts) if cfg.num_experts else None
+        )
+        self._stop = False
+        self.metrics_log: list = []
+
+        with use_mesh(mesh, rules):
+            self.state, self.axes = init_state(cfg, jax.random.PRNGKey(tcfg.seed))
+            step_fn = build_train_step(cfg, opt_cfg)
+            if mesh is not None:
+                sspec = param_specs(self.state, self.axes)
+                self._step = jax.jit(step_fn, in_shardings=(sspec, None),
+                                     donate_argnums=(0,))
+            else:
+                self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.step_num = 0
+
+    # -- preemption ---------------------------------------------------------
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            self._stop = True  # finish the in-flight step, then save+exit
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # -- checkpoint glue ------------------------------------------------------
+    def _extra_state(self) -> Dict:
+        extra: Dict[str, Any] = {"pipeline": self.pipeline.state()}
+        if self.token_stats is not None:
+            ts = self.token_stats.state_dict()
+            extra["token_stats_meta"] = {
+                "insertions": ts["insertions"], "deletions": ts["deletions"],
+            }
+            self._sketch_arrays = ts
+        return extra
+
+    def save(self) -> Path:
+        payload = {"train": self.state}
+        if self.token_stats is not None:
+            sd = self.token_stats.state_dict()
+            payload["sketch"] = {
+                "ids": jnp.asarray(sd["ids"]),
+                "counts": jnp.asarray(sd["counts"]),
+                "errors": jnp.asarray(sd["errors"]),
+            }
+        return ckpt.save(
+            self.tcfg.ckpt_dir, self.step_num, payload,
+            extra={
+                "pipeline": self.pipeline.state(),
+                "step": self.step_num,
+                "sketch_meta": {
+                    "insertions": self.token_stats.insertions,
+                    "deletions": self.token_stats.deletions,
+                } if self.token_stats is not None else {},
+            },
+            keep=self.tcfg.keep, milestone_every=self.tcfg.milestone_every,
+        )
+
+    def try_resume(self) -> bool:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        payload = {"train": self.state}
+        axes = {"train": self.axes}
+        if self.token_stats is not None:
+            sd = self.token_stats.state_dict()
+            payload["sketch"] = {
+                "ids": jnp.asarray(sd["ids"]),
+                "counts": jnp.asarray(sd["counts"]),
+                "errors": jnp.asarray(sd["errors"]),
+            }
+            axes["sketch"] = {"ids": "", "counts": "", "errors": ""}
+        with use_mesh(self.mesh, self.rules):
+            restored, extra = ckpt.restore(self.tcfg.ckpt_dir, payload, axes=axes)
+        self.state = restored["train"]
+        if self.token_stats is not None and "sketch" in restored:
+            from repro.sketch.jax_sketch import SketchState
+            s = restored["sketch"]
+            self.token_stats.state = SketchState(s["ids"], s["counts"], s["errors"])
+            meta = extra.get("sketch_meta", {})
+            self.token_stats.insertions = int(meta.get("insertions", 0))
+            self.token_stats.deletions = int(meta.get("deletions", 0))
+        self.pipeline.restore(extra["pipeline"])
+        self.step_num = int(extra["step"])
+        return True
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict:
+        steps = steps if steps is not None else self.tcfg.total_steps
+        target = self.step_num + steps
+        with use_mesh(self.mesh, self.rules):
+            while self.step_num < target and not self._stop:
+                batch_np = self.pipeline.next_batch()
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.time()
+                self.state, metrics = self._step(self.state, batch)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                self.monitor.observe(0, dt)
+                self.step_num += 1
+
+                if self.token_stats is not None:
+                    self.token_stats.update(batch_np["tokens"])
+                if self.expert_stats is not None:
+                    self.expert_stats.update(metrics["expert_counts"])
+
+                if self.step_num % self.tcfg.log_every == 0 or self.step_num == target:
+                    rec = {
+                        "step": self.step_num,
+                        "loss": float(metrics["loss"]),
+                        "grad_norm": float(metrics["grad_norm"]),
+                        "step_time_s": dt,
+                    }
+                    self.metrics_log.append(rec)
+                if self.tcfg.ckpt_every and self.step_num % self.tcfg.ckpt_every == 0:
+                    self.save()
+        if self._stop:  # preempted: final save
+            self.save()
+        return {
+            "final_step": self.step_num,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "preempted": self._stop,
+        }

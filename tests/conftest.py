@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `import repro` work regardless of PYTHONPATH (tests are also run as
+# `PYTHONPATH=src pytest tests/`). Never touches jax device config — the
+# 512-device dry-run sets XLA_FLAGS itself and runs in its own process.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

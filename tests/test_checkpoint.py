@@ -1,0 +1,101 @@
+"""Checkpoint tests: atomicity, keep-N, round-trip, elastic reshard."""
+import json
+import subprocess
+import sys
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt
+
+
+def _state():
+    return {
+        "w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "nested": {"m": jnp.ones((2, 2), jnp.float32), "step": jnp.asarray(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(tmp_path, 5, s, extra={"cursor": 42})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s)
+    restored, extra = ckpt.restore(tmp_path, like)
+    assert extra["cursor"] == 42
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_keep_n_and_milestones(tmp_path):
+    s = _state()
+    for step in range(1, 11):
+        ckpt.save(tmp_path, step, s, keep=2, milestone_every=5)
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    steps = [int(n.split("_")[1]) for n in names]
+    assert 9 in steps and 10 in steps           # keep last 2
+    assert 5 in steps                            # milestone survives GC
+    assert 1 not in steps and 2 not in steps
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    ckpt.save(tmp_path, 1, _state())
+    assert not list(tmp_path.glob("tmp.*"))
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, _state())
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"w": jnp.ones((3, 3))})
+
+
+_ELASTIC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint as ckpt
+from repro.parallel.sharding import use_mesh, default_rules
+
+tmp = sys.argv[1]
+# save under a (4, 2) mesh with the param sharded over both axes
+mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(mesh1, P("data", "model")))
+ckpt.save(tmp, 1, {"w": xs})
+
+# restore under a DIFFERENT (2, 4) mesh -> elastic reshard
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+with use_mesh(mesh2, default_rules()):
+    like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    restored, _ = ckpt.restore(tmp, like, axes={"w": "embed,ff"})
+r = restored["w"]
+assert r.sharding.mesh.shape == {"data": 2, "model": 4}, r.sharding
+np.testing.assert_array_equal(np.asarray(r), np.asarray(x))
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Save on a (4,2) mesh, restore on (2,4) — in a subprocess so the
+    8-device XLA flag never leaks into this test process."""
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _ELASTIC, str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,336 @@
+"""Paper-fidelity tests for SpaceSaving± (worked examples + theorems).
+
+Covers: §3.3 and §3.5 worked examples verbatim, Lemmas 1/2/4/6/7/9 and
+Theorems 2/3/4/5 as property-based tests over random bounded-deletion
+streams (hypothesis), plus mergeability.
+"""
+import math
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.spacesaving import (
+    LazySpaceSavingPM,
+    SpaceSaving,
+    SpaceSavingPM,
+    capacity_for,
+)
+from repro.core.streams import bounded_stream, exact_stats, heavy_hitters
+
+A, B, C = "A", "B", "C"
+PAPER_STREAM = [(A, 1), (A, 1), (A, 1), (C, 1), (A, -1), (B, 1), (A, 1), (C, -1), (B, -1)]
+
+
+class TestWorkedExamples:
+    def test_section_3_3_lazy(self):
+        """Figure 1: Lazy SS± capacity 2 on (A,A,A,C,-A,B,A,-C,-B)."""
+        sk = LazySpaceSavingPM(2)
+        sk.process(PAPER_STREAM)
+        entries = {it: (c, e) for it, c, e in sk.entries()}
+        assert entries[A] == (3, 0)
+        assert entries[B] == (1, 1)  # overestimates B by exactly 1
+        assert sk.query(A) == 3 and sk.query(B) == 1 and sk.query(C) == 0
+        # "The maximum frequency estimation error is 1"
+        true = {A: 3, B: 0, C: 0}
+        max_err = max(abs(sk.query(x) - true[x]) for x in true)
+        assert max_err == 1
+
+    def test_section_3_5_ss_pm(self):
+        """Figure 2: SS± capacity 2 on the same stream -> zero error."""
+        sk = SpaceSavingPM(2)
+        sk.process(PAPER_STREAM)
+        entries = {it: (c, e) for it, c, e in sk.entries()}
+        assert entries[A] == (3, 0)
+        assert entries[B] == (0, 0)
+        true = {A: 3, B: 0, C: 0}
+        max_err = max(abs(sk.query(x) - true[x]) for x in true)
+        assert max_err == 0
+
+    def test_section_3_5_intermediate_states(self):
+        """The sketch image after the first 7 items matches Figure 2."""
+        sk = SpaceSavingPM(2)
+        sk.process(PAPER_STREAM[:7])
+        entries = {it: (c, e) for it, c, e in sk.entries()}
+        assert entries[A] == (3, 0)
+        assert entries[B] == (2, 1)  # err = old minCount of C(=1), count = 2
+        assert sk.unaccounted_deletions == 0
+
+
+class TestInsertionOnlyLemmas:
+    def test_counts_sum_equals_stream_length(self):
+        # "the sum of all counts in SpaceSaving is equal to |F|_1"
+        rng = np.random.default_rng(0)
+        items = rng.zipf(1.3, size=2000) % 64
+        sk = SpaceSaving(10)
+        for x in items:
+            sk.insert(int(x))
+        assert sum(c for _, c, _ in sk.entries()) == len(items)
+
+    def test_lemma1_no_underestimate(self):
+        rng = np.random.default_rng(1)
+        items = (rng.zipf(1.2, size=3000) % 128).tolist()
+        sk = SpaceSaving(16)
+        for x in items:
+            sk.insert(x)
+        freq = Counter(items)
+        for it, c, e in sk.entries():
+            assert c >= freq[it]
+            assert c - e <= freq[it]  # count - error is a lower bound
+
+    def test_lemma2_min_count(self):
+        rng = np.random.default_rng(2)
+        items = (rng.integers(0, 1000, size=5000)).tolist()
+        k = 50
+        sk = SpaceSaving(k)
+        for x in items:
+            sk.insert(x)
+        assert sk.min_count <= len(items) / k
+
+    def test_lemma4_error_sum_bounds_unmonitored_mass(self):
+        rng = np.random.default_rng(3)
+        items = (rng.zipf(1.1, size=4000) % 256).tolist()
+        sk = SpaceSaving(12)
+        for x in items:
+            sk.insert(x)
+        freq = Counter(items)
+        monitored = {it for it, _, _ in sk.entries()}
+        unmonitored_mass = sum(c for it, c in freq.items() if it not in monitored)
+        err_sum = sum(e for _, _, e in sk.entries())
+        assert err_sum >= unmonitored_mass
+
+
+def _random_bounded_stream(draw_seed, n_insert, alpha, universe, order):
+    ratio = 1.0 - 1.0 / alpha
+    return bounded_stream(
+        "zipf",
+        n_insert,
+        delete_ratio=ratio,
+        universe=universe,
+        skew=1.1,
+        order=order,
+        seed=draw_seed,
+    )
+
+
+@st.composite
+def bounded_streams(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(50, 800))
+    alpha = draw(st.sampled_from([1.0, 1.5, 2.0, 4.0]))
+    universe = draw(st.sampled_from([16, 64, 256]))
+    order = draw(st.sampled_from(["inserts_first", "interleaved"]))
+    eps = draw(st.sampled_from([0.05, 0.1, 0.2]))
+    return _random_bounded_stream(seed, n, alpha, universe, order), alpha, eps
+
+
+class TestTheorems:
+    @settings(max_examples=40, deadline=None)
+    @given(bounded_streams())
+    def test_theorem2_lazy_error_bound(self, case):
+        stream, alpha, eps = case
+        stats = exact_stats(stream)
+        assert stats.is_bounded(alpha)
+        sk = LazySpaceSavingPM(capacity_for(eps, alpha, "lazy"))
+        sk.process(stream)
+        bound = eps * stats.residual_mass
+        for item in set(stats.frequencies):
+            assert abs(sk.query(item) - stats.frequencies[item]) <= bound
+
+    # NOTE: Lemma 6 / Theorem 3 are exercised on the paper's experimental
+    # order (all insertions before deletions). On fully interleaved streams
+    # Lemma 6 can be violated — see TestPaperCaveats below.
+    @settings(max_examples=40, deadline=None)
+    @given(bounded_streams())
+    def test_lemma6_lazy_never_underestimates(self, case):
+        stream, alpha, eps = case
+        stream = stream[np.argsort(-stream[:, 1], kind="stable")]  # inserts first
+        stats = exact_stats(stream)
+        sk = LazySpaceSavingPM(capacity_for(eps, alpha, "lazy"))
+        sk.process(stream)
+        for it, c, _ in sk.entries():
+            assert c >= stats.frequencies.get(it, 0)
+
+    @settings(max_examples=40, deadline=None)
+    @given(bounded_streams())
+    def test_theorem3_lazy_full_recall(self, case):
+        stream, alpha, eps = case
+        stream = stream[np.argsort(-stream[:, 1], kind="stable")]  # inserts first
+        stats = exact_stats(stream)
+        sk = LazySpaceSavingPM(capacity_for(eps, alpha, "lazy"))
+        sk.process(stream)
+        thr = eps * stats.residual_mass
+        reported = sk.frequent_items(thr)
+        for hh in heavy_hitters(stats, eps):
+            assert hh in reported
+
+    @settings(max_examples=40, deadline=None)
+    @given(bounded_streams())
+    def test_theorem4_ss_pm_error_bound(self, case):
+        stream, alpha, eps = case
+        stats = exact_stats(stream)
+        sk = SpaceSavingPM(capacity_for(eps, alpha, "ss_pm"))
+        sk.process(stream)
+        assert sk.unaccounted_deletions == 0
+        bound = eps * stats.residual_mass
+        for item in set(stats.frequencies):
+            assert abs(sk.query(item) - stats.frequencies[item]) <= bound
+
+    @settings(max_examples=40, deadline=None)
+    @given(bounded_streams())
+    def test_theorem5_ss_pm_full_recall_at_positive_report(self, case):
+        stream, alpha, eps = case
+        stats = exact_stats(stream)
+        sk = SpaceSavingPM(capacity_for(eps, alpha, "ss_pm"))
+        sk.process(stream)
+        reported = sk.guaranteed_frequent_items()
+        thr = eps * stats.residual_mass
+        for it, f in stats.frequencies.items():
+            if f > thr:  # strictly frequent items must be reported
+                assert it in reported
+
+    @settings(max_examples=30, deadline=None)
+    @given(bounded_streams())
+    def test_lemma7_min_count_bound(self, case):
+        stream, alpha, eps = case
+        stats = exact_stats(stream)
+        k = capacity_for(eps, alpha, "ss_pm")  # 2*alpha/eps
+        sk = SpaceSavingPM(k)
+        sk.process(stream)
+        if len(sk) == sk.capacity:  # bound is about the full sketch
+            assert sk.min_count <= stats.insertions / k
+
+    @settings(max_examples=30, deadline=None)
+    @given(bounded_streams())
+    def test_lemma9_error_sum_and_nonneg(self, case):
+        stream, alpha, eps = case
+        stats = exact_stats(stream)
+        sk = SpaceSavingPM(capacity_for(eps, alpha, "ss_pm"))
+        sk.process(stream)
+        monitored = {it for it, _, _ in sk.entries()}
+        unmonitored_mass = sum(
+            c for it, c in stats.frequencies.items() if it not in monitored
+        )
+        err_sum = sum(e for _, _, e in sk.entries())
+        assert err_sum >= unmonitored_mass
+        assert all(e >= 0 for _, _, e in sk.entries())
+
+
+class TestWeightedUpdates:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 32))
+    def test_weighted_insert_equals_repeated(self, seed, k):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 32)), int(rng.integers(1, 5))) for _ in range(200)]
+        a, b = SpaceSaving(k), SpaceSaving(k)
+        for item, w in ops:
+            a.insert_weighted(item, w)
+            for _ in range(w):
+                b.insert(item)
+        # Weighted insert is NOT defined to be identical to repeated unit
+        # inserts (a replacement absorbs the whole weight at once), but the
+        # estimates must stay within each other's guarantee envelope:
+        freq = Counter()
+        for item, w in ops:
+            freq[item] += w
+        total = sum(w for _, w in ops)
+        for sk in (a, b):
+            for it in freq:
+                assert abs(sk.query(it) - freq[it]) <= total / k + 4
+        # sum of counts conserved exactly for both
+        assert sum(c for _, c, _ in a.entries()) == total
+        assert sum(c for _, c, _ in b.entries()) == total
+
+
+class TestMerge:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_merge_preserves_overestimate_and_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        k = 24
+        s1 = (rng.zipf(1.3, 1500) % 96).tolist()
+        s2 = (rng.zipf(1.3, 1500) % 96).tolist()
+        a, b = SpaceSaving(k), SpaceSaving(k)
+        for x in s1:
+            a.insert(x)
+        for x in s2:
+            b.insert(x)
+        m = a.merge(b)
+        freq = Counter(s1) + Counter(s2)
+        for it, c, e in m.entries():
+            assert c >= freq.get(it, 0)  # still never underestimates
+        # additive error bound: eps1*N1 + eps2*N2 ~ (N1+N2)/k (+slack for ties)
+        bound = (len(s1) + len(s2)) / k * 2
+        for it in freq:
+            assert abs(m.query(it) - freq[it]) <= bound
+
+    def test_merge_lazy_bounded_deletion(self):
+        k = 32
+        st1 = bounded_stream("zipf", 1000, 0.4, universe=64, seed=1)
+        st2 = bounded_stream("zipf", 1000, 0.4, universe=64, seed=2)
+        a, b = LazySpaceSavingPM(k), LazySpaceSavingPM(k)
+        a.process(st1)
+        b.process(st2)
+        m = a.merge(b)
+        f = exact_stats(np.concatenate([st1, st2])).frequencies
+        for it, c, _ in m.entries():
+            assert c >= f.get(it, 0)
+
+
+class TestPaperCaveats:
+    """Findings beyond the paper's text, kept as executable documentation."""
+
+    def test_lazy_can_underestimate_monitored_items_when_interleaved(self):
+        """Lemma 6 states Lazy SS± never underestimates monitored items; the
+        proof leans on insertion-only Lemma 1, whose minCount-monotonicity
+        argument breaks once monitored deletions can *lower* minCount between
+        an eviction and a re-insertion. Counterexample (capacity 2):
+
+          5×a, 6×b, c (evicts a @ minCount 5), 5×(-b) (monitored deletes
+          drive minCount to 1), a (re-insert @ minCount 1)
+          -> count(a) = 2 < f(a) = 6.
+
+        The stream is bounded-deletion (I=13, D=5, alpha=13/8) and the Thm 2
+        error bound eps(I-D) = (alpha/2)*8 = 6.5 still holds — only the
+        no-underestimate claim is order-sensitive. The paper's experiments
+        place all insertions before deletions, where Lemma 6 is valid
+        (see test_lemma6_lazy_never_underestimates).
+        """
+        sk = LazySpaceSavingPM(2)
+        stream = (
+            [("a", 1)] * 5 + [("b", 1)] * 6 + [("c", 1)]
+            + [("b", -1)] * 5 + [("a", 1)]
+        )
+        for it, sg in stream:
+            sk.update(it, sg)
+        f_a = 6  # a inserted 6 times, never deleted
+        assert "a" in sk
+        assert sk.query("a") < f_a          # Lemma 6 violated (interleaved)
+        I, D = 13, 5
+        alpha = I / (I - D)
+        bound = (alpha / 2) * (I - D)       # eps = alpha/capacity
+        assert abs(sk.query("a") - f_a) <= bound  # Thm 2 still holds
+
+
+class TestEdgeCases:
+    def test_capacity_one(self):
+        sk = SpaceSavingPM(1)
+        for x in [1, 1, 2, 1]:
+            sk.insert(x)
+        assert sk.query(1) >= 3  # majority-style behavior
+
+    def test_delete_monitored_to_zero(self):
+        sk = SpaceSavingPM(4)
+        sk.insert(7)
+        sk.delete(7)
+        assert sk.query(7) == 0
+
+    def test_strict_violation_detected_by_stream_accounting(self):
+        with pytest.raises(ValueError):
+            exact_stats([(1, 1), (2, -1)])
+
+    def test_plain_spacesaving_rejects_deletes(self):
+        sk = SpaceSaving(4)
+        with pytest.raises(NotImplementedError):
+            sk.delete(3)

@@ -1,0 +1,43 @@
+"""Dry-run machinery integration test.
+
+Runs one real (small-arch) cell through repro.launch.dryrun in a
+subprocess (the 512-device XLA flag must not leak into this process)
+and checks the artifact contract: compile OK, roofline terms present
+and positive, collective parse non-trivial, probe correction applied.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3_0_6b", "--shape", "train_4k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.loads((tmp_path / "qwen3_0_6b__train_4k__single.json").read_text())
+    assert rec["ok"], rec.get("error")
+    assert rec["chips"] == 256
+    t = rec["roofline"]
+    for k in ("compute_s", "memory_s", "collective_s"):
+        assert t[k] > 0, (k, t)
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert 0 < t["useful_ratio"] < 2.0
+    assert rec["collectives"]["total"] > 0
+    assert "cost_corrected" in rec      # probe correction ran
+    # corrected flops must exceed raw (scan bodies re-weighted by depth)
+    assert rec["cost_corrected"]["flops"] > rec["cost_raw"]["flops"]
+    assert rec["memory"].get("temp_size_in_bytes", 0) > 0

@@ -1,0 +1,122 @@
+"""Tests for the §3.6 indexed heaps and the baseline sketches."""
+import heapq
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import CSSS, CountMedian, CountMin, MisraGries
+from repro.core.heaps import IndexedHeap
+from repro.core.streams import bounded_stream, exact_stats
+
+
+class TestIndexedHeap:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 20), st.integers(0, 100)), min_size=1, max_size=60))
+    def test_random_ops_match_reference(self, ops):
+        h = IndexedHeap(sign=+1)
+        ref = {}
+        for item, key in ops:
+            if item in ref:
+                ref[item] = key
+                h.update_key(item, key)
+            else:
+                ref[item] = key
+                h.push(item, key)
+            h.check_invariants()
+            top_item, top_key = h.peek()
+            assert top_key == min(ref.values())
+            assert ref[top_item] == top_key
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 20), st.integers(0, 100)), min_size=1, max_size=60))
+    def test_max_heap(self, ops):
+        h = IndexedHeap(sign=-1)
+        ref = {}
+        for item, key in ops:
+            if item in ref:
+                h.update_key(item, key)
+            else:
+                h.push(item, key)
+            ref[item] = key
+            h.check_invariants()
+            _, top_key = h.peek()
+            assert top_key == max(ref.values())
+
+    def test_remove_and_replace_top(self):
+        h = IndexedHeap(sign=+1)
+        for i, k in enumerate([5, 3, 8, 1, 9]):
+            h.push(i, k)
+        h.remove(3)  # removes key=1
+        assert h.peek() == (1, 3)
+        old = h.replace_top(99, 100)
+        assert old == 1
+        h.check_invariants()
+        assert 99 in h and 1 not in h
+
+
+class TestMisraGries:
+    def test_underestimates_and_bound(self):
+        rng = np.random.default_rng(0)
+        items = (rng.zipf(1.3, 4000) % 100).tolist()
+        k = 25
+        mg = MisraGries(k)
+        for x in items:
+            mg.insert(x)
+        freq = Counter(items)
+        for it in freq:
+            est = mg.query(it)
+            assert est <= freq[it]
+            assert freq[it] - est <= len(items) / (k + 1) + 1
+
+
+class TestCountMin:
+    def test_never_underestimates_turnstile(self):
+        stream = bounded_stream("zipf", 3000, 0.5, universe=256, seed=5)
+        stats = exact_stats(stream)
+        cm = CountMin.from_accuracy(0.02, 0.01, seed=3)
+        cm.process(stream)
+        for it, f in stats.frequencies.items():
+            assert cm.query(int(it)) >= f
+
+    def test_error_bound_whp(self):
+        stream = bounded_stream("zipf", 5000, 0.0, universe=512, seed=6)
+        stats = exact_stats(stream)
+        eps = 0.02
+        cm = CountMin.from_accuracy(eps, 1e-3, seed=4)
+        cm.process(stream)
+        items = np.asarray(list(stats.frequencies))
+        est = cm.query_many(items)
+        viol = sum(
+            1 for it, e in zip(items, est) if e - stats.frequencies[int(it)] > eps * stats.residual_mass
+        )
+        assert viol <= max(2, 0.02 * len(items))
+
+
+class TestCountMedian:
+    def test_roughly_unbiased(self):
+        stream = bounded_stream("zipf", 4000, 0.5, universe=256, seed=7)
+        stats = exact_stats(stream)
+        ests = []
+        for s in range(7):
+            cs = CountMedian.from_accuracy(0.05, 0.05, seed=s)
+            cs.process(stream)
+            hot = max(stats.frequencies, key=stats.frequencies.get)
+            ests.append(cs.query(int(hot)) - stats.frequencies[hot])
+        # signed errors should straddle zero-ish (unbiased estimator)
+        assert abs(np.mean(ests)) <= 0.05 * stats.residual_mass
+
+
+class TestCSSS:
+    def test_bounded_deletion_estimation(self):
+        stream = bounded_stream("zipf", 20000, 0.5, universe=1 << 12, seed=8)
+        stats = exact_stats(stream)
+        cs = CSSS(
+            eps=0.05, delta=0.05, alpha=2.0, universe=1 << 12,
+            stream_len=len(stream), seed=9,
+        )
+        cs.process(stream)
+        hot = max(stats.frequencies, key=stats.frequencies.get)
+        est = cs.query(int(hot))
+        assert abs(est - stats.frequencies[hot]) <= 0.15 * stats.residual_mass + 10

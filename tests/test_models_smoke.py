@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and finiteness (no NaNs)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    ks = jax.random.split(key, 4)
+    text = S - cfg.vision_tokens
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, text), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, text), 0, cfg.vocab_size),
+    }
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(ks[2], (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[3], (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, axes = model.init(key)
+    # axes tree mirrors params tree exactly
+    assert jax.tree.structure(params) == jax.tree.structure(axes)
+    for p, a in zip(jax.tree.leaves(params), jax.tree.leaves(axes)):
+        assert len(a.split(",")) == p.ndim, (a, p.shape)
+
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(lambda p, b: model.forward(
+        p, b["tokens"], vision=b.get("vision"), frames=b.get("frames")
+    ))(params, batch)
+    text = S - cfg.vision_tokens
+    assert logits.shape == (B, S if not cfg.vision_tokens else S, cfg.vocab_size) or \
+           logits.shape == (B, text + cfg.vision_tokens, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    @jax.jit
+    def step(params, batch):
+        (l, aux), g = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params = jax.tree.map(lambda p, gg: p - 0.01 * gg.astype(p.dtype), params, g)
+        return params, l
+
+    params2, loss1 = step(params, batch)
+    assert bool(jnp.isfinite(loss1)), f"{arch} loss not finite"
+    # loss must move (params actually update)
+    loss2 = model.loss(params2, batch)[0]
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) != float(loss1)
+
+
+def test_moe_expert_counts_flow():
+    cfg = configs.get_smoke("olmoe_1b_7b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    _, aux = model.loss(params, batch)
+    counts = aux["expert_counts"]
+    assert counts.shape == (cfg.num_experts,)
+    # every routed token lands on exactly top-k experts
+    assert int(counts.sum()) == B * S * cfg.experts_per_token * cfg.num_layers

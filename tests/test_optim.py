@@ -1,0 +1,95 @@
+"""Optimizer tests: AdamW convergence/semantics, schedules, compression."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    error_feedback_update,
+    global_norm,
+    linear_schedule,
+    topk_compress,
+    topk_decompress,
+)
+from repro.optim.adamw import AdamWConfig
+
+
+def test_adamw_converges_least_squares():
+    W = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    params = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    st_ = adamw_init(params)
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.mean((p["w"].astype(jnp.float32) - W) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        l, g = jax.value_and_grad(loss)(params)
+        params, st_, _ = adamw_update(g, st_, params, cfg)
+    assert float(l) < 0.02 * l0
+
+
+def test_weight_decay_skips_1d():
+    params = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    st_ = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    cfg = AdamWConfig(lr=1e-1, weight_decay=0.5, clip_norm=None)
+    p2, _, _ = adamw_update(zero_g, st_, params, cfg)
+    assert float(jnp.abs(p2["scale"] - 1.0).max()) == 0.0  # no decay on 1-D
+    assert float(p2["w"].max()) < 1.0                       # decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm), np.sqrt(90.0), rtol=1e-5)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=100)
+    lin = linear_schedule(1.0, warmup=10, total=100)
+    assert float(cos(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(cos(jnp.asarray(10))), 1.0, rtol=1e-6)
+    assert float(cos(jnp.asarray(100))) <= 0.1 + 1e-6
+    np.testing.assert_allclose(float(lin(jnp.asarray(5))), 0.5, rtol=1e-6)
+    assert float(lin(jnp.asarray(100))) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(8, 200),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_roundtrip_properties(n, k, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    comp = topk_compress(g, min(k, n))
+    dense = topk_decompress(comp)
+    # kept coordinates are exact, others zero
+    kept = np.asarray(comp.indices)
+    d = np.asarray(dense)
+    gn = np.asarray(g)
+    np.testing.assert_allclose(d[kept], gn[kept], rtol=1e-6)
+    mask = np.ones(n, bool)
+    mask[kept] = False
+    assert (d[mask] == 0).all()
+    # top-k by magnitude: the kept set's min |val| >= dropped max |val|
+    if mask.any():
+        assert np.abs(gn[kept]).min() >= np.abs(gn[mask]).max() - 1e-6
+
+
+def test_error_feedback_conserves_mass():
+    g = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    r = jnp.zeros((64,))
+    comp, r2 = error_feedback_update(g, r, k=8)
+    # compressed + residual == corrected gradient (nothing lost)
+    total = topk_decompress(comp) + r2
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g), rtol=1e-5, atol=1e-6)

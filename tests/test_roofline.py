@@ -1,0 +1,100 @@
+"""Roofline tests: HLO collective parsing + analytic FLOP model sanity."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.roofline.hlo import collective_bytes, parse_shape_bytes
+from repro.roofline.model import (
+    HW,
+    RooflineTerms,
+    model_flops,
+    param_count,
+    roofline_terms,
+)
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[16,4]") == 16 * 4 * 4
+    assert parse_shape_bytes("bf16[2,3,4]{2,1,0}") == 24 * 2
+    assert parse_shape_bytes("(f32[8], u32[2])") == 32 + 8
+    assert parse_shape_bytes("pred[]") == 1
+    assert parse_shape_bytes("token[]") == 0
+
+
+_HLO = """
+HloModule test
+
+%fused (a: f32[128]) -> f32[128] {
+  ...
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ag = f32[4096]{0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%p0), to_apply=%add
+  %rs.1 = f32[256]{0} reduce-scatter(%p0), dimensions={0}
+  %a2a = f32[1024]{0} all-to-all(%p0), dimensions={0}
+  %cp = f32[1024]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %ars = f32[1024]{0} all-reduce-start(%p0), to_apply=%add
+  %ard = f32[1024]{0} all-reduce-done(%ars)
+  ROOT %out = f32[1024]{0} add(%ar, %cp)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(_HLO, scan_corrected=False)
+    assert out["all-gather"] == 4096 * 4
+    # all-reduce counted once for %ar + once for the -start (done skipped)
+    assert out["all-reduce"] == 2 * 1024 * 4
+    assert out["reduce-scatter"] == 256 * 4
+    assert out["all-to-all"] == 1024 * 4
+    assert out["collective-permute"] == 1024 * 4
+    assert out["total"] == sum(
+        out[k] for k in
+        ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+    )
+
+
+def test_param_count_dense_close_to_nominal():
+    cfg = configs.get("qwen2_7b")
+    pc = param_count(cfg)
+    # qwen2-7b nominal ~7.6B params; analytic count within 15%
+    assert 6e9 < pc["total"] < 9e9, pc
+    assert pc["total"] == pc["active"]
+
+
+def test_param_count_moe_active_less_than_total():
+    cfg = configs.get("mixtral_8x7b")
+    pc = param_count(cfg)
+    assert 40e9 < pc["total"] < 52e9      # nominal 46.7B
+    assert 10e9 < pc["active"] < 16e9     # nominal ~12.9B active
+    assert pc["active"] < pc["total"] / 3
+
+
+def test_model_flops_train_rule_of_thumb():
+    cfg = configs.get("qwen2_7b")
+    shape = SHAPES["train_4k"]
+    f = model_flops(cfg, shape)
+    tokens = shape.seq_len * shape.global_batch
+    lower = 6 * param_count(cfg)["total"] * tokens
+    assert f >= lower  # attention adds on top of 6ND
+    assert f < 2.0 * lower
+
+
+def test_roofline_terms_dominance():
+    cfg = configs.get("qwen2_7b")
+    shape = SHAPES["train_4k"]
+    t = roofline_terms(
+        hlo_flops_global=1e18, hlo_bytes_global=1e12,
+        collective_bytes_global=1e12, chips=256, cfg=cfg, shape=shape,
+    )
+    assert t.compute_s == pytest.approx(1e18 / (256 * HW.peak_flops))
+    assert t.dominant == "compute"
+    assert 0 < t.mfu <= 1.5  # model flops / bound-time x peak
+    # decode flops (one token) are ~seq_len x smaller than prefill
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    f_pre = model_flops(cfg, SHAPES["prefill_32k"])
+    assert f_dec < f_pre / 1000

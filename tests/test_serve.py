@@ -1,0 +1,148 @@
+"""Serving runtime tests: prefill/decode equivalence, ring caches, the
+SS± heavy-hitter KV cache, and engine generation across families."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build_model
+from repro.models.transformer import prefill_forward
+from repro.serve import ServeEngine, build_prefill_step, build_serve_step
+from repro.serve import h2o
+from repro.serve.kv_cache import build_cache, cache_spec, cache_len_for
+
+
+def _params(arch, key=0):
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(key))
+    return cfg, params
+
+
+def test_prefill_matches_stepwise_decode():
+    """Prefill-built cache must equal the cache a token-by-token decode
+    builds, and both paths must produce identical logits for the next
+    token — the core serving-correctness invariant."""
+    cfg, params = _params("qwen3_0_6b")
+    ctx = 64
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+
+    # path A: prefill then one decode step
+    logits_a, cache_a = jax.jit(build_prefill_step(cfg, ctx))(params, {"tokens": toks})
+    step = jax.jit(build_serve_step(cfg, ctx))
+    nxt = jnp.argmax(logits_a[:, -1], -1).astype(jnp.int32)[:, None]
+    la, cache_a2, _ = step(params, cache_a, nxt)
+
+    # path B: feed the same tokens one-by-one through decode
+    cache_b = build_cache(cfg, 2, ctx)
+    logits_b = None
+    for t in range(S):
+        logits_b, cache_b, _ = step(params, cache_b, toks[:, t : t + 1])
+    nxt_b = jnp.argmax(logits_b[:, -1], -1).astype(jnp.int32)[:, None]
+    assert bool(jnp.all(nxt == nxt_b)), "prefill and decode disagree on next token"
+    lb, _, _ = step(params, cache_b, nxt_b)
+    np.testing.assert_allclose(
+        np.asarray(la, np.float32), np.asarray(lb, np.float32), rtol=0.05, atol=0.05
+    )
+
+
+def test_swa_ring_cache_capacity():
+    cfg = configs.get_smoke("mixtral_8x7b")
+    assert cache_len_for(cfg, "swa", 4096) == cfg.window
+    assert cache_len_for(cfg, "full", 4096) == 4096
+
+
+def test_hh_cache_spacesaving_invariants():
+    """The hh cache IS SpaceSaving: heavy positions must survive churn."""
+    B, C = 2, 8
+    KV, hd = 2, 4
+    entry = {
+        "k": jnp.zeros((B, C, KV, hd), jnp.bfloat16),
+        "v": jnp.zeros((B, C, KV, hd), jnp.bfloat16),
+        "ids": jnp.full((B, C), -1, jnp.int32),
+        "counts": jnp.zeros((B, C), jnp.int32),
+        "errors": jnp.zeros((B, C), jnp.int32),
+    }
+    key = jax.random.PRNGKey(0)
+    heavy_pos = 3
+    for pos in range(40):
+        kn = jax.random.normal(key, (B, KV, hd), jnp.bfloat16)
+        entry, _ = h2o.hh_insert(entry, jnp.full((B,), pos, jnp.int32), kn, kn)
+        # heavy position receives most of the mass every step
+        mass = jnp.where(
+            entry["ids"] == heavy_pos, 0.9, 0.1 / C
+        ).astype(jnp.float32) * (pos >= heavy_pos)
+        entry = h2o.hh_add_mass(entry, mass)
+    ids = np.asarray(entry["ids"])
+    assert (ids == heavy_pos).any(axis=1).all(), f"heavy position evicted: {ids}"
+    # counts of residents are nonnegative and errors bounded by counts+slack
+    assert (np.asarray(entry["counts"]) >= 0).all()
+
+
+def test_hh_decay_halves_monitored_mass():
+    B, C = 1, 4
+    entry = {
+        "k": jnp.zeros((B, C, 1, 2), jnp.bfloat16),
+        "v": jnp.zeros((B, C, 1, 2), jnp.bfloat16),
+        "ids": jnp.asarray([[0, 1, 2, -1]], jnp.int32),
+        "counts": jnp.asarray([[100, 50, 7, 9]], jnp.int32),
+        "errors": jnp.asarray([[10, 4, 1, 9]], jnp.int32),
+    }
+    out = h2o.hh_decay(entry)
+    np.testing.assert_array_equal(np.asarray(out["counts"]), [[50, 25, 3, 0]])
+    np.testing.assert_array_equal(np.asarray(out["errors"]), [[5, 2, 0, 0]])
+
+
+@pytest.mark.parametrize("arch", ["gemma3_27b", "zamba2_7b"])
+def test_hh_decode_runs_long_context(arch):
+    """Force the hh path (context > HH_ENGAGE_CTX) at smoke width."""
+    import repro.serve.kv_cache as kvc
+    cfg, params = _params(arch)
+    old = kvc.HH_ENGAGE_CTX
+    kvc.HH_ENGAGE_CTX = 32  # engage hh eviction at tiny scale
+    try:
+        ctx = 128
+        step = jax.jit(build_serve_step(cfg, ctx, decay_period=16))
+        cache = build_cache(cfg, 1, ctx)
+        toks = jnp.zeros((1, 1), jnp.int32)
+        for _ in range(8):
+            logits, cache, _ = step(params, cache, toks)
+            toks = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    finally:
+        kvc.HH_ENGAGE_CTX = old
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_engine_generate_all_archs(arch):
+    cfg, params = _params(arch)
+    B, S = 2, 16
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, S - cfg.vision_tokens), 0, cfg.vocab_size
+    )
+    kw = {}
+    if cfg.vision_tokens:
+        kw["vision"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        kw["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+        )
+    eng = ServeEngine(cfg=cfg, params=params, context=64)
+    out = eng.generate(toks, max_new_tokens=3, **kw)
+    assert out["tokens"].shape[0] == B
+    assert out["steps"] == 3
+
+
+def test_cache_spec_matches_concrete():
+    for arch in ["qwen2_7b", "zamba2_7b", "whisper_medium", "olmoe_1b_7b"]:
+        cfg = configs.get_smoke(arch)
+        sds, axes = cache_spec(cfg, 2, 64)
+        conc = build_cache(cfg, 2, 64)
+        assert jax.tree.structure(sds) == jax.tree.structure(conc)
+        for s, c in zip(jax.tree.leaves(sds), jax.tree.leaves(conc)):
+            assert s.shape == c.shape and s.dtype == c.dtype

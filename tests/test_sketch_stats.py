@@ -1,0 +1,94 @@
+"""Sketch-integration tests: TokenStats / ExpertLoadStats windowed
+bounded-deletion accounting against exact counts."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.sketch.stats import ExpertLoadStats, TokenStats
+
+
+def test_token_stats_exact_on_small_universe():
+    """With capacity >= universe the sketch must be exact."""
+    ts = TokenStats(capacity=64, window=4, block=256)
+    rng = np.random.default_rng(0)
+    window_batches = []
+    for step in range(10):
+        batch = rng.integers(0, 32, size=(2, 50)).astype(np.int32)
+        ts.update(batch)
+        window_batches.append(batch)
+        window_batches = window_batches[-4:]
+    exact = collections.Counter(np.concatenate([b.ravel() for b in window_batches]))
+    got = ts.query(np.arange(32))
+    for i in range(32):
+        assert got[i] == exact.get(i, 0), (i, got[i], exact.get(i, 0))
+
+
+def test_token_stats_alpha_accounting():
+    ts = TokenStats(capacity=128, window=4, block=256)
+    rng = np.random.default_rng(1)
+    for _ in range(12):
+        ts.update(rng.integers(0, 1000, size=100).astype(np.int32))
+    # 12 batches inserted, 8 expired: I = 1200, D = 800
+    assert ts.insertions == 1200
+    assert ts.deletions == 800
+    rep = ts.topk(4)
+    assert rep.alpha_bound == pytest.approx(1200 / 400)
+
+
+def test_token_stats_error_bound_thm4():
+    """SS± guarantee: |f - f_hat| <= eps (I - D) with eps = 2*alpha/k."""
+    k = 256
+    window = 2
+    ts = TokenStats(capacity=k, window=window, block=512)
+    rng = np.random.default_rng(2)
+    live = []
+    for _ in range(6):
+        batch = (rng.zipf(1.5, size=400) % 5000).astype(np.int32)
+        ts.update(batch)
+        live.append(batch)
+        live = live[-window:]
+    exact = collections.Counter(np.concatenate(live))
+    I, D = ts.insertions, ts.deletions
+    alpha = I / (I - D)
+    eps = 2 * alpha / k
+    bound = eps * (I - D)
+    queries = np.arange(5000)
+    got = ts.query(queries)
+    for i in queries:
+        err = abs(int(got[i]) - exact.get(i, 0))
+        assert err <= bound + 1e-9, (i, err, bound)
+
+
+def test_expert_load_stats_hot_experts():
+    es = ExpertLoadStats(num_experts=16, capacity=16, window=8)
+    rng = np.random.default_rng(0)
+    for step in range(20):
+        counts = rng.poisson(5, size=16)
+        counts[3] += 200  # expert 3 is persistently hot
+        es.update(counts)
+    hot = es.hot_experts(phi=0.25)
+    assert 3 in hot.items.tolist()
+    assert es.deletions > 0  # window expired
+
+
+def test_expert_load_stats_window_forgets():
+    es = ExpertLoadStats(num_experts=8, capacity=8, window=2)
+    es.update(np.array([100, 0, 0, 0, 0, 0, 0, 0]))
+    for _ in range(4):
+        es.update(np.array([0, 10, 0, 0, 0, 0, 0, 0]))
+    # expert 0's burst fell out of the window
+    rep = es.hot_experts(phi=0.5)
+    assert 0 not in rep.items.tolist()
+
+
+def test_merge_across_hosts():
+    a = TokenStats(capacity=64, window=100, block=128)
+    b = TokenStats(capacity=64, window=100, block=128)
+    a.update(np.array([1] * 50 + [2] * 10, dtype=np.int32))
+    b.update(np.array([1] * 30 + [3] * 20, dtype=np.int32))
+    a.merge_from(b)
+    assert a.insertions == 110
+    q = a.query(np.array([1, 2, 3]))
+    assert q[0] == 80  # exact: both sketches under capacity
+    assert q[1] == 10 and q[2] == 20
