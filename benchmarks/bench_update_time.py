@@ -19,15 +19,16 @@ from repro.sketch import jax_sketch as js
 LENGTHS = (5000, 10000, 20000)
 
 
-def _time_jax_block(stream: np.ndarray, capacity: int, block: int = 4096) -> float:
+def _time_jax_block(stream: np.ndarray, capacity: int, block: int = 4096,
+                    update_fn=js.block_update) -> float:
     state = js.init(capacity)
     items = jnp.asarray(stream[:, 0], jnp.int32)
     weights = jnp.asarray(stream[:, 1], jnp.int32)
     # warm up compile
-    js.block_update(state, items[:block], weights[:block]).ids.block_until_ready()
+    update_fn(state, items[:block], weights[:block]).ids.block_until_ready()
     t0 = time.perf_counter()
     for s in range(0, len(stream) - block + 1, block):
-        state = js.block_update(state, items[s : s + block], weights[s : s + block])
+        state = update_fn(state, items[s : s + block], weights[s : s + block])
     state.ids.block_until_ready()
     return (time.perf_counter() - t0) / max(len(stream) - len(stream) % block, 1)
 
@@ -43,8 +44,13 @@ def run(runs: int = 2, seed0: int = 0):
             sketches = make_sketches(budget, alpha, n_stream=len(stream), seed=seed0 + r)
             for name, sk in sketches.items():
                 agg.setdefault(name, []).append(run_sketch(sk, stream))
+            # two-phase monitored-first block path vs the serial-scan
+            # baseline (DESIGN.md §3: the A/B for the blocked update)
             agg.setdefault("sspm_jax_block", []).append(
                 _time_jax_block(stream, budget)
+            )
+            agg.setdefault("sspm_jax_block_serial", []).append(
+                _time_jax_block(stream, budget, update_fn=js.block_update_serial)
             )
         for name, vals in agg.items():
             rows.append([n, name, float(np.mean(vals)) * 1e6])

@@ -1,3 +1,11 @@
-from .ops import sketch_block_update
+from .ops import (
+    sketch_block_update,
+    sketch_block_update_batched,
+    sketch_block_update_serial,
+)
 
-__all__ = ["sketch_block_update"]
+__all__ = [
+    "sketch_block_update",
+    "sketch_block_update_batched",
+    "sketch_block_update_serial",
+]

@@ -1,16 +1,29 @@
-"""Pallas TPU kernel: SpaceSaving± block update over a VMEM counter store.
+"""Pallas TPU kernels: SpaceSaving± block update over a VMEM counter store.
 
 TPU adaptation of the paper's §3.6 low-latency structure (see DESIGN.md §3):
 the (ids, counts, errors) arrays live in VMEM laid out (R, 128) —
-rows × lanes — and minCount / maxError are vectorized argmin/argmax over
+rows × lanes — and minCount / maxError are vectorized reductions over
 all k = R*128 counters instead of heap operations. The whole block of B
 updates is applied in one kernel launch: one HBM round-trip for the state
 per *block*, not per update.
 
-The update recurrence is inherently sequential (each update sees the
-previous state), so the grid is a single program and the parallelism is
-the k-wide lane dimension — exactly the trade the paper makes (heap ->
-stream-summary list) pushed one step further (list -> dense SIMD store).
+Two kernels live here:
+
+``sketch_residual_kernel`` — the production two-phase path's phase 2. The
+wrapper (ops.py) segment-aggregates the block and scatter-adds all
+monitored deltas in one vectorized pass (they commute); only the residual
+— unmonitored inserts and unmonitored SS± deletions — enters this kernel.
+The loop is a dynamic-trip-count while over ``n_res`` residual uniques,
+each step an O(R + LANES) two-level row tournament (per-row min/max
+summaries updated incrementally, (R,)-wide final reduce) instead of a flat
+O(k) argmin/argmax. The body is shared with the pure-JAX layer
+(``repro.sketch.jax_sketch.residual_phase``) so the two paths are
+bit-identical.
+
+``sketch_update_kernel_serial`` — the pre-two-phase baseline: a serial
+fori_loop over all B raw updates, each with flat O(k) reductions. Kept for
+A/B benchmarking (bench_kernels reports the speedup) and as a second
+reference implementation.
 
 Weights are signed: w > 0 weighted insert, w < 0 weighted delete
 (variant: 1 = Lazy SS± Alg 3 / 2 = SS± Alg 4), w = 0 no-op (padding).
@@ -23,10 +36,61 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
+from repro.sketch.jax_sketch import LANES, residual_phase
+
 _INT_MAX = 2**31 - 1  # python ints: pallas kernels must not close over arrays
 EMPTY = -1
 
+
+# ---------------------------------------------------------------------------
+# Two-phase path, phase 2: residual tournament loop
+# ---------------------------------------------------------------------------
+
+def _residual_kernel(n_res_ref, uids_ref, nets_ref, ids_ref, counts_ref,
+                     errors_ref, ids_out, counts_out, errors_out, *,
+                     variant: int):
+    ids, counts, errors = residual_phase(
+        ids_ref[...], counts_ref[...], errors_ref[...],
+        uids_ref[...], nets_ref[...], n_res_ref[0], variant,
+    )
+    ids_out[...] = ids
+    counts_out[...] = counts
+    errors_out[...] = errors
+
+
+def sketch_residual_kernel(
+    ids: jax.Array,      # (R, 128) int32, monitored deltas already applied
+    counts: jax.Array,   # (R, 128) int32
+    errors: jax.Array,   # (R, 128) int32
+    r_uids: jax.Array,   # (B,) int32 residual uniques, compacted to front
+    r_net: jax.Array,    # (B,) int32 net weights aligned with r_uids
+    n_res: jax.Array,    # () or (1,) int32 dynamic residual count
+    *,
+    variant: int = 2,
+    interpret: bool = True,
+):
+    assert ids.ndim == 2 and ids.shape[1] == LANES, ids.shape
+    B = r_uids.shape[0]
+    R = ids.shape[0]
+    out_shape = [jax.ShapeDtypeStruct((R, LANES), jnp.int32)] * 3
+    kern = functools.partial(_residual_kernel, variant=variant)
+    state_spec = pl.BlockSpec((R, LANES), lambda: (0, 0))
+    upd_spec = pl.BlockSpec((B,), lambda: (0,))
+    scalar_spec = pl.BlockSpec((1,), lambda: (0,))
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        in_specs=[scalar_spec, upd_spec, upd_spec,
+                  state_spec, state_spec, state_spec],
+        out_specs=[state_spec] * 3,
+        input_output_aliases={3: 0, 4: 1, 5: 2},  # state updated in place
+        interpret=interpret,
+    )(n_res.reshape(1).astype(jnp.int32), r_uids, r_net, ids, counts, errors)
+
+
+# ---------------------------------------------------------------------------
+# Serial baseline: one flat-reduce step per raw update
+# ---------------------------------------------------------------------------
 
 def _apply_one(ids, counts, errors, item, w, variant: int):
     """Branchless weighted SpaceSaving± update on (R,128) arrays."""
@@ -88,8 +152,8 @@ def _apply_one(ids, counts, errors, item, w, variant: int):
     return ids_out, counts_out, errors_out
 
 
-def _kernel(items_ref, weights_ref, ids_ref, counts_ref, errors_ref,
-            ids_out, counts_out, errors_out, *, variant: int, block: int):
+def _serial_kernel(items_ref, weights_ref, ids_ref, counts_ref, errors_ref,
+                   ids_out, counts_out, errors_out, *, variant: int, block: int):
     # Load the counter store into registers/VMEM once per block.
     def body(i, carry):
         ids, counts, errors = carry
@@ -105,7 +169,7 @@ def _kernel(items_ref, weights_ref, ids_ref, counts_ref, errors_ref,
     errors_out[...] = errors
 
 
-def sketch_update_kernel(
+def sketch_update_kernel_serial(
     ids: jax.Array,      # (R, 128) int32
     counts: jax.Array,   # (R, 128) int32
     errors: jax.Array,   # (R, 128) int32
@@ -119,7 +183,7 @@ def sketch_update_kernel(
     B = items.shape[0]
     R = ids.shape[0]
     out_shape = [jax.ShapeDtypeStruct((R, LANES), jnp.int32)] * 3
-    kern = functools.partial(_kernel, variant=variant, block=B)
+    kern = functools.partial(_serial_kernel, variant=variant, block=B)
     state_spec = pl.BlockSpec((R, LANES), lambda: (0, 0))
     upd_spec = pl.BlockSpec((B,), lambda: (0,))
     return pl.pallas_call(

@@ -1,7 +1,25 @@
-"""Public jit'd wrapper around the sketch_update Pallas kernel.
+"""Public jit'd wrappers around the sketch_update Pallas kernels.
 
-Handles layout (1D k -> (R,128) VMEM tiles), capacity padding with
-blocked sentinel slots, and exposes the same SketchState interface as
+``sketch_block_update`` is the production two-phase path (DESIGN.md §3):
+
+  1. segment-aggregate the block to per-unique net weights (XLA),
+  2. phase 1 — scatter-add every monitored delta in one vectorized pass
+     (monitored updates commute; unmonitored lazy deletions drop out),
+  3. phase 2 — launch the Pallas residual kernel: a dynamic-length
+     tournament loop over only the unmonitored residual uniques.
+
+Steps 1–2 are dense, branch-free vector ops that XLA fuses on the VPU;
+only the inherently-sequential residual recurrence lives in the kernel.
+Phase 1/2 splitting logic is shared with ``repro.sketch.jax_sketch`` so
+the kernel path is bit-identical to the pure-JAX ``block_update``.
+
+Also exposed: ``sketch_block_update_serial`` (the pre-two-phase baseline
+kernel, one serial step per raw update — benchmarking/reference only) and
+``sketch_block_update_batched`` (vmap over stacked sketches: one launch
+for a per-expert / per-layer sketch bank).
+
+Handles layout (1D k -> (R,128) VMEM tiles) and capacity padding with
+blocked sentinel slots; exposes the same SketchState interface as
 ``repro.sketch.jax_sketch``.
 """
 from __future__ import annotations
@@ -11,24 +29,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sketch.jax_sketch import SketchState
-from .kernel import LANES, sketch_update_kernel
-
-_INT_MAX = jnp.int32(2**31 - 1)
-_BLOCKED = jnp.int32(-2)  # padded slots: never empty, never min, never max-err
-
-
-def _pad_state(state: SketchState):
-    k = state.ids.shape[0]
-    rows = -(-k // LANES)
-    pad = rows * LANES - k
-    if pad == 0:
-        return state, k
-    return SketchState(
-        ids=jnp.concatenate([state.ids, jnp.full((pad,), _BLOCKED, jnp.int32)]),
-        counts=jnp.concatenate([state.counts, jnp.full((pad,), _INT_MAX, jnp.int32)]),
-        errors=jnp.concatenate([state.errors, jnp.full((pad,), -1, jnp.int32)]),
-    ), k
+from repro.sketch.jax_sketch import (
+    SketchState,
+    _aggregate_block,
+    pad_rows,
+    partition_block,
+)
+from .kernel import sketch_residual_kernel, sketch_update_kernel_serial
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "interpret"))
@@ -39,13 +46,52 @@ def sketch_block_update(
     variant: int = 2,
     interpret: bool = True,
 ) -> SketchState:
-    """Apply a block of signed weighted updates via the Pallas kernel."""
-    padded, k = _pad_state(state)
-    rows = padded.ids.shape[0] // LANES
-    ids2 = padded.ids.reshape(rows, LANES)
-    cnt2 = padded.counts.reshape(rows, LANES)
-    err2 = padded.errors.reshape(rows, LANES)
-    ids2, cnt2, err2 = sketch_update_kernel(
+    """Two-phase block of signed weighted updates via the Pallas kernel."""
+    k = state.ids.shape[0]
+    uids, net = _aggregate_block(items.astype(jnp.int32), weights.astype(jnp.int32))
+    counts1, r_uids, r_net, n_res, _ = partition_block(state, uids, net, variant)
+    ids2, cnt2, err2 = pad_rows(state.ids, counts1, state.errors)
+    ids2, cnt2, err2 = sketch_residual_kernel(
+        ids2, cnt2, err2, r_uids, r_net, n_res,
+        variant=variant, interpret=interpret,
+    )
+    return SketchState(
+        ids=ids2.reshape(-1)[:k],
+        counts=cnt2.reshape(-1)[:k],
+        errors=err2.reshape(-1)[:k],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def sketch_block_update_batched(
+    states: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = 2,
+    interpret: bool = True,
+) -> SketchState:
+    """vmap'd two-phase update: states (E, k), items/weights (E, B).
+
+    One stacked launch for per-expert / per-layer sketch banks (the
+    configs/ model zoo).
+    """
+    return jax.vmap(
+        lambda s, i, w: sketch_block_update(s, i, w, variant, interpret)
+    )(states, items, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def sketch_block_update_serial(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = 2,
+    interpret: bool = True,
+) -> SketchState:
+    """Pre-two-phase baseline: serial O(B·k) kernel scan (benchmarks only)."""
+    k = state.ids.shape[0]
+    ids2, cnt2, err2 = pad_rows(state.ids, state.counts, state.errors)
+    ids2, cnt2, err2 = sketch_update_kernel_serial(
         ids2, cnt2, err2,
         items.astype(jnp.int32), weights.astype(jnp.int32),
         variant=variant, interpret=interpret,

@@ -1,9 +1,12 @@
-"""Pure-jnp oracle for the sketch_update kernel.
+"""Pure-jnp serial oracle for the sketch_update kernels.
 
-Exactly the same semantics as the kernel (flat argmin/argmax over the
-dense store, weighted inserts/deletes, variant 1=lazy / 2=SS±) expressed
-as a lax.scan over updates — no pallas involved. Used by the shape/dtype
-sweep tests and as the numerically-trusted implementation.
+Unit-at-a-time sequential semantics (flat argmin/argmax over the dense
+store, weighted inserts/deletes, variant 1=lazy / 2=SS±) expressed as a
+lax.scan over raw updates — no pallas, no aggregation. This is the
+numerically-trusted implementation: the two-phase kernel path is exactly
+equal to it on monitored-only blocks (phase 1 commutes) and
+property-equivalent (Thm 2/4/5 invariants) on mixed blocks, where the
+monitored-first reordering may pick different eviction victims.
 """
 from __future__ import annotations
 

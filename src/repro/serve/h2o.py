@@ -28,11 +28,12 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.sketch.jax_sketch import select_insert_slot
+
 I32 = jnp.int32
 F32 = jnp.float32
 EMPTY = jnp.int32(-1)
 MASS_SCALE = 1024.0  # quantization: 1.0 attention mass -> 1024 counts
-_INT_MAX = jnp.int32(2**31 - 1)
 
 
 def quantize_mass(mass: jax.Array) -> jax.Array:
@@ -43,14 +44,13 @@ def _insert_token_row(ids, counts, errors, k_row, v_row, pos, k_new, v_new):
     """SpaceSaving insert of one (position, kv) into one row's cache.
 
     ids/counts/errors: (C,); k_row/v_row: (C, KV, hd). Returns updated
-    tuple + the slot index written.
+    tuple + the slot index written. Slot selection is the shared two-level
+    row-tournament reduction (jax_sketch.select_insert_slot): lane-wise
+    (R, 128) min + (R,)-wide reduce — the same TPU-friendly shape as the
+    sketch kernel's residual phase, instead of a flat 1D argmin over C.
     """
-    empty = ids == EMPTY
-    has_empty = empty.any()
-    slot_empty = jnp.argmax(empty)
-    jmin = jnp.argmin(jnp.where(empty, _INT_MAX, counts))
-    min_count = jnp.where(has_empty, 0, counts[jmin])
-    sel = jnp.where(has_empty, slot_empty, jmin)
+    sel, mc, has_empty = select_insert_slot(ids, counts)
+    min_count = jnp.where(has_empty, 0, mc)
 
     # paper Alg 1: newcomer count = minCount + w (w = its first-step mass,
     # added right after by add_mass), error = minCount.

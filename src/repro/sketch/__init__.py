@@ -3,17 +3,23 @@
 The sketch state is three dense arrays (ids/counts/errors) instead of the
 paper's two heaps (see DESIGN.md §3 for the hardware-adaptation rationale).
 All ops are pure functions, jit/vmap/scan-compatible, and mirrored by a
-Pallas TPU kernel in ``repro.kernels.sketch_update``.
+Pallas TPU kernel in ``repro.kernels.sketch_update``. Block updates run
+the two-phase monitored-first algorithm (vectorized monitored scatter +
+short residual tournament loop); ``block_update_serial`` keeps the old
+serial scan for A/B benchmarking.
 """
 from .jax_sketch import (
     EMPTY,
     SketchState,
     block_update,
+    block_update_batched,
+    block_update_serial,
     init,
     merge,
     process_stream,
     query,
     query_many,
+    select_insert_slot,
     topk,
 )
 
@@ -23,8 +29,11 @@ __all__ = [
     "init",
     "process_stream",
     "block_update",
+    "block_update_batched",
+    "block_update_serial",
     "query",
     "query_many",
     "merge",
+    "select_insert_slot",
     "topk",
 ]

@@ -18,6 +18,17 @@ implementation directly.
 shared. Weighted updates follow the standard weighted SpaceSaving
 extension (replacement absorbs the whole weight; deletion of unmonitored
 mass spreads over max-error items, each absorbing up to its error).
+
+Block processing (``block_update``) is the **two-phase monitored-first**
+algorithm (DESIGN.md §3): updates to already-monitored items commute, so
+after segment-aggregation all monitored deltas land in one vectorized
+scatter-add (phase 1); only the residual — unmonitored inserts and, for
+SS±, unmonitored deletions — runs through the short sequential recurrence
+(phase 2), where each step uses a two-level row-tournament reduction
+(per-row min/max maintained incrementally + an (R,)-wide final reduce)
+instead of a flat O(k) argmin/argmax. Item ids are assumed non-negative;
+negative ids are reserved sentinels (EMPTY, BLOCKED) and ignored as
+padding.
 """
 from __future__ import annotations
 
@@ -31,6 +42,13 @@ EMPTY = jnp.int32(-1)
 VARIANT_LAZY = 1
 VARIANT_SSPM = 2
 _INT_MAX = jnp.int32(2**31 - 1)
+
+# Row-tournament geometry: the counter store is viewed as (R, LANES) so the
+# VPU reduces along the 128-wide lane axis and the serial loop only touches
+# (R,)-wide row summaries. BLOCKED marks capacity-padding slots (never
+# empty, never min-count, never max-error).
+LANES = 128
+BLOCKED = jnp.int32(-2)
 
 
 class SketchState(NamedTuple):
@@ -162,13 +180,187 @@ def _aggregate_block(items: jax.Array, weights: jax.Array) -> Tuple[jax.Array, j
     head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
     seg = jnp.cumsum(head) - 1  # segment index per element
     net = jax.ops.segment_sum(w, seg, num_segments=items.shape[0])
-    uid_pos = jnp.where(head, jnp.arange(items.shape[0]), items.shape[0] - 1)
     uids = jax.ops.segment_min(s, seg, num_segments=items.shape[0])
     n_seg = head.sum()
     idx = jnp.arange(items.shape[0])
     uids = jnp.where(idx < n_seg, uids, EMPTY)
     net = jnp.where(idx < n_seg, net, 0)
     return uids, net
+
+
+# ---------------------------------------------------------------------------
+# Two-phase block update: monitored-first scatter + residual tournament loop
+# ---------------------------------------------------------------------------
+
+def pad_rows(ids: jax.Array, counts: jax.Array, errors: jax.Array):
+    """View a (k,) store as (R, LANES) rows, padding with inert slots.
+
+    Padding slots carry BLOCKED ids (match nothing, never empty), INT_MAX
+    counts (never the minimum) and zero errors (never spread targets, since
+    spreading requires error > 0).
+    """
+    k = ids.shape[0]
+    rows = -(-k // LANES)
+    pad = rows * LANES - k
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), BLOCKED, jnp.int32)])
+        counts = jnp.concatenate([counts, jnp.full((pad,), _INT_MAX, jnp.int32)])
+        errors = jnp.concatenate([errors, jnp.zeros((pad,), jnp.int32)])
+    return (
+        ids.reshape(rows, LANES),
+        counts.reshape(rows, LANES),
+        errors.reshape(rows, LANES),
+    )
+
+
+def row_structures(ids2: jax.Array, cnt2: jax.Array, err2: jax.Array):
+    """Per-row tournament summaries: (has_empty, min_count, max_error)."""
+    empty = ids2 == -1
+    row_has_empty = empty.any(axis=1)
+    row_min = jnp.where(empty, 2**31 - 1, cnt2).min(axis=1)
+    row_max_err = err2.max(axis=1)
+    return row_has_empty, row_min, row_max_err
+
+
+def _pick_slot(ids2, cnt2, row_has_empty, row_min):
+    """Tournament final: replacement slot from per-row summaries.
+
+    Returns (r_sel, c_sel, min_count, has_empty) — the first empty slot if
+    one exists, else the first minimum-count slot; ``min_count`` is the
+    minimum over non-empty slots (INT_MAX when all are empty). Tie-breaking
+    matches flat argmin/argmax (lowest flat index). Python-int constants
+    only: shared by the Pallas residual kernel, which must not close over
+    arrays.
+    """
+    int_max = 2**31 - 1
+    has_empty = row_has_empty.any()
+    r_e = jnp.argmax(row_has_empty)
+    r_m = jnp.argmin(row_min)
+    min_count = row_min[r_m]
+    r_sel = jnp.where(has_empty, r_e, r_m)
+    row_ids = ids2[r_sel]
+    c_e = jnp.argmax(row_ids == -1)
+    c_m = jnp.argmin(jnp.where(row_ids == -1, int_max, cnt2[r_sel]))
+    c_sel = jnp.where(has_empty, c_e, c_m)
+    return r_sel, c_sel, min_count, has_empty
+
+
+def select_insert_slot(ids: jax.Array, counts: jax.Array):
+    """Tournament pick of the SpaceSaving replacement slot on a (k,) store.
+
+    Returns (slot, min_count, has_empty) with the semantics of
+    ``_pick_slot``; the reduction runs as a lane-wise (R, 128) min + an
+    (R,)-wide tournament — the TPU-friendly shape shared with the
+    block-update residual phase.
+    """
+    ids2, cnt2, err2 = pad_rows(ids, counts, jnp.zeros_like(counts))
+    row_has_empty, row_min, _ = row_structures(ids2, cnt2, err2)
+    r_sel, c_sel, min_count, has_empty = _pick_slot(
+        ids2, cnt2, row_has_empty, row_min)
+    return r_sel * LANES + c_sel, min_count, has_empty
+
+
+def _valid_mask(uids: jax.Array, net: jax.Array) -> jax.Array:
+    """Aggregated entries that carry real work: non-sentinel id, nonzero net."""
+    return (uids >= 0) & (net != 0)
+
+
+def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
+                    variant: int = VARIANT_SSPM):
+    """Phase-1 split of an aggregated block against the monitored set.
+
+    Monitored membership is a sorted-ids binary search (O(U log k), no
+    (U, k) materialization). Returns:
+      counts1:  counts after the commuting monitored scatter-add
+      r_uids:   residual uids compacted to the front (ascending id order)
+      r_net:    residual net weights, aligned with r_uids
+      n_res:    number of residual uniques (dynamic scalar)
+      n_mon:    number of monitored uniques (dynamic scalar, diagnostics)
+    """
+    k = state.ids.shape[0]
+    valid = _valid_mask(uids, net)
+    sort_idx = jnp.argsort(state.ids)
+    sorted_ids = state.ids[sort_idx]
+    pos = jnp.clip(jnp.searchsorted(sorted_ids, uids), 0, k - 1)
+    monitored = (sorted_ids[pos] == uids) & valid
+    slot = sort_idx[pos]
+    # Monitored deltas commute (insert: count += w; delete: count -= w; ids
+    # and errors untouched) — one scatter-add applies them all at once.
+    delta = jnp.where(monitored, net, 0)
+    counts1 = state.counts + jax.ops.segment_sum(delta, slot, num_segments=k)
+    if variant == VARIANT_LAZY:
+        # Lazy SS± drops unmonitored deletions entirely (Alg 3).
+        residual = valid & ~monitored & (net > 0)
+    else:
+        residual = valid & ~monitored
+    order = jnp.argsort(~residual, stable=True)
+    return counts1, uids[order], net[order], residual.sum(), monitored.sum()
+
+
+def residual_phase(ids2, cnt2, err2, r_uids, r_net, n_res, variant: int):
+    """Phase 2: sequential recurrence over the residual uniques.
+
+    Operates on the (R, LANES) row view. Residual uids are pairwise
+    distinct and unmonitored at every step (phase 1 never rewrites ids and
+    residual inserts each introduce a fresh id), so the membership scan is
+    dropped entirely; each step is an O(R + LANES) row tournament instead
+    of an O(k) flat reduce. Only python-int constants below — this body is
+    shared verbatim by the Pallas kernel, which must not close over arrays.
+    """
+    int_max = 2**31 - 1
+    rhe, rmin, rmaxe = row_structures(ids2, cnt2, err2)
+
+    def step(carry):
+        i, ids2, cnt2, err2, rhe, rmin, rmaxe = carry
+        uid = r_uids[i]
+        w = r_net[i]
+        # ---- unmonitored insert (w > 0): empty slot, else evict min ----
+        wi = jnp.maximum(w, 0)
+        r_sel, c_sel, mc, has_empty = _pick_slot(ids2, cnt2, rhe, rmin)
+        do_ins = w > 0
+        ids2 = ids2.at[r_sel, c_sel].set(
+            jnp.where(do_ins, uid, ids2[r_sel, c_sel]))
+        cnt2 = cnt2.at[r_sel, c_sel].set(
+            jnp.where(do_ins, jnp.where(has_empty, wi, mc + wi), cnt2[r_sel, c_sel]))
+        err2 = err2.at[r_sel, c_sel].set(
+            jnp.where(do_ins, jnp.where(has_empty, 0, mc), err2[r_sel, c_sel]))
+        # refresh the one touched row's summaries
+        row_ids = ids2[r_sel]
+        rhe = rhe.at[r_sel].set((row_ids == -1).any())
+        rmin = rmin.at[r_sel].set(
+            jnp.where(row_ids == -1, int_max, cnt2[r_sel]).min())
+        rmaxe = rmaxe.at[r_sel].set(err2[r_sel].max())
+
+        if variant != VARIANT_LAZY:
+            # ---- unmonitored delete (w < 0): max-error spreading --------
+            def sp_cond(c):
+                rem, _, _, _, rme = c
+                return (rem > 0) & (rme.max() > 0)
+
+            def sp_body(c):
+                rem, cnt2, err2, rmin, rme = c
+                r = jnp.argmax(rme)
+                row_err = err2[r]
+                cc = jnp.argmax(row_err)
+                d = jnp.minimum(rem, row_err[cc])
+                cnt2 = cnt2.at[r, cc].add(-d)
+                err2 = err2.at[r, cc].add(-d)
+                rmin = rmin.at[r].set(
+                    jnp.where(ids2[r] == -1, int_max, cnt2[r]).min())
+                rme = rme.at[r].set(err2[r].max())
+                return rem - d, cnt2, err2, rmin, rme
+
+            rem0 = jnp.maximum(-w, 0)
+            _, cnt2, err2, rmin, rmaxe = jax.lax.while_loop(
+                sp_cond, sp_body, (rem0, cnt2, err2, rmin, rmaxe))
+        return i + 1, ids2, cnt2, err2, rhe, rmin, rmaxe
+
+    def cond(carry):
+        return carry[0] < n_res
+
+    _, ids2, cnt2, err2, _, _, _ = jax.lax.while_loop(
+        cond, step, (jnp.int32(0), ids2, cnt2, err2, rhe, rmin, rmaxe))
+    return ids2, cnt2, err2
 
 
 @functools.partial(jax.jit, static_argnames=("variant",))
@@ -178,13 +370,41 @@ def block_update(
     weights: jax.Array,
     variant: int = VARIANT_SSPM,
 ) -> SketchState:
-    """Block (weighted) update: segment-aggregate then apply per-unique.
+    """Two-phase block (weighted) update — the production TPU path.
 
-    This is the production TPU path: the O(B) serial recurrence collapses to
-    O(U_B) weighted applies (U_B = uniques per block), each a k-lane vector
-    op. Guarantees are those of weighted SpaceSaving± (see module docstring);
-    equivalence to unit-update processing holds up to within-block
-    reordering, which the bounded-deletion model's guarantees are stable to.
+    Segment-aggregate, scatter all monitored deltas at once (they commute:
+    bit-identical to sequential processing for monitored-only blocks), then
+    run the sequential recurrence only over the residual uniques with
+    O(R + LANES) tournament steps. Guarantees are those of weighted
+    SpaceSaving± (module docstring); equivalence to unit-update processing
+    holds up to within-block reordering, which the bounded-deletion model's
+    guarantees (Thms 2/4/5) are stable to.
+    """
+    k = state.ids.shape[0]
+    uids, net = _aggregate_block(items, weights)
+    counts1, r_uids, r_net, n_res, _ = partition_block(state, uids, net, variant)
+    ids2, cnt2, err2 = pad_rows(state.ids, counts1, state.errors)
+    ids2, cnt2, err2 = residual_phase(
+        ids2, cnt2, err2, r_uids, r_net, n_res, variant)
+    return SketchState(
+        ids=ids2.reshape(-1)[:k],
+        counts=cnt2.reshape(-1)[:k],
+        errors=err2.reshape(-1)[:k],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def block_update_serial(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """Pre-two-phase baseline: serial scan over the aggregated uniques.
+
+    Kept for A/B benchmarking (bench_kernels reports the speedup) and as a
+    semantics cross-check in tests. Same aggregation, same per-unique
+    weighted-apply — just O(U · k) with no inter-update parallelism.
     """
     uids, net = _aggregate_block(items, weights)
 
@@ -196,6 +416,36 @@ def block_update(
 
     state, _ = jax.lax.scan(step, state, (uids, net))
     return state
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def block_update_batched(
+    states: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """vmap'd two-phase update over stacked sketches.
+
+    states: SketchState with leading batch axis (E, k); items/weights:
+    (E, B). One launch for a per-expert / per-layer sketch bank (the
+    configs/ model zoo stacks per-layer sketches this way).
+    """
+    return jax.vmap(
+        lambda s, i, w: block_update(s, i, w, variant)
+    )(states, items, weights)
+
+
+def block_partition_stats(state: SketchState, items: jax.Array,
+                          weights: jax.Array, variant: int = VARIANT_SSPM):
+    """Diagnostics: (n_unique, n_monitored, n_residual) for one block.
+
+    ``n_residual / n_unique`` is the serial fraction of the two-phase
+    update — the quantity bench_kernels reports per distribution.
+    """
+    uids, net = _aggregate_block(items, weights)
+    _, _, _, n_res, n_mon = partition_block(state, uids, net, variant)
+    return int(_valid_mask(uids, net).sum()), int(n_mon), int(n_res)
 
 
 # ---------------------------------------------------------------------------

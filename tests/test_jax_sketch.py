@@ -119,6 +119,89 @@ class TestBlockUpdate:
         b = js.process_stream(js.init(8), items, weights, 2)
         assert js.to_dict(a) == js.to_dict(b)
 
+    @pytest.mark.parametrize("variant", [1, 2])
+    def test_monitored_only_block_bit_identical_to_stream(self, variant):
+        """Phase 1 (monitored scatter) commutes: when every block item is
+        already monitored, the two-phase result equals sequential
+        processing bit for bit — ids, counts AND errors."""
+        rng = np.random.default_rng(5 + variant)
+        k = 64
+        warm = jnp.asarray(rng.integers(0, 32, 400), jnp.int32)
+        st0 = js.process_stream(js.init(k), warm, jnp.ones(400, jnp.int32), variant)
+        items = jnp.asarray(rng.integers(0, 32, 128), jnp.int32)
+        weights = jnp.asarray(rng.choice([1, 2, -1], 128), jnp.int32)
+        a = js.block_update(st0, items, weights, variant)
+        b = js.process_stream(st0, items, weights, variant)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_all_padding_block_is_noop(self):
+        """Regression: a block that is entirely padding (weight == 0, item
+        values arbitrary) must aggregate to zero valid uniques and leave
+        the state untouched — including when the sketch is non-empty."""
+        st0 = js.process_stream(
+            js.init(8), jnp.asarray([4, 4, 6], jnp.int32), jnp.ones(3, jnp.int32), 2
+        )
+        for pad_items in ([0, 0, 0, 0], [9, 3, 9, 1], [-1, -1, -1, -1]):
+            out = js.block_update(
+                st0, jnp.asarray(pad_items, jnp.int32), jnp.zeros(4, jnp.int32), 2
+            )
+            for x, y in zip(out, st0):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # aggregation itself: all-padding block yields no valid segments
+        uids, net = js._aggregate_block(
+            jnp.asarray([9, 3, 9, 1], jnp.int32), jnp.zeros(4, jnp.int32)
+        )
+        assert int(jnp.sum((uids >= 0) & (net != 0))) == 0
+
+    @pytest.mark.parametrize("variant", [1, 2])
+    def test_two_phase_matches_serial_block_properties(self, variant):
+        """Two-phase vs the retained serial-scan baseline on mixed blocks:
+        same total mass on insert-only input, same monitored set ordering
+        invariants, and identical results whenever every item is
+        monitored."""
+        rng = np.random.default_rng(variant)
+        items = jnp.asarray(rng.integers(0, 40, 256), jnp.int32)
+        weights = jnp.ones(256, jnp.int32)
+        a = js.block_update(js.init(64), items, weights, variant)
+        b = js.block_update_serial(js.init(64), items, weights, variant)
+        assert int(a.counts.sum()) == int(b.counts.sum()) == 256
+        assert js.to_dict(a) == js.to_dict(b)  # k > universe: no evictions
+
+    def test_block_update_batched(self):
+        E, k, B = 4, 16, 48
+        rng = np.random.default_rng(11)
+        items = jnp.asarray(rng.integers(0, 20, (E, B)), jnp.int32)
+        weights = jnp.ones((E, B), jnp.int32)
+        st0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (E,) + x.shape), js.init(k))
+        out = js.block_update_batched(st0, items, weights, 2)
+        assert out.ids.shape == (E, k)
+        for e in range(E):
+            sub = jax.tree.map(lambda x: x[e], out)
+            want = js.block_update(js.init(k), items[e], weights[e], 2)
+            assert js.to_dict(sub) == js.to_dict(want)
+
+    def test_select_insert_slot_matches_flat_semantics(self):
+        """The tournament slot pick equals flat first-empty / first-argmin
+        semantics on arbitrary (k,) stores, including k not a multiple of
+        the lane width."""
+        rng = np.random.default_rng(2)
+        for k in (5, 128, 200):
+            for _ in range(5):
+                ids = rng.integers(0, 50, k).astype(np.int32)
+                ids[rng.random(k) < 0.2] = -1
+                counts = rng.integers(-3, 100, k).astype(np.int32)
+                slot, mc, has_empty = js.select_insert_slot(
+                    jnp.asarray(ids), jnp.asarray(counts))
+                empty = ids == -1
+                if empty.any():
+                    assert bool(has_empty)
+                    assert int(slot) == int(np.argmax(empty))
+                else:
+                    assert not bool(has_empty)
+                    assert int(slot) == int(np.argmin(counts))
+                    assert int(mc) == int(counts.min())
+
 
 class TestQueriesAndTopK:
     def test_query_many_and_topk(self):

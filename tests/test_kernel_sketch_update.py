@@ -1,61 +1,126 @@
-"""Pallas sketch_update kernel vs pure-jnp oracle: shape/dtype sweeps.
+"""Pallas sketch_update kernel tests for the two-phase path.
 
-Kernel runs in interpret mode (CPU container; TPU is the target). Every
-cell asserts exact state equality against ref.py, which is itself pinned
-to the python oracle in test_jax_sketch.py.
+Three layers of guarantees (DESIGN.md §3.4), each pinned here:
+
+  1. The kernel path is **bit-identical** to the pure-JAX two-phase
+     ``jax_sketch.block_update`` on every block (they share phase-1/2
+     code; the kernel runs phase 2 in interpret mode on this CPU
+     container — TPU is the target).
+  2. Monitored-only blocks are **bit-identical** to the serial unit-update
+     oracle (``ref.sketch_update_ref``): monitored updates commute.
+  3. Mixed blocks are **property-equivalent** to sequential processing:
+     the paper's Thm 4 error bound and heavy-hitter recall hold even
+     though the monitored-first reordering may evict different victims.
 """
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.sketch_update.ops import sketch_block_update
+from repro.core.streams import bounded_stream, exact_stats
+from repro.kernels.sketch_update.ops import (
+    sketch_block_update,
+    sketch_block_update_batched,
+    sketch_block_update_serial,
+)
 from repro.kernels.sketch_update.ref import sketch_update_ref
 from repro.sketch import jax_sketch as js
 
 from test_jax_sketch import random_strict_stream
 
 
+def assert_states_equal(a: js.SketchState, b: js.SketchState):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    np.testing.assert_array_equal(np.asarray(a.errors), np.asarray(b.errors))
+
+
 @pytest.mark.parametrize("k", [128, 200, 256])
 @pytest.mark.parametrize("B", [16, 64])
 @pytest.mark.parametrize("variant", [1, 2])
-def test_kernel_matches_ref(k, B, variant):
+def test_kernel_bit_identical_to_pure_jax(k, B, variant):
+    """Mixed blocks: kernel two-phase == pure-JAX two-phase, bit for bit."""
     rng = np.random.default_rng(k * 100 + B + variant)
-    items, weights = random_strict_stream(rng, B, universe=48, delete_frac=0.3)
+    items, weights = random_strict_stream(rng, B, universe=300, delete_frac=0.3)
     st0 = js.init(k)
-    # warm the sketch with some mass so eviction/deletion paths trigger
-    warm_i, warm_w = random_strict_stream(rng, 4 * k, universe=48, delete_frac=0.1)
+    warm_i, warm_w = random_strict_stream(rng, 4 * k, universe=300, delete_frac=0.1)
     st0 = js.process_stream(st0, jnp.asarray(warm_i), jnp.asarray(warm_w), variant)
 
     got = sketch_block_update(
         st0, jnp.asarray(items), jnp.asarray(weights), variant=variant, interpret=True
     )
+    want = js.block_update(st0, jnp.asarray(items), jnp.asarray(weights), variant)
+    assert_states_equal(got, want)
+
+
+@pytest.mark.parametrize("variant", [1, 2])
+def test_kernel_monitored_only_matches_serial_oracle(variant):
+    """Phase 1 commutes: monitored-only blocks == unit-update oracle."""
+    k, B = 128, 96
+    rng = np.random.default_rng(7 + variant)
+    # warm with the whole (small) universe so every block item is monitored
+    warm = jnp.asarray(rng.integers(0, 48, 600), jnp.int32)
+    st0 = js.process_stream(js.init(k), warm, jnp.ones(600, jnp.int32), variant)
+    assert set(np.unique(np.asarray(st0.ids))) >= set(range(48))
+
+    items = jnp.asarray(rng.integers(0, 48, B), jnp.int32)
+    weights = jnp.asarray(rng.choice([2, 1, -1], B), jnp.int32)
+    got = sketch_block_update(st0, items, weights, variant=variant, interpret=True)
     ids, cnts, errs = sketch_update_ref(
-        st0.ids, st0.counts, st0.errors, jnp.asarray(items), jnp.asarray(weights), variant
+        st0.ids, st0.counts, st0.errors, items, weights, variant
     )
-    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ids))
-    np.testing.assert_array_equal(np.asarray(got.counts), np.asarray(cnts))
-    np.testing.assert_array_equal(np.asarray(got.errors), np.asarray(errs))
+    assert_states_equal(got, js.SketchState(ids, cnts, errs))
 
 
-def test_kernel_weighted_updates():
-    k, B = 128, 24
-    rng = np.random.default_rng(0)
-    items = rng.integers(0, 20, size=B).astype(np.int32)
-    weights = rng.integers(1, 6, size=B).astype(np.int32)
-    # sprinkle deletions of previously-inserted items with small weights
-    for i in range(4, B, 6):
-        items[i] = items[i - 1]
-        weights[i] = -1
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kernel_mixed_blocks_theorem4_bound(seed):
+    """Mixed blocks keep the Thm 4 error bound (and thus heavy-hitter
+    recall) despite monitored-first reordering."""
+    alpha = 2.0
+    stream = bounded_stream("zipf", 600, 0.5, universe=64, seed=seed)
+    stats = exact_stats(stream)
+    k = 64  # eps = 2*alpha/k
+    eps = 2 * alpha / k
+    st = js.init(k)
+    items = stream[:, 0].astype(np.int32)
+    weights = stream[:, 1].astype(np.int32)
+    for i in range(0, len(items), 64):
+        st = sketch_block_update(
+            st, jnp.asarray(items[i:i + 64]), jnp.asarray(weights[i:i + 64]),
+            variant=2, interpret=True,
+        )
+    bound = eps * stats.residual_mass
+    est = js.query_many(st, jnp.asarray(list(stats.frequencies), dtype=jnp.int32))
+    for it, e in zip(stats.frequencies, np.asarray(est)):
+        assert abs(e - stats.frequencies[it]) <= bound + 1e-6
+
+
+def test_kernel_matches_serial_kernel_insert_only_unique():
+    """With no duplicates and no deletions into an empty sketch, the
+    two-phase path and the serial kernel agree exactly (residual order ==
+    ascending-uid aggregation order in both)."""
+    k = 128
+    items = jnp.asarray(np.arange(40, dtype=np.int32))
+    weights = jnp.asarray(np.full(40, 3, np.int32))
     st0 = js.init(k)
-    got = sketch_block_update(
-        st0, jnp.asarray(items), jnp.asarray(weights), variant=2, interpret=True
-    )
-    ids, cnts, errs = sketch_update_ref(
-        st0.ids, st0.counts, st0.errors, jnp.asarray(items), jnp.asarray(weights), 2
-    )
-    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ids))
-    np.testing.assert_array_equal(np.asarray(got.counts), np.asarray(cnts))
+    a = sketch_block_update(st0, items, weights, variant=2, interpret=True)
+    b = sketch_block_update_serial(st0, items, weights, variant=2, interpret=True)
+    assert_states_equal(a, b)
+
+
+def test_kernel_batched_matches_unbatched():
+    E, k, B = 3, 256, 64
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.integers(0, 100, (E, B)), jnp.int32)
+    weights = jnp.asarray(rng.choice([1, 2], (E, B)), jnp.int32)
+    st = jax.tree.map(lambda x: jnp.broadcast_to(x, (E,) + x.shape), js.init(k))
+    out = sketch_block_update_batched(st, items, weights)
+    assert out.ids.shape == (E, k)
+    for e in range(E):
+        sub = jax.tree.map(lambda x: x[e], out)
+        want = sketch_block_update(js.init(k), items[e], weights[e])
+        assert_states_equal(sub, want)
 
 
 def test_kernel_padding_slots_inert():
