@@ -1,27 +1,47 @@
-"""Paper Figs 8-10: DSS± vs DCS vs KLL± — KS divergence vs space,
-vs delete ratio, and update time."""
+"""Paper Figs 8-10 + the dyadic-bank throughput story.
+
+Figs 8-10 mirror the paper's §5.5 quantile experiments (DSS± vs DCS vs
+KLL±: KS divergence vs space, vs delete ratio, and update time). New
+since the JAX dyadic bank landed: per distribution, the python-reference
+per-item loop (bits heap updates per element) is raced against the JAX
+block path (one ``block_update_batched`` launch per block over the
+(bits, k) bank) and the Pallas kernel path (one residual-kernel launch
+per layer, interpret mode on CPU), with KS divergence reported for each
+so the speedup is provably not bought with accuracy. Results land in
+``BENCH_quantiles.json`` at the repo root (same contract as
+BENCH_kernels.json): machine-readable perf trajectory across PRs.
+
+Wall-times are CPU interpret-mode numbers — relative trends only
+(DESIGN.md §7-§8).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
-from benchmarks.common import csv_print
-from repro.core.quantiles import KLLpm, dyadic_from_budget, ks_divergence
+from benchmarks.common import csv_print, run_sketch
+from repro.core.quantiles import (
+    KLLpm,
+    dyadic_from_budget,
+    ks_divergence,
+    true_ranks,
+)
 from repro.core.streams import bounded_stream
 
 BITS = 16
 UNIVERSE = 1 << BITS
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_quantiles.json")
 
-def _run_quantile(sketch, stream: np.ndarray) -> float:
-    t0 = time.perf_counter()
-    if hasattr(sketch, "process"):
-        sketch.process(stream)
-    else:
-        for item, sign in stream:
-            sketch.update(int(item), int(sign))
-    return (time.perf_counter() - t0) / len(stream)
+DYADIC_COLUMNS = ["dist", "bits", "budget", "impl", "block",
+                  "updates_per_s", "ks", "speedup_vs_ref"]
+FIG8_COLUMNS = ["dist", "budget", "sketch", "ks"]
+FIG9_COLUMNS = ["ratio", "sketch", "ks"]
+FIG10_COLUMNS = ["stream_len", "sketch", "us"]
 
 
 def _sketches(budget: int, seed: int):
@@ -48,12 +68,12 @@ def run_fig8(n_insert: int = 8000, runs: int = 2, seed0: int = 0):
                                         universe=UNIVERSE, seed=seed0 + r)
                 live = _live_values(stream)
                 for name, sk in _sketches(budget, seed0 + r).items():
-                    _run_quantile(sk, stream)
+                    run_sketch(sk, stream)
                     ks = ks_divergence(sk, live)
                     agg.setdefault((dist, name), []).append(ks)
         for (dist, name), vals in agg.items():
             rows.append([dist, budget, name, float(np.mean(vals))])
-    csv_print("fig8_quantile_ks_vs_space", ["dist", "budget", "sketch", "ks"], rows)
+    csv_print("fig8_quantile_ks_vs_space", FIG8_COLUMNS, rows)
     return rows
 
 
@@ -68,11 +88,11 @@ def run_fig9(n_total: int = 8000, runs: int = 2, seed0: int = 0):
                                     universe=UNIVERSE, seed=seed0 + r)
             live = _live_values(stream)
             for name, sk in _sketches(budget, seed0 + r).items():
-                _run_quantile(sk, stream)
+                run_sketch(sk, stream)
                 agg.setdefault(name, []).append(ks_divergence(sk, live))
         for name, vals in agg.items():
             rows.append([ratio, name, float(np.mean(vals))])
-    csv_print("fig9_quantile_ks_vs_ratio", ["ratio", "sketch", "ks"], rows)
+    csv_print("fig9_quantile_ks_vs_ratio", FIG9_COLUMNS, rows)
     return rows
 
 
@@ -85,15 +105,112 @@ def run_fig10(runs: int = 2, seed0: int = 0):
             stream = bounded_stream("zipf", int(n / 1.5), 0.5,
                                     universe=UNIVERSE, seed=seed0 + r)
             for name, sk in _sketches(budget, seed0 + r).items():
-                agg.setdefault(name, []).append(_run_quantile(sk, stream))
+                agg.setdefault(name, []).append(run_sketch(sk, stream))
         for name, vals in agg.items():
             rows.append([n, name, float(np.mean(vals)) * 1e6])
-    csv_print("fig10_quantile_update_time", ["stream_len", "sketch", "us"], rows)
+    csv_print("fig10_quantile_update_time", FIG10_COLUMNS, rows)
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Dyadic bank: python reference vs JAX block vs Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _ks_dyadic_jax(state, live: np.ndarray, num_queries: int = 128) -> float:
+    """KS divergence for the JAX bank: one rank_many call over the grid."""
+    import jax.numpy as jnp
+    from repro.sketch import dyadic
+
+    qs = np.unique(np.quantile(live, np.linspace(0, 1, num_queries))
+                   .astype(np.int64))
+    tr = true_ranks(live, qs)
+    est = np.asarray(
+        dyadic.rank_many(state, jnp.asarray(qs, jnp.int32)), np.float64)
+    return float(np.max(np.abs(est - tr)) / len(live))
+
+
+def _time_jax_path(bits, budget, stream, block, path, variant=2, runs=2):
+    """Min-of-N seconds for a full feed (post-compile) + the final state.
+
+    Min-of-N (matching bench_kernels) because CPU-contention outliers at
+    the tens-of-ms scale would otherwise dominate a single measurement.
+    """
+    from repro.sketch import dyadic
+
+    # warmup: compile the (bits, k, block) cell on a fresh state
+    dyadic.process_stream(
+        dyadic.init(bits, total_counters=budget),
+        stream[:block, 0], stream[:block, 1], variant=variant,
+        block=block, path=path,
+    ).bank.ids.block_until_ready()
+    best = float("inf")
+    for _ in range(runs):
+        st = dyadic.init(bits, total_counters=budget)
+        t0 = time.perf_counter()
+        st = dyadic.process_stream(st, stream[:, 0], stream[:, 1],
+                                   variant=variant, block=block, path=path)
+        st.bank.ids.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best, st
+
+
+def run_dyadic(n_insert: int = 6000, budget: int = 2048, block: int = 2048,
+               seed0: int = 0):
+    """The BENCH_quantiles.json headline table: updates/s and KS per impl."""
+    rows = []
+    for dist in ("zipf", "binomial", "caida"):
+        stream = bounded_stream(dist, n_insert, 0.5,
+                                universe=UNIVERSE, seed=seed0)
+        live = _live_values(stream)
+        n = len(stream)
+
+        ref = dyadic_from_budget(BITS, budget, "dss_pm", seed=seed0)
+        spu = run_sketch(ref, stream)  # sec per update
+        ref_ups = 1.0 / spu
+        rows.append([dist, BITS, budget, "python_ref", 1,
+                     ref_ups, ks_divergence(ref, live), 1.0])
+
+        for impl, path in (("jax_block", "block"), ("pallas_kernel", "kernel")):
+            dt, st = _time_jax_path(BITS, budget, stream, block, path)
+            ups = n / dt
+            rows.append([dist, BITS, budget, impl, block,
+                         ups, _ks_dyadic_jax(st, live), ups / ref_ups])
+    csv_print("dyadic_update_throughput", DYADIC_COLUMNS, rows)
+    return rows
+
+
+def _json_default(obj):
+    if isinstance(obj, np.generic):
+        return obj.item()
+    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
+
+
+def _write_json(results: dict, path: str = JSON_PATH) -> None:
+    columns = {
+        "dyadic_update": DYADIC_COLUMNS,
+        "fig8": FIG8_COLUMNS,
+        "fig9": FIG9_COLUMNS,
+        "fig10": FIG10_COLUMNS,
+    }
+    payload = {
+        name: [dict(zip(cols, r)) for r in results[name]]
+        for name, cols in columns.items() if name in results
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_json_default)
+        f.write("\n")
+    print(f"\n# wrote {path}")
+
+
 def run(**kw):
-    return {"fig8": run_fig8(), "fig9": run_fig9(), "fig10": run_fig10()}
+    results = {
+        "dyadic_update": run_dyadic(),
+        "fig8": run_fig8(),
+        "fig9": run_fig9(),
+        "fig10": run_fig10(),
+    }
+    _write_json(results)
+    return results
 
 
 if __name__ == "__main__":

@@ -30,7 +30,8 @@ BENCHES = {
     "fig5": ("benchmarks.bench_delete_ratio", "Fig 5: MSE vs delete ratio"),
     "fig6": ("benchmarks.bench_update_time", "Fig 6: update time"),
     "fig7": ("benchmarks.bench_recall_precision", "Fig 7: recall/precision"),
-    "quantiles": ("benchmarks.bench_quantiles", "Figs 8-10: quantile sketches"),
+    "quantiles": ("benchmarks.bench_quantiles",
+                  "Figs 8-10 + dyadic bank throughput (BENCH_quantiles.json)"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/time"),
     "compression": ("benchmarks.bench_compression", "grad compression bytes"),
     "h2o": ("benchmarks.bench_h2o_quality", "SS± KV-cache retention quality"),

@@ -19,7 +19,35 @@ from typing import Callable, Iterable, List, Optional
 import numpy as np
 
 from .baselines import CountMedian, CountMin
-from .spacesaving import SpaceSavingPM
+from .spacesaving import LazySpaceSavingPM, SpaceSavingPM
+
+
+def dyadic_layer_capacities(
+    bits: int,
+    total_counters: Optional[int] = None,
+    eps: Optional[float] = None,
+    alpha: float = 2.0,
+) -> List[int]:
+    """Per-layer SpaceSaving± capacities for a dyadic sketch — the single
+    source of truth shared by the Python oracle (`DyadicQuantile` factories
+    below) and the JAX bank (`repro.sketch.dyadic.init`).
+
+    Exactly one of ``total_counters`` / ``eps`` must be given:
+      * eps-based (paper §4.2): every layer gets ceil(2·alpha·bits/eps)
+        counters, so per-layer error eps/bits sums to eps·|F|₁ over the
+        <= bits contributing nodes of any rank query.
+      * budget-based (the experiments): ``total_counters`` split evenly.
+
+    Either way layer l is clipped to its universe size 2^(bits-l), at
+    which point the layer is exact.
+    """
+    if (total_counters is None) == (eps is None):
+        raise ValueError("pass exactly one of total_counters / eps")
+    if eps is not None:
+        per_layer = max(2, math.ceil(2.0 * alpha * bits / eps))
+    else:
+        per_layer = max(2, total_counters // bits)
+    return [min(per_layer, 1 << (bits - l)) for l in range(bits)]
 
 
 class DyadicQuantile:
@@ -101,19 +129,18 @@ class _CMLayer:
         return self.inner.query(x)
 
 
-def make_dss_pm(bits: int, eps: float, alpha: float = 2.0) -> DyadicQuantile:
+def make_dss_pm(
+    bits: int, eps: float, alpha: float = 2.0, variant: str = "sspm"
+) -> DyadicQuantile:
     """Paper §4.2: one SS± of capacity O(alpha * bits / eps) per layer.
 
     Layer l has at most 2^(bits-l) distinct values; the capacity is clipped
-    there, at which point the layer is exact.
+    there, at which point the layer is exact. ``variant``: 'sspm' (Alg 4
+    layers) or 'lazy' (Alg 3 layers — unmonitored deletions dropped).
     """
-    k = max(2, math.ceil(2.0 * alpha * bits / eps))
-
-    def factory(l: int) -> SpaceSavingPM:
-        cap = min(k, 1 << (bits - l))
-        return SpaceSavingPM(cap)
-
-    return DyadicQuantile(bits, factory)
+    caps = dyadic_layer_capacities(bits, eps=eps, alpha=alpha)
+    cls = LazySpaceSavingPM if variant == "lazy" else SpaceSavingPM
+    return DyadicQuantile(bits, lambda l: cls(caps[l]))
 
 
 def dyadic_from_budget(
@@ -121,13 +148,15 @@ def dyadic_from_budget(
 ) -> DyadicQuantile:
     """Budgeted constructors used by the experiments: split ``total_counters``
     evenly across layers (clipped to layer universe size for counter sketches).
-    kind in {'dss_pm', 'dcs', 'dcm'}."""
-    per_layer = max(2, total_counters // bits)
+    kind in {'dss_pm', 'dss_lazy', 'dcs', 'dcm'}."""
+    if kind in ("dss_pm", "dss_lazy"):
+        caps = dyadic_layer_capacities(bits, total_counters=total_counters)
+        cls = LazySpaceSavingPM if kind == "dss_lazy" else SpaceSavingPM
 
-    if kind == "dss_pm":
         def factory(l: int):
-            return SpaceSavingPM(min(per_layer, 1 << (bits - l)))
+            return cls(caps[l])
     elif kind in ("dcs", "dcm"):
+        per_layer = max(2, total_counters // bits)
         depth = 3
         width = max(2, per_layer // depth)
         cls = CountMedian if kind == "dcs" else CountMin

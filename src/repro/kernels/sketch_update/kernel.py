@@ -46,12 +46,17 @@ EMPTY = -1
 # Two-phase path, phase 2: residual tournament loop
 # ---------------------------------------------------------------------------
 
-def _residual_kernel(n_res_ref, uids_ref, nets_ref, ids_ref, counts_ref,
+def _residual_kernel(scalars_ref, uids_ref, nets_ref, ids_ref, counts_ref,
                      errors_ref, ids_out, counts_out, errors_out, *,
                      variant: int):
+    # scalars = [start, end, w_del]: the non-unit eviction range in the
+    # grouped residual list (empty fills and the unit-weight water-fill
+    # ran outside the kernel) and the summed unmonitored deletion weight
+    # for the bulk spread.
     ids, counts, errors = residual_phase(
         ids_ref[...], counts_ref[...], errors_ref[...],
-        uids_ref[...], nets_ref[...], n_res_ref[0], variant,
+        uids_ref[...], nets_ref[...],
+        scalars_ref[0], scalars_ref[1], scalars_ref[2], variant,
     )
     ids_out[...] = ids
     counts_out[...] = counts
@@ -59,12 +64,14 @@ def _residual_kernel(n_res_ref, uids_ref, nets_ref, ids_ref, counts_ref,
 
 
 def sketch_residual_kernel(
-    ids: jax.Array,      # (R, 128) int32, monitored deltas already applied
+    ids: jax.Array,      # (R, 128) int32, phases 1-1.75 already applied
     counts: jax.Array,   # (R, 128) int32
     errors: jax.Array,   # (R, 128) int32
-    r_uids: jax.Array,   # (B,) int32 residual uniques, compacted to front
+    r_uids: jax.Array,   # (B,) int32 grouped residual uniques (see _phase1)
     r_net: jax.Array,    # (B,) int32 net weights aligned with r_uids
-    n_res: jax.Array,    # () or (1,) int32 dynamic residual count
+    start: jax.Array,    # () int32 first non-unit insert (loop start)
+    n_ins: jax.Array,    # () int32 end of the non-unit insert range
+    w_del: jax.Array,    # () int32 summed unmonitored deletion weight
     *,
     variant: int = 2,
     interpret: bool = True,
@@ -76,7 +83,9 @@ def sketch_residual_kernel(
     kern = functools.partial(_residual_kernel, variant=variant)
     state_spec = pl.BlockSpec((R, LANES), lambda: (0, 0))
     upd_spec = pl.BlockSpec((B,), lambda: (0,))
-    scalar_spec = pl.BlockSpec((1,), lambda: (0,))
+    scalar_spec = pl.BlockSpec((3,), lambda: (0,))
+    scalars = jnp.stack([start.astype(jnp.int32), n_ins.astype(jnp.int32),
+                         w_del.astype(jnp.int32)])
     return pl.pallas_call(
         kern,
         out_shape=out_shape,
@@ -85,7 +94,7 @@ def sketch_residual_kernel(
         out_specs=[state_spec] * 3,
         input_output_aliases={3: 0, 4: 1, 5: 2},  # state updated in place
         interpret=interpret,
-    )(n_res.reshape(1).astype(jnp.int32), r_uids, r_net, ids, counts, errors)
+    )(scalars, r_uids, r_net, ids, counts, errors)
 
 
 # ---------------------------------------------------------------------------

@@ -5,11 +5,18 @@
   1. segment-aggregate the block to per-unique net weights (XLA),
   2. phase 1 — scatter-add every monitored delta in one vectorized pass
      (monitored updates commute; unmonitored lazy deletions drop out),
-  3. phase 2 — launch the Pallas residual kernel: a dynamic-length
-     tournament loop over only the unmonitored residual uniques.
+  3. phase 1.5 — bulk-fill empty slots with the leading residual inserts
+     (one scatter, bit-identical to the sequential recurrence),
+  4. phase 1.75 — water-fill every unit-weight eviction in one fused
+     vector pass (exactly the sequential argmin recurrence, see
+     ``jax_sketch.waterfill_unit_inserts``),
+  5. phase 2 — launch the Pallas residual kernel: a dynamic-length
+     eviction tournament loop over the non-unit residual inserts plus
+     one bulk max-error spread of the summed unmonitored deletions.
 
-Steps 1–2 are dense, branch-free vector ops that XLA fuses on the VPU;
-only the inherently-sequential residual recurrence lives in the kernel.
+Steps 1–4 are dense, branch-free vector ops that XLA fuses on the VPU;
+only the inherently-sequential eviction/spread recurrences live in the
+kernel.
 Phase 1/2 splitting logic is shared with ``repro.sketch.jax_sketch`` so
 the kernel path is bit-identical to the pure-JAX ``block_update``.
 
@@ -31,28 +38,29 @@ import jax.numpy as jnp
 
 from repro.sketch.jax_sketch import (
     SketchState,
-    _aggregate_block,
+    _phase1,
     pad_rows,
-    partition_block,
 )
 from .kernel import sketch_residual_kernel, sketch_update_kernel_serial
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+@functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))
 def sketch_block_update(
     state: SketchState,
     items: jax.Array,
     weights: jax.Array,
     variant: int = 2,
     interpret: bool = True,
+    assume_sorted: bool = False,
 ) -> SketchState:
     """Two-phase block of signed weighted updates via the Pallas kernel."""
     k = state.ids.shape[0]
-    uids, net = _aggregate_block(items.astype(jnp.int32), weights.astype(jnp.int32))
-    counts1, r_uids, r_net, n_res, _ = partition_block(state, uids, net, variant)
-    ids2, cnt2, err2 = pad_rows(state.ids, counts1, state.errors)
+    ids1, cnt1, err1, r_uids, r_net, nu_start, nu_end, w_del = _phase1(
+        state, items.astype(jnp.int32), weights.astype(jnp.int32), variant,
+        assume_sorted)
+    ids2, cnt2, err2 = pad_rows(ids1, cnt1, err1)
     ids2, cnt2, err2 = sketch_residual_kernel(
-        ids2, cnt2, err2, r_uids, r_net, n_res,
+        ids2, cnt2, err2, r_uids, r_net, nu_start, nu_end, w_del,
         variant=variant, interpret=interpret,
     )
     return SketchState(
@@ -62,21 +70,24 @@ def sketch_block_update(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+@functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))
 def sketch_block_update_batched(
     states: SketchState,
     items: jax.Array,
     weights: jax.Array,
     variant: int = 2,
     interpret: bool = True,
+    assume_sorted: bool = False,
 ) -> SketchState:
     """vmap'd two-phase update: states (E, k), items/weights (E, B).
 
     One stacked launch for per-expert / per-layer sketch banks (the
-    configs/ model zoo).
+    configs/ model zoo). ``assume_sorted``: every row of ``items`` is
+    already ascending (see ``jax_sketch.block_update_batched``).
     """
     return jax.vmap(
-        lambda s, i, w: sketch_block_update(s, i, w, variant, interpret)
+        lambda s, i, w: sketch_block_update(s, i, w, variant, interpret,
+                                            assume_sorted)
     )(states, items, weights)
 
 

@@ -7,7 +7,13 @@ Pallas TPU kernel in ``repro.kernels.sketch_update``. Block updates run
 the two-phase monitored-first algorithm (vectorized monitored scatter +
 short residual tournament loop); ``block_update_serial`` keeps the old
 serial scan for A/B benchmarking.
+
+``repro.sketch.dyadic`` stacks ``bits`` of these sketches into one
+(bits, k) bank — Dyadic SpaceSaving±, the paper's deterministic
+bounded-deletion quantile sketch — updated with a single batched launch
+per block (see DESIGN.md §8).
 """
+from . import dyadic
 from .jax_sketch import (
     EMPTY,
     SketchState,
@@ -24,6 +30,7 @@ from .jax_sketch import (
 )
 
 __all__ = [
+    "dyadic",
     "EMPTY",
     "SketchState",
     "init",

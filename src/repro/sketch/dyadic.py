@@ -1,0 +1,272 @@
+"""Dyadic SpaceSaving± in JAX: one stacked sketch-bank launch per block.
+
+The paper's second headline contribution (Algs 5-6) is the first
+deterministic quantile sketch in the bounded deletion model: ``bits``
+SpaceSaving± sketches, one per dyadic layer, where layer l monitors the
+frequencies of ``x >> l``. The reference implementation
+(`repro.core.quantiles.DyadicQuantile`) makes ~``bits`` Python heap calls
+per stream element; this module is the TPU adaptation:
+
+* **State** — the ``bits`` layers are ONE stacked :class:`SketchState`
+  bank of shape (bits, k), k = max per-layer capacity. Layers whose
+  paper-prescribed capacity is smaller (the top layers, clipped to their
+  2^(bits-l)-node universe) pad the tail of their row with BLOCKED
+  sentinel slots (ids = -2, counts = INT_MAX, errors = 0) — inert under
+  every phase of the two-phase update, exactly like the capacity padding
+  ``pad_rows`` appends. Layer sizing comes from the *shared* budget-split
+  helper ``repro.core.quantiles.dyadic_layer_capacities`` so the JAX bank
+  and the Python oracle are counter-for-counter identical.
+
+* **Update** — a block of (item, signed weight) pairs becomes the
+  (bits, B) layer-item matrix via a single broadcast right-shift
+  (``items >> layer``); the whole dyadic update is then one
+  ``block_update_batched`` call (``path='block'``), one vmapped
+  two-phase launch over the bank — or one Pallas residual-kernel launch
+  per layer (``path='kernel'``). |F|₁ is tracked exactly as a scalar.
+
+* **Query** — ``rank(x)`` sums ≤ bits dyadic node frequencies: the node
+  of layer l is included iff bit l of y = x+1 is set, and its index is
+  2·(y >> (l+1)). ``rank_many`` evaluates a whole query batch with one
+  vmapped ``query_many`` over the bank; ``quantile_many`` wraps it in a
+  branchless lockstep binary search over the universe. Everything is
+  jit-able end to end.
+
+Semantics match the reference up to per-layer argmin/argmax tie-breaking
+and within-block reordering, to both of which the paper's rank-error
+guarantee (eps·|F|₁, from per-layer Thm 2/4 bounds) is immune — that is
+what the differential property suite in tests/test_dyadic_jax.py pins.
+
+Items must lie in [0, 2^bits); weight > 0 inserts, < 0 deletes, 0 is
+padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantiles import dyadic_layer_capacities
+
+from . import jax_sketch as js
+from .jax_sketch import SketchState
+
+VARIANT_LAZY = js.VARIANT_LAZY
+VARIANT_SSPM = js.VARIANT_SSPM
+
+
+class DyadicState(NamedTuple):
+    """Stacked dyadic sketch bank + exactly-tracked total mass."""
+
+    bank: SketchState  # each field (bits, k) int32
+    mass: jax.Array    # () int32, |F|_1 = I - D
+
+    @property
+    def bits(self) -> int:
+        return self.bank.ids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.bank.ids.shape[1]
+
+
+def init(
+    bits: int,
+    total_counters: Optional[int] = None,
+    *,
+    eps: Optional[float] = None,
+    alpha: float = 2.0,
+) -> DyadicState:
+    """Build an empty bank sized by the shared ε/α budget split.
+
+    Pass ``eps`` (+ ``alpha``) for the paper's §4.2 sizing or
+    ``total_counters`` for the experiments' even split — the same two
+    constructors as the Python oracle (`make_dss_pm` /
+    `dyadic_from_budget`), via the same helper.
+    """
+    caps = dyadic_layer_capacities(
+        bits, total_counters=total_counters, eps=eps, alpha=alpha
+    )
+    k = max(caps)
+    lane = np.arange(k)[None, :]
+    real = lane < np.asarray(caps)[:, None]  # (bits, k) live-slot mask
+    return DyadicState(
+        bank=SketchState(
+            ids=jnp.asarray(np.where(real, int(js.EMPTY), int(js.BLOCKED)),
+                            jnp.int32),
+            counts=jnp.asarray(np.where(real, 0, int(js._INT_MAX)), jnp.int32),
+            errors=jnp.zeros((bits, k), jnp.int32),
+        ),
+        mass=jnp.int32(0),
+    )
+
+
+def layer_capacities(state: DyadicState) -> list:
+    """Live (non-BLOCKED) counters per layer — mirrors the oracle sizing."""
+    ids = jax.device_get(state.bank.ids)
+    return [int(c) for c in np.asarray(ids != int(js.BLOCKED)).sum(1)]
+
+
+def space_counters(state: DyadicState) -> int:
+    """Total live counters across layers (= oracle ``space_counters``)."""
+    return sum(layer_capacities(state))
+
+
+# ---------------------------------------------------------------------------
+# Update: shift-broadcast + one batched bank launch
+# ---------------------------------------------------------------------------
+
+def layer_items(items: jax.Array, bits: int) -> jax.Array:
+    """(B,) items -> (bits, B) per-layer node ids via one broadcast shift."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)[:, None]
+    return jnp.right_shift(items.astype(jnp.int32)[None, :], shifts)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "path", "interpret"))
+def update_block(
+    state: DyadicState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+    path: str = "block",
+    interpret: bool = True,
+) -> DyadicState:
+    """Apply a block of signed weighted updates to every layer at once.
+
+    path: 'block'  — vmapped pure-JAX two-phase update (production XLA path)
+          'kernel' — Pallas residual kernel per layer (bit-identical, the
+                     two paths share phase 1 and the residual body)
+          'serial' — vmapped pre-two-phase serial scan (A/B baseline)
+    """
+    items = items.astype(jnp.int32)
+    weights = weights.astype(jnp.int32)
+    bits = state.bank.ids.shape[0]
+    B = items.shape[0]
+    # ONE sort covers the whole bank: right-shift is monotonic, so the
+    # sorted block stays sorted in every layer view — each layer's
+    # aggregation skips its own O(B log B) sort (assume_sorted below).
+    # Items live in [0, 2^bits), so the packed-key single-sort trick
+    # (jax_sketch._stable_partition_perm with the item as the "class")
+    # replaces the argsort whenever item*B fits int32.
+    if bits + (B - 1).bit_length() <= 31:
+        order = js._stable_partition_perm(items)
+    else:
+        order = jnp.argsort(items)
+    items_l = layer_items(items[order], bits)
+    weights_l = jnp.broadcast_to(weights[order][None, :], items_l.shape)
+    if path == "block":
+        bank = js.block_update_batched(
+            state.bank, items_l, weights_l, variant, assume_sorted=True)
+    elif path == "kernel":
+        from repro.kernels.sketch_update.ops import sketch_block_update_batched
+
+        bank = sketch_block_update_batched(
+            state.bank, items_l, weights_l, variant, interpret,
+            assume_sorted=True,
+        )
+    elif path == "serial":
+        bank = jax.vmap(
+            lambda s, i, w: js.block_update_serial(s, i, w, variant)
+        )(state.bank, items_l, weights_l)
+    else:
+        raise ValueError(f"unknown path {path!r}")
+    return DyadicState(bank=bank, mass=state.mass + weights.sum())
+
+
+def process_stream(
+    state: DyadicState,
+    items: np.ndarray,
+    weights: np.ndarray,
+    variant: int = VARIANT_SSPM,
+    block: int = 1024,
+    path: str = "block",
+) -> DyadicState:
+    """Host-side convenience: feed a whole stream in fixed-size blocks.
+
+    The last block is zero-weight padded so every call traces the same
+    (bits, block) shapes — one compilation per (bits, k, block, variant).
+    """
+    items = np.asarray(items, np.int32)
+    weights = np.asarray(weights, np.int32)
+    n = len(items)
+    nb = max(1, -(-n // block))
+    pi = np.zeros(nb * block, np.int32)
+    pw = np.zeros(nb * block, np.int32)
+    pi[:n] = items
+    pw[:n] = weights
+    for b in range(nb):
+        state = update_block(
+            state,
+            jnp.asarray(pi[b * block:(b + 1) * block]),
+            jnp.asarray(pw[b * block:(b + 1) * block]),
+            variant,
+            path,
+        )
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Queries: batched rank / quantile over the dyadic decomposition
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def rank_many(state: DyadicState, xs: jax.Array) -> jax.Array:
+    """Estimated rank(x) = |{v <= x}| for a batch of query points.
+
+    The dyadic decomposition of [0, x+1) takes at most one node per
+    layer: layer l contributes node 2·(y >> (l+1)) iff bit l of y = x+1
+    is set. One vmapped ``query_many`` evaluates all (layer, query) node
+    frequencies in a single pass; negative layer estimates clamp to 0
+    (the reference does the same per node).
+    """
+    bits = state.bank.ids.shape[0]
+    xs = xs.astype(jnp.int32)
+    y = xs + 1                                              # (n,)
+    lvl = jnp.arange(bits, dtype=jnp.int32)[None, :]        # (1, bits)
+    nodes = 2 * jnp.right_shift(y[:, None], lvl + 1)        # (n, bits)
+    take = (jnp.right_shift(y[:, None], lvl) & 1) > 0       # (n, bits)
+    est = jax.vmap(js.query_many)(state.bank, nodes.T)      # (bits, n)
+    r = jnp.where(take.T, jnp.maximum(est, 0), 0).sum(axis=0)
+    # y >= 2^bits: the single level-`bits` node is the whole universe,
+    # whose frequency is the exactly-tracked |F|_1.
+    return jnp.where(y >= (1 << bits), state.mass, r).astype(jnp.int32)
+
+
+def rank(state: DyadicState, x) -> int:
+    return int(rank_many(state, jnp.asarray([x], jnp.int32))[0])
+
+
+@jax.jit
+def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
+    """Smallest x with rank(x) >= q·|F|₁, per query — lockstep binary
+    search over the universe (bits+1 rounds; converged lanes freeze).
+
+    The rank target is formed in float32 (x64 is off in this stack): for
+    |F|₁ beyond 2^24 the q·mass product can round by a few ranks, so a
+    returned quantile may sit a handful of ranks off the oracle's at
+    extreme masses — far inside the ε·|F|₁ guarantee, but not bit-equal.
+    """
+    bits = state.bank.ids.shape[0]
+    target = qs.astype(jnp.float32) * state.mass.astype(jnp.float32)
+    lo = jnp.zeros(qs.shape, jnp.int32)
+    hi = jnp.full(qs.shape, (1 << bits) - 1, jnp.int32)
+
+    def body(_, lh):
+        lo, hi = lh
+        active = lo < hi
+        mid = (lo + hi) // 2
+        pred = rank_many(state, mid).astype(jnp.float32) >= target
+        return (
+            jnp.where(active & ~pred, mid + 1, lo),
+            jnp.where(active & pred, mid, hi),
+        )
+
+    lo, _ = jax.lax.fori_loop(0, bits + 1, body, (lo, hi))
+    return lo
+
+
+def quantile(state: DyadicState, q: float) -> int:
+    return int(quantile_many(state, jnp.asarray([q], jnp.float32))[0])

@@ -22,13 +22,35 @@ mass spreads over max-error items, each absorbing up to its error).
 Block processing (``block_update``) is the **two-phase monitored-first**
 algorithm (DESIGN.md §3): updates to already-monitored items commute, so
 after segment-aggregation all monitored deltas land in one vectorized
-scatter-add (phase 1); only the residual — unmonitored inserts and, for
-SS±, unmonitored deletions — runs through the short sequential recurrence
-(phase 2), where each step uses a two-level row-tournament reduction
-(per-row min/max maintained incrementally + an (R,)-wide final reduce)
-instead of a flat O(k) argmin/argmax. Item ids are assumed non-negative;
-negative ids are reserved sentinels (EMPTY, BLOCKED) and ignored as
-padding.
+scatter-add (phase 1). The residual is further decomposed (DESIGN.md
+§3.2) into three exactly-vectorizable-or-cheap pieces, processed in the
+canonical order *inserts before unmonitored deletions*:
+
+  1.5   **bulk empty fill** — sequential semantics always place new
+        items into empty slots (in flat-index order) before any
+        eviction, so the first ``min(#empties, #residual inserts)``
+        inserts are one scatter (bit-identical to the sequential
+        recurrence);
+  1.75  **unit-weight eviction water-fill** — with w = 1 the sequential
+        "evict argmin, set min+1" recurrence is a water-filling
+        process: the evicted values are exactly the m smallest of
+        {count_j + t : t >= 0} with (value, slot-index) tie-breaking,
+        so final counts/errors/ids come from a binary-searched water
+        level plus rank arithmetic — vectorized AND bit-identical to
+        looping (see ``waterfill_unit_inserts``);
+  2a    **eviction loop** — only residual inserts with net weight != 1
+        still run the sequential recurrence, each step an O(R + LANES)
+        two-level row-tournament reduction (per-row min/max maintained
+        incrementally + an (R,)-wide final reduce) instead of a flat
+        O(k) argmin/argmax;
+  2b    **bulk deletion spread** — unmonitored SS± deletions don't
+        depend on the deleted item's identity and greedy max-error
+        spreading commutes, so all residual deletions collapse into ONE
+        spread of their summed weight (iterations = slots drained, not
+        deleted uniques).
+
+Item ids are assumed non-negative; negative ids are reserved sentinels
+(EMPTY, BLOCKED) and ignored as padding.
 """
 from __future__ import annotations
 
@@ -167,24 +189,57 @@ def process_stream(
     return state
 
 
-def _aggregate_block(items: jax.Array, weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Net weight per unique item in the block (sort + segment-sum).
+def _stable_partition_perm(klass: jax.Array) -> jax.Array:
+    """Permutation that stably groups entries by small integer class.
+
+    Encodes (class, index) into one int32 key ``class * B + index`` and
+    runs a single plain sort — the only fast sort lowering on CPU XLA
+    (argsort / multi-operand lax.sort / B-wide scatters are all ~5-10x
+    slower). ``% B`` on the sorted keys recovers the permutation.
+    Requires ``max(klass) * B`` to fit int32 — trivially true for the
+    2-3 classes used here.
+    """
+    B = klass.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    return jnp.sort(klass.astype(jnp.int32) * B + idx) % B
+
+
+def _aggregate_block(items: jax.Array, weights: jax.Array,
+                     assume_sorted: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Net weight per unique item in the block (sort + prefix sums).
 
     Returns (uids, net) of the same length; padding slots have uid == EMPTY
     and net == 0. Net weight order: uniques appear in ascending id order.
+    ``assume_sorted`` skips the argsort when the caller already provides
+    ascending items (the dyadic bank sorts the raw block once — every
+    per-layer ``x >> l`` view stays sorted because right-shift is
+    monotonic).
+
+    Per-unique sums are differences of the weight prefix-sum at segment
+    boundaries (next-head lookup via a reversed cummin) rather than
+    segment_sum scatters, which serialize on CPU.
     """
-    order = jnp.argsort(items)
-    s = items[order].astype(jnp.int32)
-    w = weights[order].astype(jnp.int32)
-    # segment heads
+    B = items.shape[0]
+    if assume_sorted:
+        s = items.astype(jnp.int32)
+        w = weights.astype(jnp.int32)
+    else:
+        order = jnp.argsort(items)
+        s = items[order].astype(jnp.int32)
+        w = weights[order].astype(jnp.int32)
+    idx = jnp.arange(B, dtype=jnp.int32)
     head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    seg = jnp.cumsum(head) - 1  # segment index per element
-    net = jax.ops.segment_sum(w, seg, num_segments=items.shape[0])
-    uids = jax.ops.segment_min(s, seg, num_segments=items.shape[0])
+    c = jnp.cumsum(w)
+    # next head at-or-after i via suffix-min; strictly-after = shift by one
+    nh = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(head, idx, B))))
+    nh_after = jnp.concatenate([nh[1:], jnp.full((1,), B, jnp.int32)])
+    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
+    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0)
+    net_h = c[seg_end] - prev  # segment sum, valid at head positions
+    perm = _stable_partition_perm(jnp.where(head, 0, 1))
     n_seg = head.sum()
-    idx = jnp.arange(items.shape[0])
-    uids = jnp.where(idx < n_seg, uids, EMPTY)
-    net = jnp.where(idx < n_seg, net, 0)
+    uids = jnp.where(idx < n_seg, s[perm], EMPTY)
+    net = jnp.where(idx < n_seg, net_h[perm], 0)
     return uids, net
 
 
@@ -265,47 +320,205 @@ def _valid_mask(uids: jax.Array, net: jax.Array) -> jax.Array:
     return (uids >= 0) & (net != 0)
 
 
+class BlockPartition(NamedTuple):
+    """Phase-1 output: monitored deltas applied, residual split by sign."""
+
+    counts1: jax.Array  # (k,) counts after the commuting monitored scatter
+    r_uids: jax.Array   # residual *insert* uids compacted to the front
+    r_net: jax.Array    # net weights aligned with r_uids
+    n_ins: jax.Array    # number of residual insert uniques (dynamic)
+    w_del: jax.Array    # summed unmonitored deletion weight (0 for lazy)
+    n_res: jax.Array    # all residual uniques incl. deletes (diagnostics)
+    n_mon: jax.Array    # monitored uniques (diagnostics)
+
+
 def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
-                    variant: int = VARIANT_SSPM):
+                    variant: int = VARIANT_SSPM) -> BlockPartition:
     """Phase-1 split of an aggregated block against the monitored set.
 
-    Monitored membership is a sorted-ids binary search (O(U log k), no
-    (U, k) materialization). Returns:
-      counts1:  counts after the commuting monitored scatter-add
-      r_uids:   residual uids compacted to the front (ascending id order)
-      r_net:    residual net weights, aligned with r_uids
-      n_res:    number of residual uniques (dynamic scalar)
-      n_mon:    number of monitored uniques (dynamic scalar, diagnostics)
+    Monitored membership runs in the cheap direction: the k slot ids are
+    binary-searched into the B sorted block uniques (k << B queries), so
+    the monitored delta application is a pure GATHER per slot — no
+    (U, k) materialization and no B-wide scatter-add (CPU XLA serializes
+    scatters). Residual inserts are compacted to the front of
+    (r_uids, r_net) in ascending id order; residual deletions are not
+    enumerated at all — unmonitored spreading is item-agnostic, so only
+    their summed weight ``w_del`` survives (see the module docstring).
     """
-    k = state.ids.shape[0]
+    B = uids.shape[0]
     valid = _valid_mask(uids, net)
-    sort_idx = jnp.argsort(state.ids)
-    sorted_ids = state.ids[sort_idx]
-    pos = jnp.clip(jnp.searchsorted(sorted_ids, uids), 0, k - 1)
-    monitored = (sorted_ids[pos] == uids) & valid
-    slot = sort_idx[pos]
+    # compacted uids are ascending uniques then EMPTY padding; remap the
+    # padding to INT_MAX to keep the array sorted for searchsorted.
+    usearch = jnp.where(uids >= 0, uids, _INT_MAX)
+    pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
+    match = usearch[pos] == state.ids  # EMPTY/BLOCKED slots never match
     # Monitored deltas commute (insert: count += w; delete: count -= w; ids
-    # and errors untouched) — one scatter-add applies them all at once.
-    delta = jnp.where(monitored, net, 0)
-    counts1 = state.counts + jax.ops.segment_sum(delta, slot, num_segments=k)
+    # and errors untouched) — one gather applies them all at once.
+    counts1 = state.counts + jnp.where(match, net[pos], 0)
+    monitored = (
+        jnp.zeros((B,), bool)
+        .at[jnp.where(match, pos, B)]
+        .set(True, mode="drop")
+    )
+    res_ins = valid & ~monitored & (net > 0)
     if variant == VARIANT_LAZY:
         # Lazy SS± drops unmonitored deletions entirely (Alg 3).
-        residual = valid & ~monitored & (net > 0)
+        w_del = jnp.int32(0)
+        n_res = res_ins.sum()
     else:
-        residual = valid & ~monitored
-    order = jnp.argsort(~residual, stable=True)
-    return counts1, uids[order], net[order], residual.sum(), monitored.sum()
+        res_del = valid & ~monitored & (net < 0)
+        w_del = (-jnp.where(res_del, net, 0)).sum()
+        n_res = res_ins.sum() + res_del.sum()
+    perm = _stable_partition_perm(jnp.where(res_ins, 0, 1))
+    n_ins = res_ins.sum()
+    idx = jnp.arange(B)
+    r_uids = jnp.where(idx < n_ins, uids[perm], 0)
+    r_net = jnp.where(idx < n_ins, net[perm], 0)
+    return BlockPartition(counts1, r_uids, r_net,
+                          n_ins, w_del, n_res, (match & valid[pos]).sum())
 
 
-def residual_phase(ids2, cnt2, err2, r_uids, r_net, n_res, variant: int):
-    """Phase 2: sequential recurrence over the residual uniques.
+def fill_empty_slots(ids: jax.Array, counts: jax.Array, errors: jax.Array,
+                     r_uids: jax.Array, r_net: jax.Array, n_ins: jax.Array):
+    """Phase 1.5: bulk-place residual inserts into empty slots.
 
-    Operates on the (R, LANES) row view. Residual uids are pairwise
-    distinct and unmonitored at every step (phase 1 never rewrites ids and
-    residual inserts each introduce a fresh id), so the membership scan is
-    dropped entirely; each step is an O(R + LANES) row tournament instead
-    of an O(k) flat reduce. Only python-int constants below — this body is
-    shared verbatim by the Pallas kernel, which must not close over arrays.
+    The sequential recurrence always prefers the first empty slot (flat
+    index order) and each fill consumes one empty, so the first
+    ``min(#empties, n_ins)`` residual inserts land deterministically:
+    the j-th insert (ascending uid) goes to the j-th empty slot. One
+    vectorized scatter, bit-identical to looping. Returns the updated
+    flat arrays and ``i0`` — the index where the eviction loop resumes
+    (if ``i0 == n_ins`` no empties ran out and the loop is skipped).
+    """
+    B = r_uids.shape[0]
+    empty = ids == EMPTY
+    e_rank = jnp.cumsum(empty) - 1  # 0,1,2,... over empty slots in index order
+    take = empty & (e_rank < n_ins)
+    src = jnp.clip(e_rank, 0, B - 1)
+    ids = jnp.where(take, r_uids[src], ids)
+    counts = jnp.where(take, r_net[src], counts)
+    errors = jnp.where(take, 0, errors)
+    return ids, counts, errors, jnp.minimum(n_ins, empty.sum())
+
+
+def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
+                           errors: jax.Array, uu: jax.Array, m: jax.Array):
+    """Phase 1.75: evict m unit-weight residual inserts in one shot.
+
+    The sequential recurrence for w = 1 pops the argmin count mc and
+    pushes mc + 1, m times. Each slot j therefore emits the consecutive
+    values count_j, count_j + 1, ... and the popped multiset is exactly
+    the m smallest values of the union {count_j + t : t >= 0}, ordered
+    by (value, slot index) — the same greedy order the loop takes. So:
+
+      * water level T = smallest value with #(union values <= T) >= m
+        (binary search, fixed trip count);
+      * slot j absorbs t_j = (T - count_j) pops below the level, plus
+        one value-T pop for the first r = m - #(values <= T-1) eligible
+        slots in index order;
+      * its final count is count_j + t_j, its error the last popped
+        value, and its id the uid whose global pop position (value-sorted,
+        index tie-broken) lands on that slot's last pop. Every non-extra
+        evicted slot fills exactly to the water line (last pop = T-1) and
+        every extra slot pops T, so positions collapse to two scalar
+        pop-counts plus one prefix count — O(k), no pairwise matrices.
+
+    Bit-identical to running the eviction loop — property-tested against
+    it — but one fused vector pass instead of m sequential steps.
+    ``uu``: unit-weight residual insert uids compacted to the front
+    (ascending id order), padded to any length >= m. BLOCKED padding
+    slots carry INT_MAX counts and stay above any water level.
+    """
+    B = uu.shape[0]
+
+    def n_leq(x):
+        # #union values <= x; the (T - count) subtraction may wrap for
+        # INT_MAX-blocked slots — masked out by the comparison.
+        return jnp.where(counts <= x, x - counts + 1, 0)
+
+    lo = counts.min()
+    hi = lo + m
+
+    def probe(_, lh):
+        lo, hi = lh
+        mid = lo + (hi - lo) // 2
+        ge = n_leq(mid).sum() >= m
+        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+    steps = B.bit_length() + 1  # enough to bisect [lo, lo + m], m <= B
+    T, _ = jax.lax.fori_loop(0, steps, probe, (lo, hi))
+
+    f_tm1 = n_leq(T - 1).sum()
+    r = m - f_tm1
+    elig = counts <= T
+    rank = jnp.cumsum(elig) - 1
+    extra = elig & (rank < r)
+    t = jnp.where(counts <= T - 1, T - counts, 0) + extra
+    evicted = t > 0
+    v_last = counts + t - 1
+    # Global pop position of each slot's last pop. Non-extra slots all
+    # stop at value T-1: position = #pops strictly below T-1 + #lower-
+    # index slots also reaching T-1. Extra slots pop T: position =
+    # #pops below T + rank among the extra set.
+    f_tm2 = n_leq(T - 2).sum()
+    under = counts <= T - 1
+    below_line = jnp.cumsum(under) - under  # exclusive prefix count
+    pos = jnp.where(extra, f_tm1 + jnp.minimum(rank, r), f_tm2 + below_line)
+    pos = jnp.clip(pos, 0, B - 1)
+    return (
+        jnp.where(evicted, uu[pos], ids),
+        counts + t,
+        jnp.where(evicted, v_last, errors),
+    )
+
+
+def _phase1(state: SketchState, items: jax.Array, weights: jax.Array,
+            variant: int, assume_sorted: bool = False):
+    """Phases 1-1.75 — everything vectorizable, shared by the pure-JAX
+    and Pallas block paths so they stay bit-identical.
+
+    Aggregate, apply monitored deltas, bulk-fill empties, water-fill
+    unit-weight evictions. Returns the updated flat arrays plus the
+    kernel-bound residual-loop inputs: the re-grouped residual array
+    (uids, net) laid out [unit inserts | non-unit inserts | rest] with
+    the loop's [start, end) range covering the non-unit inserts, and the
+    summed unmonitored deletion weight.
+    """
+    uids, net = _aggregate_block(items, weights, assume_sorted)
+    part = partition_block(state, uids, net, variant)
+    ids1, cnt1, err1, i0 = fill_empty_slots(
+        state.ids, part.counts1, state.errors, part.r_uids, part.r_net,
+        part.n_ins)
+    idx = jnp.arange(part.r_uids.shape[0])
+    remaining = (idx >= i0) & (idx < part.n_ins)
+    unit = remaining & (part.r_net == 1)
+    nonunit = remaining & (part.r_net != 1)
+    # one cheap key-sort groups [units | non-units | rest]
+    perm = _stable_partition_perm(jnp.where(unit, 0, jnp.where(nonunit, 1, 2)))
+    r_uids = part.r_uids[perm]
+    r_net = part.r_net[perm]
+    m_u = unit.sum()
+    ids1, cnt1, err1 = waterfill_unit_inserts(ids1, cnt1, err1, r_uids, m_u)
+    return (ids1, cnt1, err1, r_uids, r_net, m_u, m_u + nonunit.sum(),
+            part.w_del)
+
+
+def residual_phase(ids2, cnt2, err2, r_uids, r_net, start, n_ins, w_del,
+                   variant: int):
+    """Phase 2: eviction loop over non-unit residual inserts + one bulk
+    deletion spread.
+
+    Operates on the (R, LANES) row view, after ``_phase1`` has
+    bulk-placed empty-slot fills and water-filled every unit-weight
+    eviction. The loop covers ``r_uids[start:n_ins]`` — the inserts with
+    net weight != 1, pairwise-distinct, unmonitored, and (since the
+    empties ran out whenever the loop runs) pure min-count evictions;
+    each step is an O(R + LANES) row tournament instead of an O(k) flat
+    reduce. All unmonitored deletion weight then drains in ONE greedy
+    max-error spread (spreading is item-agnostic and commutes), so its
+    trip count is the number of slots drained, not deleted uniques. Only
+    python-int constants below — this body is shared verbatim by the
+    Pallas kernel, which must not close over arrays.
     """
     int_max = 2**31 - 1
     rhe, rmin, rmaxe = row_structures(ids2, cnt2, err2)
@@ -314,78 +527,75 @@ def residual_phase(ids2, cnt2, err2, r_uids, r_net, n_res, variant: int):
         i, ids2, cnt2, err2, rhe, rmin, rmaxe = carry
         uid = r_uids[i]
         w = r_net[i]
-        # ---- unmonitored insert (w > 0): empty slot, else evict min ----
-        wi = jnp.maximum(w, 0)
+        # unmonitored insert: empty slot if any survived, else evict min
         r_sel, c_sel, mc, has_empty = _pick_slot(ids2, cnt2, rhe, rmin)
-        do_ins = w > 0
-        ids2 = ids2.at[r_sel, c_sel].set(
-            jnp.where(do_ins, uid, ids2[r_sel, c_sel]))
-        cnt2 = cnt2.at[r_sel, c_sel].set(
-            jnp.where(do_ins, jnp.where(has_empty, wi, mc + wi), cnt2[r_sel, c_sel]))
-        err2 = err2.at[r_sel, c_sel].set(
-            jnp.where(do_ins, jnp.where(has_empty, 0, mc), err2[r_sel, c_sel]))
+        ids2 = ids2.at[r_sel, c_sel].set(uid)
+        cnt2 = cnt2.at[r_sel, c_sel].set(jnp.where(has_empty, w, mc + w))
+        err2 = err2.at[r_sel, c_sel].set(jnp.where(has_empty, 0, mc))
         # refresh the one touched row's summaries
         row_ids = ids2[r_sel]
         rhe = rhe.at[r_sel].set((row_ids == -1).any())
         rmin = rmin.at[r_sel].set(
             jnp.where(row_ids == -1, int_max, cnt2[r_sel]).min())
         rmaxe = rmaxe.at[r_sel].set(err2[r_sel].max())
-
-        if variant != VARIANT_LAZY:
-            # ---- unmonitored delete (w < 0): max-error spreading --------
-            def sp_cond(c):
-                rem, _, _, _, rme = c
-                return (rem > 0) & (rme.max() > 0)
-
-            def sp_body(c):
-                rem, cnt2, err2, rmin, rme = c
-                r = jnp.argmax(rme)
-                row_err = err2[r]
-                cc = jnp.argmax(row_err)
-                d = jnp.minimum(rem, row_err[cc])
-                cnt2 = cnt2.at[r, cc].add(-d)
-                err2 = err2.at[r, cc].add(-d)
-                rmin = rmin.at[r].set(
-                    jnp.where(ids2[r] == -1, int_max, cnt2[r]).min())
-                rme = rme.at[r].set(err2[r].max())
-                return rem - d, cnt2, err2, rmin, rme
-
-            rem0 = jnp.maximum(-w, 0)
-            _, cnt2, err2, rmin, rmaxe = jax.lax.while_loop(
-                sp_cond, sp_body, (rem0, cnt2, err2, rmin, rmaxe))
         return i + 1, ids2, cnt2, err2, rhe, rmin, rmaxe
 
     def cond(carry):
-        return carry[0] < n_res
+        return carry[0] < n_ins
 
-    _, ids2, cnt2, err2, _, _, _ = jax.lax.while_loop(
-        cond, step, (jnp.int32(0), ids2, cnt2, err2, rhe, rmin, rmaxe))
+    _, ids2, cnt2, err2, rhe, rmin, rmaxe = jax.lax.while_loop(
+        cond, step, (start.astype(jnp.int32), ids2, cnt2, err2,
+                     rhe, rmin, rmaxe))
+
+    if variant != VARIANT_LAZY:
+        # bulk unmonitored-deletion spread: greedy max-error drain of the
+        # summed weight; each slot absorbs up to its whole error.
+        def sp_cond(c):
+            rem, _, _, rme = c
+            return (rem > 0) & (rme.max() > 0)
+
+        def sp_body(c):
+            rem, cnt2, err2, rme = c
+            r = jnp.argmax(rme)
+            row_err = err2[r]
+            cc = jnp.argmax(row_err)
+            d = jnp.minimum(rem, row_err[cc])
+            cnt2 = cnt2.at[r, cc].add(-d)
+            err2 = err2.at[r, cc].add(-d)
+            rme = rme.at[r].set(err2[r].max())
+            return rem - d, cnt2, err2, rme
+
+        _, cnt2, err2, _ = jax.lax.while_loop(
+            sp_cond, sp_body, (w_del.astype(jnp.int32), cnt2, err2, rmaxe))
     return ids2, cnt2, err2
 
 
-@functools.partial(jax.jit, static_argnames=("variant",))
+@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
 def block_update(
     state: SketchState,
     items: jax.Array,
     weights: jax.Array,
     variant: int = VARIANT_SSPM,
+    assume_sorted: bool = False,
 ) -> SketchState:
     """Two-phase block (weighted) update — the production TPU path.
 
     Segment-aggregate, scatter all monitored deltas at once (they commute:
-    bit-identical to sequential processing for monitored-only blocks), then
-    run the sequential recurrence only over the residual uniques with
-    O(R + LANES) tournament steps. Guarantees are those of weighted
-    SpaceSaving± (module docstring); equivalence to unit-update processing
-    holds up to within-block reordering, which the bounded-deletion model's
-    guarantees (Thms 2/4/5) are stable to.
+    bit-identical to sequential processing for monitored-only blocks),
+    bulk-fill empty slots, then run the sequential recurrence only over
+    the leftover residual inserts with O(R + LANES) tournament steps and
+    drain all unmonitored deletion weight in one bulk spread. Guarantees
+    are those of weighted SpaceSaving± (module docstring); equivalence to
+    unit-update processing holds up to within-block reordering (inserts
+    are canonically processed before unmonitored deletions), which the
+    bounded-deletion model's guarantees (Thms 2/4/5) are stable to.
     """
     k = state.ids.shape[0]
-    uids, net = _aggregate_block(items, weights)
-    counts1, r_uids, r_net, n_res, _ = partition_block(state, uids, net, variant)
-    ids2, cnt2, err2 = pad_rows(state.ids, counts1, state.errors)
+    ids1, cnt1, err1, r_uids, r_net, nu_start, nu_end, w_del = _phase1(
+        state, items, weights, variant, assume_sorted)
+    ids2, cnt2, err2 = pad_rows(ids1, cnt1, err1)
     ids2, cnt2, err2 = residual_phase(
-        ids2, cnt2, err2, r_uids, r_net, n_res, variant)
+        ids2, cnt2, err2, r_uids, r_net, nu_start, nu_end, w_del, variant)
     return SketchState(
         ids=ids2.reshape(-1)[:k],
         counts=cnt2.reshape(-1)[:k],
@@ -418,21 +628,25 @@ def block_update_serial(
     return state
 
 
-@functools.partial(jax.jit, static_argnames=("variant",))
+@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
 def block_update_batched(
     states: SketchState,
     items: jax.Array,
     weights: jax.Array,
     variant: int = VARIANT_SSPM,
+    assume_sorted: bool = False,
 ) -> SketchState:
     """vmap'd two-phase update over stacked sketches.
 
     states: SketchState with leading batch axis (E, k); items/weights:
     (E, B). One launch for a per-expert / per-layer sketch bank (the
     configs/ model zoo stacks per-layer sketches this way).
+    ``assume_sorted``: every row of ``items`` is already ascending (the
+    dyadic bank sorts the raw block once; monotone shifts keep every
+    layer sorted) — skips E argsorts.
     """
     return jax.vmap(
-        lambda s, i, w: block_update(s, i, w, variant)
+        lambda s, i, w: block_update(s, i, w, variant, assume_sorted)
     )(states, items, weights)
 
 
@@ -441,11 +655,14 @@ def block_partition_stats(state: SketchState, items: jax.Array,
     """Diagnostics: (n_unique, n_monitored, n_residual) for one block.
 
     ``n_residual / n_unique`` is the serial fraction of the two-phase
-    update — the quantity bench_kernels reports per distribution.
+    update — the quantity bench_kernels reports per distribution. (Since
+    the bulk empty-fill and bulk deletion spread landed, the serial
+    eviction loop covers only part of n_residual; this stays the
+    conservative upper bound.)
     """
     uids, net = _aggregate_block(items, weights)
-    _, _, _, n_res, n_mon = partition_block(state, uids, net, variant)
-    return int(_valid_mask(uids, net).sum()), int(n_mon), int(n_res)
+    part = partition_block(state, uids, net, variant)
+    return int(_valid_mask(uids, net).sum()), int(part.n_mon), int(part.n_res)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,17 @@ if _SRC not in sys.path:
 # cleanly at run time instead of erroring the whole module at import.
 # ---------------------------------------------------------------------------
 try:
-    import hypothesis  # noqa: F401
+    import hypothesis
+
+    # CI runs the property suites with HYPOTHESIS_PROFILE=ci and
+    # --hypothesis-seed=0 (.github/workflows/ci.yml) so failures
+    # reproduce exactly; derandomize keeps example generation stable
+    # across hypothesis versions.
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, derandomize=True, print_blob=True
+    )
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        hypothesis.settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 except ImportError:
     _SKIP_REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
 

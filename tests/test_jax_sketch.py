@@ -181,6 +181,33 @@ class TestBlockUpdate:
             want = js.block_update(js.init(k), items[e], weights[e], 2)
             assert js.to_dict(sub) == js.to_dict(want)
 
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_waterfill_matches_sequential_eviction_loop(self, seed):
+        """Phase 1.75 (unit-weight eviction water-fill) is bit-identical
+        to the sequential argmin recurrence, including blocked INT_MAX
+        slots and negative counts."""
+        rng = np.random.default_rng(seed)
+        k = int(rng.integers(2, 40))
+        m = int(rng.integers(0, 80))
+        counts = rng.integers(-5, 25, k).astype(np.int32)
+        nb = int(rng.integers(0, k - 1))
+        if nb:
+            counts[-nb:] = 2**31 - 1  # BLOCKED padding slots
+        ids = rng.integers(100, 200, k).astype(np.int32)
+        errors = rng.integers(0, 10, k).astype(np.int32)
+        uu = (1000 + np.arange(max(m, 1))).astype(np.int32)
+
+        want_ids, want_cnt, want_err = ids.copy(), counts.copy(), errors.copy()
+        for u in uu[:m]:
+            j = int(np.argmin(want_cnt))
+            mc = want_cnt[j]
+            want_ids[j], want_cnt[j], want_err[j] = u, mc + 1, mc
+        got = js.waterfill_unit_inserts(
+            jnp.asarray(ids), jnp.asarray(counts), jnp.asarray(errors),
+            jnp.asarray(uu), jnp.int32(m))
+        for g, w in zip(got, (want_ids, want_cnt, want_err)):
+            np.testing.assert_array_equal(np.asarray(g), w)
+
     def test_select_insert_slot_matches_flat_semantics(self):
         """The tournament slot pick equals flat first-empty / first-argmin
         semantics on arbitrary (k,) stores, including k not a multiple of
@@ -245,6 +272,119 @@ class TestMerge:
         )
         m = js.merge(a, js.init(8))
         assert js.to_dict(m) == js.to_dict(a)
+
+
+def _mincount(state) -> int:
+    """0 unless full — the unseen-frequency bound `merge` charges (Lemma 3)."""
+    ids = np.asarray(state.ids)
+    if (ids == -1).any():
+        return 0
+    return int(np.asarray(state.counts).min())
+
+
+def _assert_merge_bounds(a, b, freq, k):
+    """Agarwal-style mergeability: merged estimates stay within the summed
+    error bounds of the inputs. For insertion-only inputs:
+      * no underestimation: est(x) >= f(x) for monitored x,
+      * summed overestimation: est(x) - f(x) <= mc_a + mc_b (each input's
+        per-item error is bounded by its final minCount),
+      * dropped items are covered by the merged minCount (Lemma 3 for the
+        merged summary).
+    """
+    m = js.merge(a, b)
+    got = js.to_dict(m)
+    assert len(got) <= k
+    budget = _mincount(a) + _mincount(b)
+    for it, (c, e) in got.items():
+        f = freq.get(it, 0)
+        assert c >= f, f"underestimate for {it}: {c} < {f}"
+        assert c - f <= budget, f"overestimate for {it}: {c - f} > {budget}"
+        assert e <= budget + max(_mincount(a), _mincount(b))
+    if len(got) == k:
+        mc_m = min(c for c, _ in got.values())
+        for it, f in freq.items():
+            if it not in got:
+                assert f <= mc_m, f"dropped item {it} above merged minCount"
+    return m
+
+
+class TestMergeProperties:
+    """Dedicated mergeability suite (previously `merge` had no error-bound
+    test): fixed-seed backbone + hypothesis fuzz, including states built
+    by block_update vs block_update_serial."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("k", [8, 24])
+    def test_merged_estimates_within_summed_bounds(self, seed, k):
+        rng = np.random.default_rng(seed)
+        s1 = (rng.zipf(1.3, 500) % 60).astype(np.int32)
+        s2 = (rng.zipf(1.5, 300) % 60).astype(np.int32)
+        a = js.process_stream(js.init(k), jnp.asarray(s1),
+                              jnp.ones(len(s1), jnp.int32), 2)
+        b = js.process_stream(js.init(k), jnp.asarray(s2),
+                              jnp.ones(len(s2), jnp.int32), 2)
+        from collections import Counter
+
+        freq = Counter(s1.tolist()) + Counter(s2.tolist())
+        _assert_merge_bounds(a, b, freq, k)
+
+    @pytest.mark.parametrize("builder", ["two_phase", "serial"])
+    def test_merge_of_block_built_states(self, builder):
+        """States built by the two-phase block path and by the serial
+        baseline both satisfy the merged bounds."""
+        rng = np.random.default_rng(9)
+        k = 16
+        s1 = (rng.zipf(1.4, 512) % 48).astype(np.int32)
+        s2 = (rng.zipf(1.4, 512) % 48).astype(np.int32)
+        fn = js.block_update if builder == "two_phase" else js.block_update_serial
+        a = js.init(k)
+        b = js.init(k)
+        for i in range(0, 512, 128):
+            blk1 = jnp.asarray(s1[i:i + 128])
+            blk2 = jnp.asarray(s2[i:i + 128])
+            ones = jnp.ones(128, jnp.int32)
+            a = fn(a, blk1, ones, 2)
+            b = fn(b, blk2, ones, 2)
+        from collections import Counter
+
+        freq = Counter(s1.tolist()) + Counter(s2.tolist())
+        _assert_merge_bounds(a, b, freq, k)
+
+    def test_merge_mass_conservation_when_disjoint_and_not_full(self):
+        """Not-full inputs are exact; disjoint ids => merged counts are the
+        exact union (cross terms are zero)."""
+        a = js.process_stream(js.init(8), jnp.asarray([1, 1, 2], jnp.int32),
+                              jnp.ones(3, jnp.int32), 2)
+        b = js.process_stream(js.init(8), jnp.asarray([7, 7, 7], jnp.int32),
+                              jnp.ones(3, jnp.int32), 2)
+        m = js.merge(a, b)
+        assert js.to_dict(m) == {1: (2, 0), 2: (1, 0), 7: (3, 0)}
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**20),
+           k=st.sampled_from([4, 12, 32]),
+           skew=st.sampled_from([1.2, 1.6]),
+           blocked=st.booleans())
+    def test_merge_bounds_random_streams(self, seed, k, skew, blocked):
+        rng = np.random.default_rng(seed)
+        n1 = int(rng.integers(20, 400))
+        n2 = int(rng.integers(20, 400))
+        s1 = (rng.zipf(skew, n1) % 64).astype(np.int32)
+        s2 = (rng.zipf(skew, n2) % 64).astype(np.int32)
+        if blocked:
+            a = js.block_update(js.init(k), jnp.asarray(s1),
+                                jnp.ones(n1, jnp.int32), 2)
+            b = js.block_update_serial(js.init(k), jnp.asarray(s2),
+                                       jnp.ones(n2, jnp.int32), 2)
+        else:
+            a = js.process_stream(js.init(k), jnp.asarray(s1),
+                                  jnp.ones(n1, jnp.int32), 2)
+            b = js.process_stream(js.init(k), jnp.asarray(s2),
+                                  jnp.ones(n2, jnp.int32), 2)
+        from collections import Counter
+
+        freq = Counter(s1.tolist()) + Counter(s2.tolist())
+        _assert_merge_bounds(a, b, freq, k)
 
 
 class TestVmap:

@@ -7,10 +7,12 @@ from repro.core.quantiles import (
     KLLpm,
     DyadicQuantile,
     dyadic_from_budget,
+    dyadic_layer_capacities,
     ks_divergence,
     make_dss_pm,
     true_ranks,
 )
+from repro.core.spacesaving import LazySpaceSavingPM, SpaceSavingPM
 from repro.core.streams import bounded_stream, exact_stats
 
 
@@ -67,6 +69,43 @@ class TestDyadicDecomposition:
         dq = make_dss_pm(8, eps=0.1, alpha=2.0)
         dq.process(stream)
         assert dq.mass == exact_stats(stream).residual_mass
+
+
+class TestSharedBudgetSplit:
+    """dyadic_layer_capacities is the single sizing source for the Python
+    oracle and the JAX bank (see repro.sketch.dyadic)."""
+
+    def test_constructors_use_shared_capacities(self):
+        bits, eps, alpha = 10, 0.1, 2.0
+        caps = dyadic_layer_capacities(bits, eps=eps, alpha=alpha)
+        dq = make_dss_pm(bits, eps=eps, alpha=alpha)
+        assert [l.capacity for l in dq.layers] == caps
+        caps_b = dyadic_layer_capacities(bits, total_counters=4096)
+        dqb = dyadic_from_budget(bits, 4096, "dss_pm")
+        assert [l.capacity for l in dqb.layers] == caps_b
+        # clipping: top layer never exceeds its 2-node universe
+        assert caps[-1] == 2 and caps_b[-1] == 2
+
+    def test_lazy_variant_layers(self):
+        dq = make_dss_pm(8, eps=0.2, alpha=2.0, variant="lazy")
+        assert all(isinstance(l, LazySpaceSavingPM) for l in dq.layers)
+        dq2 = dyadic_from_budget(8, 512, "dss_lazy")
+        assert all(isinstance(l, LazySpaceSavingPM) for l in dq2.layers)
+        assert all(type(l) is SpaceSavingPM
+                   for l in dyadic_from_budget(8, 512, "dss_pm").layers)
+
+    def test_lazy_rank_bound(self):
+        bits, eps, alpha = 10, 0.1, 2.0
+        stream = bounded_stream("zipf", 4000, 1 - 1 / alpha,
+                                universe=1 << bits, skew=1.1, seed=13)
+        dq = make_dss_pm(bits, eps=eps, alpha=alpha, variant="lazy")
+        dq.process(stream)
+        vals = _residual_values(stream)
+        qs = np.unique(np.quantile(vals, np.linspace(0, 1, 64)).astype(np.int64))
+        tr = true_ranks(vals, qs)
+        bound = eps * len(vals)
+        for q, t in zip(qs, tr):
+            assert abs(dq.rank(int(q)) - t) <= bound
 
 
 class TestBudgetedVariants:
