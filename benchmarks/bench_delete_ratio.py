@@ -7,8 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import UNIVERSE, csv_print, exact_freqs, make_sketches, mse, run_sketch
-from repro.core.streams import bounded_stream
+from benchmarks.common import csv_print, exact_freqs, make_sketches, mse, run_sketch, zipf_stream
 
 RATIOS = (0.0, 0.25, 0.5, 0.75, 0.9, 0.9375)
 
@@ -21,9 +20,7 @@ def run(n_total: int = 200000, runs: int = 2, seed0: int = 0):
         n_insert = int(n_total / (1 + ratio))
         agg = {}
         for r in range(runs):
-            stream = bounded_stream(
-                "zipf", n_insert, ratio, universe=UNIVERSE, seed=seed0 + r
-            )
+            stream = zipf_stream(n_insert, ratio, seed=seed0 + r)
             freqs = exact_freqs(stream)
             sample = np.nonzero(freqs > 0)[0]
             sketches = make_sketches(budget, alpha, n_stream=len(stream),

@@ -15,7 +15,6 @@ relative-shape trends only; the TPU story is the roofline analysis
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -24,8 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_print
-from repro.core.streams import bounded_stream
+from benchmarks.common import csv_print, dist_stream, min_time, write_bench_json
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
@@ -40,40 +38,29 @@ FLASH_COLUMNS = ["kernel", "seq", "parity", "ms"]
 DECODE_COLUMNS = ["kernel", "cache", "parity", "ms"]
 
 
-def _time(fn, runs: int) -> float:
-    """Min-of-N wall time: robust to CPU-contention outliers, which at the
-    ~3 ms scale of the small cells would otherwise dominate a mean."""
-    best = float("inf")
-    for _ in range(runs):
-        t0 = time.perf_counter()
-        fn().ids.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def bench_sketch_update(runs: int = 3):
+def bench_sketch_update(runs: int = 3, shapes=SKETCH_SHAPES):
     from repro.kernels.sketch_update.ops import (
         sketch_block_update,
         sketch_block_update_serial,
     )
-    from repro.sketch import jax_sketch as js
+    from repro import sketch as js
 
     rows = []
     for dist in SKETCH_DISTRIBUTIONS:
-        for k, block in SKETCH_SHAPES:
+        for k, block in shapes:
             # three cells per shape: "cold" times an insert block on an
             # empty sketch (residual fraction 1 by construction); "warm"
             # times a second insert block, where the residual fraction is
             # the unseen-unique rate of the distribution; "mixed" times an
             # interleaved insert/delete block on the warm state, covering
             # the unmonitored-deletion spreading path.
-            stream = bounded_stream(dist, 2 * block, 0.0, seed=1)
+            stream = dist_stream(dist, 2 * block, 0.0, seed=1)
             blk1 = stream[:block]
             blk2 = stream[block:2 * block]
             # fresh seed: seed=1 would replay blk1's RNG prefix and make
             # every mixed item monitored
-            mixed = bounded_stream(dist, block, 0.5, order="interleaved",
-                                   seed=2)[:block]
+            mixed = dist_stream(dist, block, 0.5, order="interleaved",
+                                seed=2)[:block]
             items1 = jnp.asarray(blk1[:, 0], jnp.int32)
             weights1 = jnp.asarray(blk1[:, 1], jnp.int32)
             cold = js.init(k)
@@ -92,10 +79,10 @@ def bench_sketch_update(runs: int = 3):
                 )
                 # warm both paths, then time
                 sketch_block_update_serial(state, items, weights).ids.block_until_ready()
-                t_two = _time(lambda: sketch_block_update(state, items, weights), runs)
-                t_serial = _time(
-                    lambda: sketch_block_update_serial(state, items, weights), runs
-                )
+                t_two = min_time(lambda: sketch_block_update(state, items, weights), runs)
+                t_serial = min_time(
+                    lambda: sketch_block_update_serial(state, items, weights),
+                    runs)
                 n_uniq, n_mon, n_res = js.block_partition_stats(state, items, weights)
                 res_frac = n_res / max(n_uniq, 1)
                 rows.append([
@@ -155,36 +142,29 @@ def bench_decode_attention(runs: int = 2):
     return rows
 
 
-def _json_default(obj):
-    """np scalars -> python; anything else is a bug, not a bool."""
-    if isinstance(obj, np.generic):
-        return obj.item()
-    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
-
-
 def _write_json(results: dict, path: str = JSON_PATH) -> None:
-    columns = {
+    write_bench_json(results, {
         "sketch_update": SKETCH_COLUMNS,
         "flash_attention": FLASH_COLUMNS,
         "decode_attention": DECODE_COLUMNS,
-    }
-    payload = {
-        name: [dict(zip(cols, r)) for r in results[name]]
-        for name, cols in columns.items()
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, default=_json_default)
-        f.write("\n")
-    print(f"\n# wrote {path}")
+    }, path)
 
 
-def run(**kw):
-    results = {
-        "sketch_update": bench_sketch_update(),
-        "flash_attention": bench_flash_attention(),
-        "decode_attention": bench_decode_attention(),
-    }
-    _write_json(results)
+def run(smoke: bool = False, write_json: bool = True, **kw):
+    if smoke:
+        results = {
+            "sketch_update": bench_sketch_update(runs=1, shapes=((256, 256),)),
+            "flash_attention": bench_flash_attention(runs=1),
+            "decode_attention": bench_decode_attention(runs=1),
+        }
+    else:
+        results = {
+            "sketch_update": bench_sketch_update(),
+            "flash_attention": bench_flash_attention(),
+            "decode_attention": bench_decode_attention(),
+        }
+    if write_json and not smoke:
+        _write_json(results)
     return results
 
 

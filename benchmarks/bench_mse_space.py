@@ -5,10 +5,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    DISTRIBUTIONS, UNIVERSE, csv_print, exact_freqs, make_sketches, mse,
+    DISTRIBUTIONS, csv_print, dist_stream, exact_freqs, make_sketches, mse,
     run_sketch,
 )
-from repro.core.streams import bounded_stream
 
 
 def run(n_insert: int = 100000, runs: int = 2, seed0: int = 0):
@@ -19,10 +18,9 @@ def run(n_insert: int = 100000, runs: int = 2, seed0: int = 0):
             for budget in (200, 500, 1000, 2000):
                 agg = {}
                 for r in range(runs):
-                    stream = bounded_stream(
-                        dist, n_insert, 0.5, universe=UNIVERSE,
-                        delete_pattern=pattern, seed=seed0 + r,
-                    )
+                    stream = dist_stream(dist, n_insert, 0.5,
+                                         delete_pattern=pattern,
+                                         seed=seed0 + r)
                     freqs = exact_freqs(stream)
                     sample = np.nonzero(freqs > 0)[0]
                     sketches = make_sketches(budget, alpha, n_stream=len(stream),

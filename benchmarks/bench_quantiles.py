@@ -16,20 +16,19 @@ Wall-times are CPU interpret-mode numbers — relative trends only
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import csv_print, run_sketch
+from benchmarks.common import csv_print, run_sketch, write_bench_json
 from repro.core.quantiles import (
     KLLpm,
     dyadic_from_budget,
     ks_divergence,
     true_ranks,
 )
-from repro.core.streams import bounded_stream
+from benchmarks.common import dist_stream, zipf_stream
 
 BITS = 16
 UNIVERSE = 1 << BITS
@@ -64,8 +63,7 @@ def run_fig8(n_insert: int = 8000, runs: int = 2, seed0: int = 0):
         agg = {}
         for r in range(runs):
             for dist in ("zipf", "binomial", "caida"):
-                stream = bounded_stream(dist, n_insert, 0.5,
-                                        universe=UNIVERSE, seed=seed0 + r)
+                stream = dist_stream(dist, n_insert, 0.5, seed=seed0 + r)
                 live = _live_values(stream)
                 for name, sk in _sketches(budget, seed0 + r).items():
                     run_sketch(sk, stream)
@@ -84,8 +82,7 @@ def run_fig9(n_total: int = 8000, runs: int = 2, seed0: int = 0):
         agg = {}
         n_insert = int(n_total / (1 + ratio))
         for r in range(runs):
-            stream = bounded_stream("zipf", n_insert, ratio,
-                                    universe=UNIVERSE, seed=seed0 + r)
+            stream = zipf_stream(n_insert, ratio, seed=seed0 + r)
             live = _live_values(stream)
             for name, sk in _sketches(budget, seed0 + r).items():
                 run_sketch(sk, stream)
@@ -102,8 +99,7 @@ def run_fig10(runs: int = 2, seed0: int = 0):
     for n in (2000, 4000, 8000):
         agg = {}
         for r in range(runs):
-            stream = bounded_stream("zipf", int(n / 1.5), 0.5,
-                                    universe=UNIVERSE, seed=seed0 + r)
+            stream = zipf_stream(int(n / 1.5), 0.5, seed=seed0 + r)
             for name, sk in _sketches(budget, seed0 + r).items():
                 agg.setdefault(name, []).append(run_sketch(sk, stream))
         for name, vals in agg.items():
@@ -159,8 +155,7 @@ def run_dyadic(n_insert: int = 6000, budget: int = 2048, block: int = 2048,
     """The BENCH_quantiles.json headline table: updates/s and KS per impl."""
     rows = []
     for dist in ("zipf", "binomial", "caida"):
-        stream = bounded_stream(dist, n_insert, 0.5,
-                                universe=UNIVERSE, seed=seed0)
+        stream = dist_stream(dist, n_insert, 0.5, seed=seed0)
         live = _live_values(stream)
         n = len(stream)
 
@@ -179,37 +174,32 @@ def run_dyadic(n_insert: int = 6000, budget: int = 2048, block: int = 2048,
     return rows
 
 
-def _json_default(obj):
-    if isinstance(obj, np.generic):
-        return obj.item()
-    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
-
-
 def _write_json(results: dict, path: str = JSON_PATH) -> None:
-    columns = {
+    write_bench_json(results, {
         "dyadic_update": DYADIC_COLUMNS,
         "fig8": FIG8_COLUMNS,
         "fig9": FIG9_COLUMNS,
         "fig10": FIG10_COLUMNS,
-    }
-    payload = {
-        name: [dict(zip(cols, r)) for r in results[name]]
-        for name, cols in columns.items() if name in results
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, default=_json_default)
-        f.write("\n")
-    print(f"\n# wrote {path}")
+    }, path)
 
 
-def run(**kw):
-    results = {
-        "dyadic_update": run_dyadic(),
-        "fig8": run_fig8(),
-        "fig9": run_fig9(),
-        "fig10": run_fig10(),
-    }
-    _write_json(results)
+def run(smoke: bool = False, write_json: bool = True, **kw):
+    if smoke:
+        results = {
+            "dyadic_update": run_dyadic(n_insert=1200, budget=256, block=512),
+            "fig8": run_fig8(n_insert=1000, runs=1),
+            "fig9": run_fig9(n_total=1500, runs=1),
+            "fig10": run_fig10(runs=1),
+        }
+    else:
+        results = {
+            "dyadic_update": run_dyadic(),
+            "fig8": run_fig8(),
+            "fig9": run_fig9(),
+            "fig10": run_fig10(),
+        }
+    if write_json and not smoke:
+        _write_json(results)
     return results
 
 

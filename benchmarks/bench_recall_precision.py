@@ -9,10 +9,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    DISTRIBUTIONS, UNIVERSE, csv_print, exact_freqs, make_sketches,
+    DISTRIBUTIONS, csv_print, dist_stream, exact_freqs, make_sketches,
     recall_precision, run_sketch,
 )
-from repro.core.streams import bounded_stream
 
 PHIS = (0.02, 0.01, 0.005)
 
@@ -26,8 +25,7 @@ def run(n_insert: int = 100000, runs: int = 2, seed0: int = 0):
             eps = phi / 2.0
             agg = {}
             for r in range(runs):
-                stream = bounded_stream(dist, n_insert, 0.5,
-                                        universe=UNIVERSE, seed=seed0 + r)
+                stream = dist_stream(dist, n_insert, 0.5, seed=seed0 + r)
                 freqs = exact_freqs(stream)
                 # paper Fig 7 space: SS± gets alpha/eps counters; CM and
                 # CMedian get (1/eps)·logU (their turnstile sizing).

@@ -1,0 +1,172 @@
+"""Sharded SpaceSaving± bank vs the single sketch at equal total budget.
+
+Three tables, all written to ``BENCH_sharded.json`` at the repo root:
+
+  * **ingest** — block-ingest wall time of the fused sharded launch
+    (``sharded.update_block``, packed-sort router + banked residual
+    loop) against the production single-sketch ``blocks.block_update``,
+    S ∈ {1, 2, 4, 8} at the same total counter budget, warm states.
+    The headline acceptance cell (zipf, B = 16384, budget 1024) tracks
+    the ≥2x S=4 speedup; every sharded cell also re-checks bit-identity
+    against the route-then-update-each-shard-serially reference.
+  * **quality** — recall / precision at phi ∈ {0.005, 0.01} and the max
+    per-item error of the sharded bank vs the single sketch on full
+    mixed insert/delete streams (alpha = 2), same budget: the
+    shard-by-hash query path adds NO merge error, so recall stays 1.0
+    and precision matches the single sketch.
+Wall-times are 2-core CPU numbers — relative trends only (DESIGN.md §7,
+§9); parity and bit-identity are exact booleans.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    UNIVERSE_BITS,
+    adversarial_stream,
+    csv_print,
+    dist_stream,
+    exact_freqs,
+    min_time,
+    recall_precision,
+    stream_blocks,
+    write_bench_json,
+)
+from repro.sketch import blocks, sharded as shd, state as st
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_sharded.json")
+
+BUDGET = 1024
+SHARD_COUNTS = (1, 2, 4, 8)
+INGEST_CELLS = (  # (dist, block)
+    ("zipf", 4096),
+    ("zipf", 8192),
+    ("zipf", 16384),
+    ("caida", 16384),
+)
+
+INGEST_COLUMNS = ["dist", "block", "budget", "shards", "ms_per_block",
+                  "items_per_s", "speedup_vs_single", "bit_identical"]
+QUALITY_COLUMNS = ["dist", "alpha", "budget", "shards", "phi", "recall",
+                   "precision", "max_err"]
+
+
+def _banks_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a.bank, b.bank))
+
+
+def bench_ingest(runs: int = 7, budget: int = BUDGET,
+                 cells=INGEST_CELLS, shard_counts=SHARD_COUNTS):
+    rows = []
+    for dist, block in cells:
+        stream = dist_stream(dist, 2 * block, 0.0, seed=1)
+        i1 = jnp.asarray(stream[:block, 0], jnp.int32)
+        w1 = jnp.asarray(stream[:block, 1], jnp.int32)
+        i2 = jnp.asarray(stream[block:2 * block, 0], jnp.int32)
+        w2 = jnp.asarray(stream[block:2 * block, 1], jnp.int32)
+        t_single = None
+        for S in shard_counts:
+            if S == 1:
+                warm = blocks.block_update(st.init(budget), i1, w1)
+                t = min_time(lambda: blocks.block_update(warm, i2, w2), runs)
+                t_single = t
+                ok = True
+            else:
+                warm = shd.update_block(shd.init(budget, S), i1, w1,
+                                        universe_bits=UNIVERSE_BITS)
+                t = min_time(
+                    lambda: shd.update_block(warm, i2, w2,
+                                             universe_bits=UNIVERSE_BITS),
+                    runs)
+                ref = shd.update_block_serial_reference(
+                    shd.update_block_serial_reference(
+                        shd.init(budget, S), i1, w1,
+                        universe_bits=UNIVERSE_BITS),
+                    i2, w2, universe_bits=UNIVERSE_BITS)
+                got = shd.update_block(warm, i2, w2,
+                                       universe_bits=UNIVERSE_BITS)
+                ok = _banks_equal(got, ref)
+            rows.append([dist, block, budget, S, t * 1e3, block / t,
+                         t_single / t, ok])
+    csv_print("sharded_ingest", INGEST_COLUMNS, rows)
+    return rows
+
+
+def bench_quality(n_insert: int = 20000, budget: int = BUDGET,
+                  shard_counts=SHARD_COUNTS, block: int = 4096):
+    rows = []
+    alpha = 2.0
+    # zipf/caida random interleaved deletions + the paper's adversarial
+    # case (targeted deletions of the heaviest items, inserts first):
+    # max unmonitored-deletion spreading, the worst case for routing too.
+    cells = (
+        ("zipf", dist_stream("zipf", n_insert, 0.5, order="interleaved",
+                             seed=3)),
+        ("caida", dist_stream("caida", n_insert, 0.5, order="interleaved",
+                              seed=3)),
+        ("zipf_adversarial", adversarial_stream(n_insert, 0.5, seed=3)),
+    )
+    for dist, stream in cells:
+        freqs = exact_freqs(stream)
+        items, weights, nb = stream_blocks(stream, block)
+        cand = np.nonzero(freqs > 0)[0]
+        q = jnp.asarray(cand, jnp.int32)
+        for S in shard_counts:
+            if S == 1:
+                sk = st.init(budget)
+                for b in range(nb):
+                    sl = slice(b * block, (b + 1) * block)
+                    sk = blocks.block_update(
+                        sk, jnp.asarray(items[sl]), jnp.asarray(weights[sl]))
+                est = np.asarray(st.query_many(sk, q), np.int64)
+            else:
+                bank = shd.init(budget, S)
+                for b in range(nb):
+                    sl = slice(b * block, (b + 1) * block)
+                    bank = shd.update_block(
+                        bank, jnp.asarray(items[sl]), jnp.asarray(weights[sl]),
+                        universe_bits=UNIVERSE_BITS)
+                est = np.asarray(shd.query_many(bank, q), np.int64)
+            max_err = int(np.abs(est - freqs[cand]).max())
+            for phi in (0.005, 0.01):
+                recall, precision = recall_precision(None, freqs, phi,
+                                                     est=est)
+                rows.append([dist, alpha, budget, S, phi, recall, precision,
+                             max_err])
+    csv_print("sharded_quality", QUALITY_COLUMNS, rows)
+    return rows
+
+
+def _write_json(results: dict, path: str = JSON_PATH) -> None:
+    write_bench_json(results,
+                     {"ingest": INGEST_COLUMNS, "quality": QUALITY_COLUMNS},
+                     path)
+
+
+def run(runs: int = 7, write_json: bool = True, smoke: bool = False, **kw):
+    if smoke:
+        results = {
+            "ingest": bench_ingest(runs=2, budget=128,
+                                   cells=(("zipf", 1024),),
+                                   shard_counts=(1, 4)),
+            "quality": bench_quality(n_insert=2000, budget=128,
+                                     shard_counts=(1, 4), block=1024),
+        }
+    else:
+        results = {
+            "ingest": bench_ingest(runs=runs),
+            "quality": bench_quality(),
+        }
+    if write_json and not smoke:
+        _write_json(results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -12,9 +12,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import UNIVERSE, csv_print, make_sketches, run_sketch
-from repro.core.streams import bounded_stream
-from repro.sketch import jax_sketch as js
+from benchmarks.common import csv_print, make_sketches, run_sketch, zipf_stream
+from repro import sketch as js
 
 LENGTHS = (5000, 10000, 20000)
 
@@ -33,14 +32,14 @@ def _time_jax_block(stream: np.ndarray, capacity: int, block: int = 4096,
     return (time.perf_counter() - t0) / max(len(stream) - len(stream) % block, 1)
 
 
-def run(runs: int = 2, seed0: int = 0):
+def run(runs: int = 2, seed0: int = 0, smoke: bool = False):
+    lengths = (3000,) if smoke else LENGTHS
     rows = []
     budget, alpha = 500, 2.0
-    for n in LENGTHS:
+    for n in lengths:
         agg = {}
         for r in range(runs):
-            stream = bounded_stream("zipf", int(n / 1.5), 0.5,
-                                    universe=UNIVERSE, seed=seed0 + r)
+            stream = zipf_stream(int(n / 1.5), 0.5, seed=seed0 + r)
             sketches = make_sketches(budget, alpha, n_stream=len(stream), seed=seed0 + r)
             for name, sk in sketches.items():
                 agg.setdefault(name, []).append(run_sketch(sk, stream))

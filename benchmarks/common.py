@@ -8,7 +8,7 @@ Trends, not absolute values, are the comparison target (DESIGN.md §7).
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Iterable, List
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -18,6 +18,50 @@ from repro.core.streams import bounded_stream
 
 DISTRIBUTIONS = ("zipf", "binomial", "caida")
 UNIVERSE = 1 << 16
+UNIVERSE_BITS = 16
+
+
+def dist_stream(dist: str, n_insert: int, delete_ratio: float = 0.5,
+                *, seed: int = 0, universe: int = UNIVERSE,
+                delete_pattern: str = "random",
+                order: str = "inserts_first") -> np.ndarray:
+    """The one bounded-deletion stream factory every bench shares.
+
+    Thin front-end over ``repro.core.streams.bounded_stream`` pinning the
+    benchmarks' common universe so scripts stop re-spelling the same
+    kwargs (and silently diverging on them).
+    """
+    return bounded_stream(dist, n_insert, delete_ratio, universe=universe,
+                          delete_pattern=delete_pattern, order=order,
+                          seed=seed)
+
+
+def zipf_stream(n_insert: int, delete_ratio: float = 0.5, *, seed: int = 0,
+                order: str = "inserts_first") -> np.ndarray:
+    """Zipf marginal (the paper's synthetic default, §5.2)."""
+    return dist_stream("zipf", n_insert, delete_ratio, seed=seed, order=order)
+
+
+def adversarial_stream(n_insert: int, delete_ratio: float = 0.5,
+                       *, seed: int = 0) -> np.ndarray:
+    """The paper's adversarial case: targeted deletions, inserts first.
+
+    Deleting the heaviest monitored items maximizes unmonitored-deletion
+    spreading — the locality-minimizing worst case for SS± (§5.3).
+    """
+    return dist_stream("zipf", n_insert, delete_ratio, seed=seed,
+                       delete_pattern="targeted", order="inserts_first")
+
+
+def stream_blocks(stream: np.ndarray, block: int):
+    """(items, weights) int32 arrays zero-padded to a multiple of block."""
+    n = len(stream)
+    nb = max(1, -(-n // block))
+    items = np.zeros(nb * block, np.int32)
+    weights = np.zeros(nb * block, np.int32)
+    items[:n] = stream[:, 0]
+    weights[:n] = stream[:, 1]
+    return items, weights, nb
 
 
 def exact_freqs(stream: np.ndarray, universe: int = UNIVERSE) -> np.ndarray:
@@ -45,15 +89,25 @@ def mse(sketch, freqs: np.ndarray, sample: np.ndarray) -> float:
     return float(np.mean((est - freqs[sample]) ** 2))
 
 
-def recall_precision(sketch, freqs: np.ndarray, phi: float):
+def recall_precision(sketch, freqs: np.ndarray, phi: float,
+                     est: Optional[np.ndarray] = None):
+    """phi-heavy-hitter recall/precision vs exact ``freqs``.
+
+    ``est``: optional precomputed estimates aligned with the nonzero
+    candidates of ``freqs`` — callers that already ran query_many (e.g.
+    bench_sharded, which reuses one estimate vector across phis) pass it
+    to skip the per-sketch query here.
+    """
     live = freqs.sum()
     thresh = phi * live
     true_hot = set(np.nonzero(freqs >= thresh)[0].tolist())
     cand = np.nonzero(freqs > 0)[0]
-    if hasattr(sketch, "query_many"):
-        est = np.asarray(sketch.query_many(cand), dtype=np.float64)
-    else:
-        est = np.asarray([sketch.query(int(i)) for i in cand], dtype=np.float64)
+    if est is None:
+        if hasattr(sketch, "query_many"):
+            est = np.asarray(sketch.query_many(cand), dtype=np.float64)
+        else:
+            est = np.asarray([sketch.query(int(i)) for i in cand],
+                             dtype=np.float64)
     reported = set(cand[est >= thresh].tolist())
     tp = len(true_hot & reported)
     recall = tp / max(len(true_hot), 1)
@@ -83,6 +137,50 @@ def make_sketches(budget: int, alpha: float, universe: int = UNIVERSE,
                      universe=universe, stream_len=max(n_stream, 1000),
                      seed=seed, sample_const=4.0),
     }
+
+
+def min_time(fn: Callable, runs: int) -> float:
+    """Min-of-N wall time of a jitted callable returning a JAX pytree.
+
+    One warmup call (compile), then min over ``runs`` — robust to the
+    CPU-contention outliers that would dominate a mean at the ms scale.
+    Shared by the kernel/sharded benches (was duplicated per script).
+    """
+    import jax
+
+    def ready(out):
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+
+    ready(fn())
+    best = float("inf")
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _json_default(obj):
+    """np scalars -> python; anything else is a bug, not a bool."""
+    if isinstance(obj, np.generic):
+        return obj.item()
+    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
+
+
+def write_bench_json(results: Dict[str, list], columns: Dict[str, List[str]],
+                     path: str) -> None:
+    """The BENCH_*.json artifact contract: one table per key, rows as
+    column-name dicts (machine-readable perf trajectory across PRs)."""
+    import json
+
+    payload = {
+        name: [dict(zip(cols, r)) for r in results[name]]
+        for name, cols in columns.items() if name in results
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_json_default)
+        f.write("\n")
+    print(f"\n# wrote {path}")
 
 
 def csv_print(name: str, header: List[str], rows: Iterable[Iterable]) -> None:

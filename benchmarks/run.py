@@ -1,8 +1,10 @@
 """Benchmark orchestrator: one bench per paper table/figure + kernels +
-the dry-run/roofline summary.
+the sharded-bank scaling bench + the dry-run/roofline summary.
 
     PYTHONPATH=src python -m benchmarks.run            # full CI suite
     PYTHONPATH=src python -m benchmarks.run --only fig5
+    PYTHONPATH=src python -m benchmarks.run --smoke    # bitrot guard: tiny
+                                                       # shapes, no JSON
 """
 from __future__ import annotations
 
@@ -33,18 +35,40 @@ BENCHES = {
     "quantiles": ("benchmarks.bench_quantiles",
                   "Figs 8-10 + dyadic bank throughput (BENCH_quantiles.json)"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/time"),
+    "sharded": ("benchmarks.bench_sharded",
+                "hash-sharded bank vs single sketch (BENCH_sharded.json)"),
     "compression": ("benchmarks.bench_compression", "grad compression bytes"),
     "h2o": ("benchmarks.bench_h2o_quality", "SS± KV-cache retention quality"),
+}
+
+# --smoke shape overrides: every bench still executes end to end (import,
+# trace, compile, report) so bitrot fails CI, but at seconds-scale sizes
+# and with JSON artifacts suppressed. Benches without size knobs already
+# run at smoke scale (h2o decodes a smoke config; compression emulates 8
+# CPU devices on tiny grads).
+SMOKE_KW = {
+    "fig4": dict(n_insert=2000, runs=1),
+    "fig5": dict(n_total=4000, runs=1),
+    "fig6": dict(runs=1, smoke=True),
+    "fig7": dict(n_insert=2000, runs=1),
+    "quantiles": dict(smoke=True, write_json=False),
+    "kernels": dict(smoke=True, write_json=False),
+    "sharded": dict(smoke=True, write_json=False),
+    "compression": {},
+    "h2o": {},
 }
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no JSON artifacts (CI bitrot guard)")
     args = ap.parse_args()
 
     names = [args.only] if args.only else list(BENCHES)
     t_all = time.time()
+    failed = []
     for name in names:
         mod_name, desc = BENCHES[name]
         print(f"\n{'='*70}\n== {name}: {desc}\n{'='*70}", flush=True)
@@ -63,11 +87,16 @@ def main() -> int:
             print(out.stdout)
             if out.returncode != 0:
                 print(out.stderr[-1500:])
+                failed.append(name)
         else:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run()
+            mod.run(**(SMOKE_KW[name] if args.smoke else {}))
         print(f"== {name} done in {time.time()-t0:.1f}s", flush=True)
     _roofline_summary()
+    if failed:
+        print(f"\nFAILED benches: {', '.join(failed)} "
+              f"({time.time()-t_all:.1f}s)")
+        return 1
     print(f"\nall benchmarks done in {time.time()-t_all:.1f}s")
     return 0
 

@@ -80,6 +80,38 @@ class TokenPipeline:
         while True:
             yield self.next_batch()
 
+    # -- sketch integration -------------------------------------------------
+    def token_stats(
+        self,
+        steps: int,
+        *,
+        capacity: int = 4096,
+        window: int = 64,
+        shards: Optional[int] = None,
+        block: int = 8192,
+    ):
+        """Feed ``steps`` host-local batches into a windowed TokenStats.
+
+        The bounded-deletion wiring of the module docstring, in one call:
+        each batch block-ingests, batches older than ``window`` delete.
+        With ``shards=S`` the tracker runs on the hash-partitioned
+        ``repro.sketch.sharded`` bank (same total counter budget, one
+        routed launch per block; shard_map across the mesh "data" axis
+        on real meshes) — the host-sharded stream and the shard-hashed
+        sketch compose freely because batch addressing is stateless and
+        the shard hash is a pure function of the token id. The vocab
+        bound feeds the router's packed single-sort path.
+        """
+        from repro.sketch.stats import TokenStats
+
+        ts = TokenStats(
+            capacity=capacity, window=window, shards=shards, block=block,
+            universe_bits=max(int(self.cfg.vocab_size - 1).bit_length(), 1),
+        )
+        for _ in range(steps):
+            ts.update(self.next_batch()["tokens"])
+        return ts
+
     # -- checkpointable state ----------------------------------------------
     def state(self) -> Dict:
         return {"cursor": self.cursor, "seed": self.cfg.seed}

@@ -17,7 +17,7 @@ The loop is a dynamic-trip-count while over ``n_res`` residual uniques,
 each step an O(R + LANES) two-level row tournament (per-row min/max
 summaries updated incrementally, (R,)-wide final reduce) instead of a flat
 O(k) argmin/argmax. The body is shared with the pure-JAX layer
-(``repro.sketch.jax_sketch.residual_phase``) so the two paths are
+(``repro.sketch.phases.residual_phase``) so the two paths are
 bit-identical.
 
 ``sketch_update_kernel_serial`` — the pre-two-phase baseline: a serial
@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.sketch.jax_sketch import LANES, residual_phase
+from repro.sketch.phases import residual_phase
+from repro.sketch.state import LANES
 
 _INT_MAX = 2**31 - 1  # python ints: pallas kernels must not close over arrays
 EMPTY = -1

@@ -9,7 +9,7 @@
      (one scatter, bit-identical to the sequential recurrence),
   4. phase 1.75 — water-fill every unit-weight eviction in one fused
      vector pass (exactly the sequential argmin recurrence, see
-     ``jax_sketch.waterfill_unit_inserts``),
+     ``phases.waterfill_unit_inserts``),
   5. phase 2 — launch the Pallas residual kernel: a dynamic-length
      eviction tournament loop over the non-unit residual inserts plus
      one bulk max-error spread of the summed unmonitored deletions.
@@ -17,7 +17,7 @@
 Steps 1–4 are dense, branch-free vector ops that XLA fuses on the VPU;
 only the inherently-sequential eviction/spread recurrences live in the
 kernel.
-Phase 1/2 splitting logic is shared with ``repro.sketch.jax_sketch`` so
+Phase 1/2 splitting logic is shared with ``repro.sketch.blocks`` so
 the kernel path is bit-identical to the pure-JAX ``block_update``.
 
 Also exposed: ``sketch_block_update_serial`` (the pre-two-phase baseline
@@ -27,7 +27,7 @@ for a per-expert / per-layer sketch bank).
 
 Handles layout (1D k -> (R,128) VMEM tiles) and capacity padding with
 blocked sentinel slots; exposes the same SketchState interface as
-``repro.sketch.jax_sketch``.
+``repro.sketch``.
 """
 from __future__ import annotations
 
@@ -36,11 +36,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sketch.jax_sketch import (
-    SketchState,
-    _phase1,
-    pad_rows,
-)
+from repro.sketch.blocks import _phase1
+from repro.sketch.phases import pad_rows
+from repro.sketch.state import SketchState
 from .kernel import sketch_residual_kernel, sketch_update_kernel_serial
 
 
@@ -83,7 +81,7 @@ def sketch_block_update_batched(
 
     One stacked launch for per-expert / per-layer sketch banks (the
     configs/ model zoo). ``assume_sorted``: every row of ``items`` is
-    already ascending (see ``jax_sketch.block_update_batched``).
+    already ascending (see ``blocks.block_update_batched``).
     """
     return jax.vmap(
         lambda s, i, w: sketch_block_update(s, i, w, variant, interpret,

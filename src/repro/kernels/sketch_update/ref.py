@@ -15,7 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sketch.jax_sketch import SketchState, apply_update
+from repro.sketch.blocks import apply_update
+from repro.sketch.state import SketchState
 
 
 @functools.partial(jax.jit, static_argnames=("variant",))

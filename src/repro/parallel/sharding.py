@@ -74,6 +74,11 @@ def default_rules(
         # over the slot dim psums across "model"). With seq_shard (batch=1
         # long context) it additionally takes the data axis.
         "cache": ("model",) + tuple(dp) if seq_shard else "model",
+        # Hash-sharded sketch banks (repro.sketch.sharded): the shard dim
+        # rides the data axis — each DP slice owns S/|data| shards, block
+        # ingest is shard-local (zero cross-device traffic), cross-host
+        # reduction is the shard-wise mergeable-summaries merge.
+        "shards": dp,
     }
     param = {
         "embed": dp if fsdp else None,   # FSDP / ZeRO-3 storage sharding
@@ -170,6 +175,26 @@ def act_spec(shape, *names: Optional[str]) -> Optional[NamedSharding]:
     if mesh is None or rules is None:
         return None
     return NamedSharding(mesh, _resolve(rules.act, names, shape, mesh))
+
+
+def mesh_axis(name: str, table: str = "act") -> Optional[Tuple[str, ...]]:
+    """Resolved mesh axes for one logical dim name under the active mesh.
+
+    Returns the tuple of mesh axis names the logical dim binds to, with
+    axes absent from the current mesh dropped, or None when no mesh/rules
+    are active or nothing binds. Lets non-tensor consumers (e.g. the
+    sharded sketch bank's shard dim) reuse the one rules table instead of
+    hard-coding axis names.
+    """
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return None
+    ax = getattr(rules, table).get(name)
+    if ax is None:
+        return None
+    flat = (ax,) if isinstance(ax, str) else tuple(ax)
+    flat = tuple(a for a in flat if a in mesh.axis_names)
+    return flat or None
 
 
 def parse_axes(names_str: str):

@@ -28,7 +28,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.sketch.jax_sketch import select_insert_slot
+from repro.sketch.phases import select_insert_slot
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -45,7 +45,7 @@ def _insert_token_row(ids, counts, errors, k_row, v_row, pos, k_new, v_new):
 
     ids/counts/errors: (C,); k_row/v_row: (C, KV, hd). Returns updated
     tuple + the slot index written. Slot selection is the shared two-level
-    row-tournament reduction (jax_sketch.select_insert_slot): lane-wise
+    row-tournament reduction (phases.select_insert_slot): lane-wise
     (R, 128) min + (R,)-wide reduce — the same TPU-friendly shape as the
     sketch kernel's residual phase, instead of a flat 1D argmin over C.
     """

@@ -1,46 +1,93 @@
 """JAX-native SpaceSaving± — the TPU-adapted implementation of the paper.
 
-The sketch state is three dense arrays (ids/counts/errors) instead of the
-paper's two heaps (see DESIGN.md §3 for the hardware-adaptation rationale).
-All ops are pure functions, jit/vmap/scan-compatible, and mirrored by a
-Pallas TPU kernel in ``repro.kernels.sketch_update``. Block updates run
-the two-phase monitored-first algorithm (vectorized monitored scatter +
-short residual tournament loop); ``block_update_serial`` keeps the old
-serial scan for A/B benchmarking.
+Layered package (DESIGN.md §9):
 
-``repro.sketch.dyadic`` stacks ``bits`` of these sketches into one
-(bits, k) bank — Dyadic SpaceSaving±, the paper's deterministic
-bounded-deletion quantile sketch — updated with a single batched launch
-per block (see DESIGN.md §8).
+  * ``state``   — the dense ids/counts/errors counter store, its
+    constructors, queries, topk and the mergeable-summaries merge;
+  * ``phases``  — the two-phase update's primitives (stable partition,
+    (R, LANES) row tournament, bulk empty fill, unit-weight water-fill,
+    residual phase) shared bit-identically with the Pallas kernel in
+    ``repro.kernels.sketch_update``;
+  * ``blocks``  — apply_update / process_stream and the two-phase
+    monitored-first block updates (vectorized monitored scatter + short
+    residual tournament loop); ``block_update_serial`` keeps the old
+    serial scan for A/B benchmarking;
+  * ``dyadic``  — ``bits`` sketches stacked into one (bits, k) bank:
+    Dyadic SpaceSaving±, the paper's deterministic bounded-deletion
+    quantile sketch, one batched launch per block (DESIGN.md §8);
+  * ``sharded`` — a hash-partitioned bank of S per-shard sketches
+    (stacked (S, k) arrays): one routed ``block_update_batched`` launch
+    per block, vmap on CPU or shard_map over the mesh data axis, with
+    merge-error-free global queries (DESIGN.md §9);
+  * ``jax_sketch`` — backward-compat shim re-exporting every historical
+    name from the layer modules.
+
+All ops are pure functions, jit/vmap/scan-compatible.
 """
-from . import dyadic
-from .jax_sketch import (
-    EMPTY,
-    SketchState,
+from . import blocks, dyadic, jax_sketch, phases, sharded, state
+from .blocks import (
+    apply_update,
+    block_partition_stats,
     block_update,
     block_update_batched,
     block_update_serial,
+    process_stream,
+)
+from .phases import (
+    fill_empty_slots,
+    pad_rows,
+    residual_phase,
+    row_structures,
+    select_insert_slot,
+    waterfill_unit_inserts,
+)
+from .state import (
+    BLOCKED,
+    EMPTY,
+    LANES,
+    VARIANT_LAZY,
+    VARIANT_SSPM,
+    SketchState,
     init,
     merge,
-    process_stream,
     query,
     query_many,
-    select_insert_slot,
+    to_dict,
     topk,
 )
 
 __all__ = [
+    "blocks",
     "dyadic",
+    "jax_sketch",
+    "phases",
+    "sharded",
+    "state",
+    # state layer
     "EMPTY",
+    "BLOCKED",
+    "LANES",
+    "VARIANT_LAZY",
+    "VARIANT_SSPM",
     "SketchState",
     "init",
-    "process_stream",
-    "block_update",
-    "block_update_batched",
-    "block_update_serial",
     "query",
     "query_many",
-    "merge",
-    "select_insert_slot",
     "topk",
+    "merge",
+    "to_dict",
+    # phases layer
+    "pad_rows",
+    "row_structures",
+    "select_insert_slot",
+    "fill_empty_slots",
+    "waterfill_unit_inserts",
+    "residual_phase",
+    # blocks layer
+    "apply_update",
+    "process_stream",
+    "block_update",
+    "block_update_serial",
+    "block_update_batched",
+    "block_partition_stats",
 ]

@@ -1,0 +1,433 @@
+"""Block algorithms of the JAX SpaceSaving± sketch.
+
+Top algorithm layer of the sketch package (DESIGN.md §9): single-update
+semantics (``apply_update``), the exact sequential scan
+(``process_stream``), and the **two-phase monitored-first** block update
+(DESIGN.md §3): updates to already-monitored items commute, so after
+segment-aggregation all monitored deltas land in one vectorized
+scatter-add (phase 1). The residual is further decomposed (DESIGN.md
+§3.2) into three exactly-vectorizable-or-cheap pieces, processed in the
+canonical order *inserts before unmonitored deletions*:
+
+  1.5   **bulk empty fill** — sequential semantics always place new
+        items into empty slots (in flat-index order) before any
+        eviction, so the first ``min(#empties, #residual inserts)``
+        inserts are one scatter (bit-identical to the sequential
+        recurrence);
+  1.75  **unit-weight eviction water-fill** — with w = 1 the sequential
+        "evict argmin, set min+1" recurrence is a water-filling
+        process: the evicted values are exactly the m smallest of
+        {count_j + t : t >= 0} with (value, slot-index) tie-breaking,
+        so final counts/errors/ids come from a binary-searched water
+        level plus rank arithmetic — vectorized AND bit-identical to
+        looping (see ``phases.waterfill_unit_inserts``);
+  2a    **eviction loop** — only residual inserts with net weight != 1
+        still run the sequential recurrence, each step an O(R + LANES)
+        two-level row-tournament reduction (per-row min/max maintained
+        incrementally + an (R,)-wide final reduce) instead of a flat
+        O(k) argmin/argmax;
+  2b    **bulk deletion spread** — unmonitored SS± deletions don't
+        depend on the deleted item's identity and greedy max-error
+        spreading commutes, so all residual deletions collapse into ONE
+        spread of their summed weight (iterations = slots drained, not
+        deleted uniques).
+
+All updates are *branchless* (jnp.where selects) so they vectorize on the
+VPU and vmap across many sketches (per-expert / per-layer / per-shard).
+
+Semantics: identical to the reference `repro.core.spacesaving` classes up
+to argmin/argmax tie-breaking (reference heaps break ties by heap order;
+here ties break to the lowest flat index). All paper guarantees
+(Thms 2/4/5) are tie-break independent and are property-tested for this
+implementation directly.
+
+``variant``: 1 = Lazy SS± (Alg 3), 2 = SS± (Alg 4). Insertions (Alg 1) are
+shared. Weighted updates follow the standard weighted SpaceSaving
+extension (replacement absorbs the whole weight; deletion of unmonitored
+mass spreads over max-error items, each absorbing up to its error).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .phases import (
+    _stable_partition_perm,
+    fill_empty_slots,
+    pad_rows,
+    residual_phase,
+    waterfill_unit_inserts,
+)
+from .state import EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX
+
+
+# ---------------------------------------------------------------------------
+# Single weighted update (branchless)
+# ---------------------------------------------------------------------------
+
+def _insert(state: SketchState, item: jax.Array, w: jax.Array) -> SketchState:
+    ids, counts, errors = state
+    eq = ids == item
+    monitored = eq.any()
+    slot_mon = jnp.argmax(eq)
+
+    empty = ids == EMPTY
+    has_empty = empty.any()
+    slot_empty = jnp.argmax(empty)
+
+    jmin = jnp.argmin(jnp.where(empty, _INT_MAX, counts))
+    min_count = counts[jmin]
+
+    sel = jnp.where(monitored, slot_mon, jnp.where(has_empty, slot_empty, jmin))
+    new_count = jnp.where(
+        monitored, counts[slot_mon] + w, jnp.where(has_empty, w, min_count + w)
+    )
+    new_error = jnp.where(
+        monitored, errors[slot_mon], jnp.where(has_empty, 0, min_count)
+    )
+    return SketchState(
+        ids=ids.at[sel].set(item),
+        counts=counts.at[sel].set(new_count),
+        errors=errors.at[sel].set(new_error),
+    )
+
+
+def _delete(
+    state: SketchState, item: jax.Array, w: jax.Array, variant: int
+) -> SketchState:
+    ids, counts, errors = state
+    eq = ids == item
+    monitored = eq.any()
+    slot_mon = jnp.argmax(eq)
+
+    # monitored: subtract w at the monitored slot
+    counts_mon = counts.at[slot_mon].add(jnp.where(monitored, -w, 0))
+
+    if variant == VARIANT_LAZY:
+        return SketchState(ids, counts_mon, errors)
+
+    # SS± (Alg 4): unmonitored deletion decrements (count, error) of the
+    # max-error item; weight spreads across items, each absorbing <= error_j.
+    def spread(carry):
+        rem, cnts, errs = carry
+        jerr = jnp.argmax(errs)
+        max_err = errs[jerr]
+        d = jnp.minimum(rem, max_err)
+        return (
+            rem - d,
+            cnts.at[jerr].add(-d),
+            errs.at[jerr].add(-d),
+        )
+
+    def cond(carry):
+        rem, _, errs = carry
+        return (rem > 0) & (errs.max() > 0)
+
+    rem0 = jnp.where(monitored, 0, w)
+    _, counts_un, errors_un = jax.lax.while_loop(
+        cond, lambda c: spread(c), (rem0, counts_mon, errors)
+    )
+    return SketchState(ids, counts_un, errors_un)
+
+
+def apply_update(
+    state: SketchState, item: jax.Array, weight: jax.Array, variant: int = VARIANT_SSPM
+) -> SketchState:
+    """One signed, weighted update. weight > 0 insert, < 0 delete, 0 no-op."""
+    ins = _insert(state, item, jnp.maximum(weight, 0))
+    dele = _delete(state, item, jnp.maximum(-weight, 0), variant)
+    pick = weight > 0
+    return jax.tree.map(
+        lambda a, b: jnp.where(pick, a, b), ins, dele
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sequential scan paths (oracle + serial block baseline share one body)
+# ---------------------------------------------------------------------------
+
+def _apply_update_scan(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int,
+    skip_sentinels: bool,
+) -> SketchState:
+    """The per-item ``apply_update`` scan shared by ``process_stream`` and
+    ``block_update_serial`` (previously duplicated in both).
+
+    ``skip_sentinels``: the aggregated-uniques path carries EMPTY/zero-net
+    padding entries that must leave the state untouched; the raw-stream
+    oracle path applies every entry verbatim.
+    """
+
+    def step(st, xw):
+        item, w = xw
+        new = apply_update(st, item, w, variant)
+        if skip_sentinels:
+            skip = (item == EMPTY) | (w == 0)
+            new = jax.tree.map(lambda a, b: jnp.where(skip, b, a), new, st)
+        return new, None
+
+    state, _ = jax.lax.scan(
+        step, state, (items.astype(jnp.int32), weights.astype(jnp.int32))
+    )
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def process_stream(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """Exact sequential semantics via lax.scan (the oracle path)."""
+    return _apply_update_scan(state, items, weights, variant,
+                              skip_sentinels=False)
+
+
+# ---------------------------------------------------------------------------
+# Block aggregation + phase-1 partition against the monitored set
+# ---------------------------------------------------------------------------
+
+def _aggregate_block(items: jax.Array, weights: jax.Array,
+                     assume_sorted: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Net weight per unique item in the block (sort + prefix sums).
+
+    Returns (uids, net) of the same length; padding slots have uid == EMPTY
+    and net == 0. Net weight order: uniques appear in ascending id order.
+    ``assume_sorted`` skips the argsort when the caller already provides
+    ascending items (the dyadic bank sorts the raw block once — every
+    per-layer ``x >> l`` view stays sorted because right-shift is
+    monotonic; the sharded router shares one sort the same way).
+
+    Per-unique sums are differences of the weight prefix-sum at segment
+    boundaries (next-head lookup via a reversed cummin) rather than
+    segment_sum scatters, which serialize on CPU.
+    """
+    B = items.shape[0]
+    if assume_sorted:
+        s = items.astype(jnp.int32)
+        w = weights.astype(jnp.int32)
+    else:
+        order = jnp.argsort(items)
+        s = items[order].astype(jnp.int32)
+        w = weights[order].astype(jnp.int32)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    c = jnp.cumsum(w)
+    # next head at-or-after i via suffix-min; strictly-after = shift by one
+    nh = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(head, idx, B))))
+    nh_after = jnp.concatenate([nh[1:], jnp.full((1,), B, jnp.int32)])
+    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
+    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0)
+    net_h = c[seg_end] - prev  # segment sum, valid at head positions
+    perm = _stable_partition_perm(jnp.where(head, 0, 1))
+    n_seg = head.sum()
+    uids = jnp.where(idx < n_seg, s[perm], EMPTY)
+    net = jnp.where(idx < n_seg, net_h[perm], 0)
+    return uids, net
+
+
+def _valid_mask(uids: jax.Array, net: jax.Array) -> jax.Array:
+    """Aggregated entries that carry real work: non-sentinel id, nonzero net."""
+    return (uids >= 0) & (net != 0)
+
+
+class BlockPartition(NamedTuple):
+    """Phase-1 output: monitored deltas applied, residual split by sign."""
+
+    counts1: jax.Array  # (k,) counts after the commuting monitored scatter
+    r_uids: jax.Array   # residual *insert* uids compacted to the front
+    r_net: jax.Array    # net weights aligned with r_uids
+    n_ins: jax.Array    # number of residual insert uniques (dynamic)
+    w_del: jax.Array    # summed unmonitored deletion weight (0 for lazy)
+    n_res: jax.Array    # all residual uniques incl. deletes (diagnostics)
+    n_mon: jax.Array    # monitored uniques (diagnostics)
+
+
+def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
+                    variant: int = VARIANT_SSPM) -> BlockPartition:
+    """Phase-1 split of an aggregated block against the monitored set.
+
+    Monitored membership runs in the cheap direction: the k slot ids are
+    binary-searched into the B sorted block uniques (k << B queries), so
+    the monitored delta application is a pure GATHER per slot — no
+    (U, k) materialization and no B-wide scatter-add (CPU XLA serializes
+    scatters). Residual inserts are compacted to the front of
+    (r_uids, r_net) in ascending id order; residual deletions are not
+    enumerated at all — unmonitored spreading is item-agnostic, so only
+    their summed weight ``w_del`` survives (see the module docstring).
+    """
+    B = uids.shape[0]
+    valid = _valid_mask(uids, net)
+    # compacted uids are ascending uniques then EMPTY padding; remap the
+    # padding to INT_MAX to keep the array sorted for searchsorted.
+    usearch = jnp.where(uids >= 0, uids, _INT_MAX)
+    pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
+    match = usearch[pos] == state.ids  # EMPTY/BLOCKED slots never match
+    # Monitored deltas commute (insert: count += w; delete: count -= w; ids
+    # and errors untouched) — one gather applies them all at once.
+    counts1 = state.counts + jnp.where(match, net[pos], 0)
+    monitored = (
+        jnp.zeros((B,), bool)
+        .at[jnp.where(match, pos, B)]
+        .set(True, mode="drop")
+    )
+    res_ins = valid & ~monitored & (net > 0)
+    if variant == VARIANT_LAZY:
+        # Lazy SS± drops unmonitored deletions entirely (Alg 3).
+        w_del = jnp.int32(0)
+        n_res = res_ins.sum()
+    else:
+        res_del = valid & ~monitored & (net < 0)
+        w_del = (-jnp.where(res_del, net, 0)).sum()
+        n_res = res_ins.sum() + res_del.sum()
+    perm = _stable_partition_perm(jnp.where(res_ins, 0, 1))
+    n_ins = res_ins.sum()
+    idx = jnp.arange(B)
+    r_uids = jnp.where(idx < n_ins, uids[perm], 0)
+    r_net = jnp.where(idx < n_ins, net[perm], 0)
+    return BlockPartition(counts1, r_uids, r_net,
+                          n_ins, w_del, n_res, (match & valid[pos]).sum())
+
+
+def _phase1(state: SketchState, items: jax.Array, weights: jax.Array,
+            variant: int, assume_sorted: bool = False):
+    """Phases 1-1.75 — everything vectorizable, shared by the pure-JAX
+    and Pallas block paths so they stay bit-identical.
+
+    Aggregate, apply monitored deltas, bulk-fill empties, water-fill
+    unit-weight evictions. Returns the updated flat arrays plus the
+    kernel-bound residual-loop inputs: the re-grouped residual array
+    (uids, net) laid out [unit inserts | non-unit inserts | rest] with
+    the loop's [start, end) range covering the non-unit inserts, and the
+    summed unmonitored deletion weight.
+    """
+    uids, net = _aggregate_block(items, weights, assume_sorted)
+    part = partition_block(state, uids, net, variant)
+    ids1, cnt1, err1, i0 = fill_empty_slots(
+        state.ids, part.counts1, state.errors, part.r_uids, part.r_net,
+        part.n_ins)
+    idx = jnp.arange(part.r_uids.shape[0])
+    remaining = (idx >= i0) & (idx < part.n_ins)
+    unit = remaining & (part.r_net == 1)
+    nonunit = remaining & (part.r_net != 1)
+    # one cheap key-sort groups [units | non-units | rest]
+    perm = _stable_partition_perm(jnp.where(unit, 0, jnp.where(nonunit, 1, 2)))
+    r_uids = part.r_uids[perm]
+    r_net = part.r_net[perm]
+    m_u = unit.sum()
+    ids1, cnt1, err1 = waterfill_unit_inserts(ids1, cnt1, err1, r_uids, m_u)
+    return (ids1, cnt1, err1, r_uids, r_net, m_u, m_u + nonunit.sum(),
+            part.w_del)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase block update: monitored-first scatter + residual tournament loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
+def block_update(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+    assume_sorted: bool = False,
+) -> SketchState:
+    """Two-phase block (weighted) update — the production TPU path.
+
+    Segment-aggregate, scatter all monitored deltas at once (they commute:
+    bit-identical to sequential processing for monitored-only blocks),
+    bulk-fill empty slots, then run the sequential recurrence only over
+    the leftover residual inserts with O(R + LANES) tournament steps and
+    drain all unmonitored deletion weight in one bulk spread. Guarantees
+    are those of weighted SpaceSaving± (module docstring); equivalence to
+    unit-update processing holds up to within-block reordering (inserts
+    are canonically processed before unmonitored deletions), which the
+    bounded-deletion model's guarantees (Thms 2/4/5) are stable to.
+    """
+    k = state.ids.shape[0]
+    ids1, cnt1, err1, r_uids, r_net, nu_start, nu_end, w_del = _phase1(
+        state, items, weights, variant, assume_sorted)
+    ids2, cnt2, err2 = pad_rows(ids1, cnt1, err1)
+    ids2, cnt2, err2 = residual_phase(
+        ids2, cnt2, err2, r_uids, r_net, nu_start, nu_end, w_del, variant)
+    return SketchState(
+        ids=ids2.reshape(-1)[:k],
+        counts=cnt2.reshape(-1)[:k],
+        errors=err2.reshape(-1)[:k],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def block_update_serial(
+    state: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+) -> SketchState:
+    """Pre-two-phase baseline: serial scan over the aggregated uniques.
+
+    Kept for A/B benchmarking (bench_kernels reports the speedup) and as a
+    semantics cross-check in tests. Same aggregation, same per-unique
+    weighted-apply (one scan body shared with ``process_stream``) — just
+    O(U · k) with no inter-update parallelism.
+    """
+    uids, net = _aggregate_block(items, weights)
+    return _apply_update_scan(state, uids, net, variant, skip_sentinels=True)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
+def block_update_batched(
+    states: SketchState,
+    items: jax.Array,
+    weights: jax.Array,
+    variant: int = VARIANT_SSPM,
+    assume_sorted: bool = False,
+) -> SketchState:
+    """vmap'd two-phase update over stacked sketches.
+
+    states: SketchState with leading batch axis (E, k); items/weights:
+    (E, B). One launch for a per-expert / per-layer / per-shard sketch
+    bank (the configs/ model zoo stacks per-layer sketches this way; the
+    hash-sharded bank in ``repro.sketch.sharded`` stacks per-shard ones).
+    ``assume_sorted``: every row of ``items`` is already ascending (the
+    dyadic bank sorts the raw block once; monotone shifts keep every
+    layer sorted; the sharded router broadcasts one sorted block) —
+    skips E argsorts.
+    """
+    return jax.vmap(
+        lambda s, i, w: block_update(s, i, w, variant, assume_sorted)
+    )(states, items, weights)
+
+
+def block_partition_stats(state: SketchState, items: jax.Array,
+                          weights: jax.Array, variant: int = VARIANT_SSPM):
+    """Diagnostics: (n_unique, n_monitored, n_residual) for one block.
+
+    ``n_residual / n_unique`` is the serial fraction of the two-phase
+    update — the quantity bench_kernels reports per distribution. (Since
+    the bulk empty-fill and bulk deletion spread landed, the serial
+    eviction loop covers only part of n_residual; this stays the
+    conservative upper bound.)
+    """
+    uids, net = _aggregate_block(items, weights)
+    part = partition_block(state, uids, net, variant)
+    return int(_valid_mask(uids, net).sum()), int(part.n_mon), int(part.n_res)
+
+
+__all__ = [
+    "apply_update",
+    "process_stream",
+    "BlockPartition",
+    "partition_block",
+    "block_update",
+    "block_update_serial",
+    "block_update_batched",
+    "block_partition_stats",
+]

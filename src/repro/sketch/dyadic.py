@@ -51,11 +51,17 @@ import jax.numpy as jnp
 
 from repro.core.quantiles import dyadic_layer_capacities
 
-from . import jax_sketch as js
-from .jax_sketch import SketchState
-
-VARIANT_LAZY = js.VARIANT_LAZY
-VARIANT_SSPM = js.VARIANT_SSPM
+from .blocks import block_update_batched, block_update_serial
+from .phases import _stable_partition_perm
+from .state import (
+    BLOCKED,
+    EMPTY,
+    VARIANT_LAZY,
+    VARIANT_SSPM,
+    SketchState,
+    _INT_MAX,
+    query_many,
+)
 
 
 class DyadicState(NamedTuple):
@@ -95,9 +101,9 @@ def init(
     real = lane < np.asarray(caps)[:, None]  # (bits, k) live-slot mask
     return DyadicState(
         bank=SketchState(
-            ids=jnp.asarray(np.where(real, int(js.EMPTY), int(js.BLOCKED)),
+            ids=jnp.asarray(np.where(real, int(EMPTY), int(BLOCKED)),
                             jnp.int32),
-            counts=jnp.asarray(np.where(real, 0, int(js._INT_MAX)), jnp.int32),
+            counts=jnp.asarray(np.where(real, 0, int(_INT_MAX)), jnp.int32),
             errors=jnp.zeros((bits, k), jnp.int32),
         ),
         mass=jnp.int32(0),
@@ -107,7 +113,7 @@ def init(
 def layer_capacities(state: DyadicState) -> list:
     """Live (non-BLOCKED) counters per layer — mirrors the oracle sizing."""
     ids = jax.device_get(state.bank.ids)
-    return [int(c) for c in np.asarray(ids != int(js.BLOCKED)).sum(1)]
+    return [int(c) for c in np.asarray(ids != int(BLOCKED)).sum(1)]
 
 
 def space_counters(state: DyadicState) -> int:
@@ -149,16 +155,16 @@ def update_block(
     # sorted block stays sorted in every layer view — each layer's
     # aggregation skips its own O(B log B) sort (assume_sorted below).
     # Items live in [0, 2^bits), so the packed-key single-sort trick
-    # (jax_sketch._stable_partition_perm with the item as the "class")
+    # (phases._stable_partition_perm with the item as the "class")
     # replaces the argsort whenever item*B fits int32.
     if bits + (B - 1).bit_length() <= 31:
-        order = js._stable_partition_perm(items)
+        order = _stable_partition_perm(items)
     else:
         order = jnp.argsort(items)
     items_l = layer_items(items[order], bits)
     weights_l = jnp.broadcast_to(weights[order][None, :], items_l.shape)
     if path == "block":
-        bank = js.block_update_batched(
+        bank = block_update_batched(
             state.bank, items_l, weights_l, variant, assume_sorted=True)
     elif path == "kernel":
         from repro.kernels.sketch_update.ops import sketch_block_update_batched
@@ -169,7 +175,7 @@ def update_block(
         )
     elif path == "serial":
         bank = jax.vmap(
-            lambda s, i, w: js.block_update_serial(s, i, w, variant)
+            lambda s, i, w: block_update_serial(s, i, w, variant)
         )(state.bank, items_l, weights_l)
     else:
         raise ValueError(f"unknown path {path!r}")
@@ -228,7 +234,7 @@ def rank_many(state: DyadicState, xs: jax.Array) -> jax.Array:
     lvl = jnp.arange(bits, dtype=jnp.int32)[None, :]        # (1, bits)
     nodes = 2 * jnp.right_shift(y[:, None], lvl + 1)        # (n, bits)
     take = (jnp.right_shift(y[:, None], lvl) & 1) > 0       # (n, bits)
-    est = jax.vmap(js.query_many)(state.bank, nodes.T)      # (bits, n)
+    est = jax.vmap(query_many)(state.bank, nodes.T)      # (bits, n)
     r = jnp.where(take.T, jnp.maximum(est, 0), 0).sum(axis=0)
     # y >= 2^bits: the single level-`bits` node is the whole universe,
     # whose frequency is the exactly-tracked |F|_1.

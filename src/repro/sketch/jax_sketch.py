@@ -1,752 +1,94 @@
-"""Vectorized SpaceSaving± in pure JAX (dense counter store).
+"""Backward-compat shim for the layered sketch package.
 
-State layout (the TPU adaptation of the paper's two-heap structure):
-    ids:    (k,) int32   item ids, EMPTY = -1 for free slots
-    counts: (k,) int32   estimated counts  (min over lanes ~ paper's min-heap)
-    errors: (k,) int32   estimated errors  (max over lanes ~ paper's max-heap)
+``jax_sketch`` grew into a 750-line monolith and was split along its
+layer map (DESIGN.md §9):
 
-All updates are *branchless* (jnp.where selects) so they vectorize on the
-VPU and vmap across many sketches (per-expert / per-layer / per-host).
+  * :mod:`repro.sketch.state`   SketchState, constants, init, queries,
+    topk, merge, to_dict;
+  * :mod:`repro.sketch.phases`  stable-partition, (R, LANES) row view,
+    slot tournament, bulk empty fill, unit-weight water-fill, residual
+    phase — the primitives the Pallas kernel shares;
+  * :mod:`repro.sketch.blocks`  apply_update, process_stream,
+    block aggregation/partition, block_update / _serial / _batched.
 
-Semantics: identical to the reference `repro.core.spacesaving` classes up
-to argmin/argmax tie-breaking (reference heaps break ties by heap order;
-here ties break to the lowest flat index). All paper guarantees
-(Thms 2/4/5) are tie-break independent and are property-tested for this
-implementation directly.
-
-``variant``: 1 = Lazy SS± (Alg 3), 2 = SS± (Alg 4). Insertions (Alg 1) are
-shared. Weighted updates follow the standard weighted SpaceSaving
-extension (replacement absorbs the whole weight; deletion of unmonitored
-mass spreads over max-error items, each absorbing up to its error).
-
-Block processing (``block_update``) is the **two-phase monitored-first**
-algorithm (DESIGN.md §3): updates to already-monitored items commute, so
-after segment-aggregation all monitored deltas land in one vectorized
-scatter-add (phase 1). The residual is further decomposed (DESIGN.md
-§3.2) into three exactly-vectorizable-or-cheap pieces, processed in the
-canonical order *inserts before unmonitored deletions*:
-
-  1.5   **bulk empty fill** — sequential semantics always place new
-        items into empty slots (in flat-index order) before any
-        eviction, so the first ``min(#empties, #residual inserts)``
-        inserts are one scatter (bit-identical to the sequential
-        recurrence);
-  1.75  **unit-weight eviction water-fill** — with w = 1 the sequential
-        "evict argmin, set min+1" recurrence is a water-filling
-        process: the evicted values are exactly the m smallest of
-        {count_j + t : t >= 0} with (value, slot-index) tie-breaking,
-        so final counts/errors/ids come from a binary-searched water
-        level plus rank arithmetic — vectorized AND bit-identical to
-        looping (see ``waterfill_unit_inserts``);
-  2a    **eviction loop** — only residual inserts with net weight != 1
-        still run the sequential recurrence, each step an O(R + LANES)
-        two-level row-tournament reduction (per-row min/max maintained
-        incrementally + an (R,)-wide final reduce) instead of a flat
-        O(k) argmin/argmax;
-  2b    **bulk deletion spread** — unmonitored SS± deletions don't
-        depend on the deleted item's identity and greedy max-error
-        spreading commutes, so all residual deletions collapse into ONE
-        spread of their summed weight (iterations = slots drained, not
-        deleted uniques).
-
-Item ids are assumed non-negative; negative ids are reserved sentinels
-(EMPTY, BLOCKED) and ignored as padding.
+Every historical ``repro.sketch.jax_sketch`` name (public and the
+underscore-prefixed internals other modules grew to depend on) resolves
+here to the *same object* as in its new home module — pinned by
+tests/test_sketch_package.py. New code should import from the layer
+modules (or ``repro.sketch``) directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-
-EMPTY = jnp.int32(-1)
-VARIANT_LAZY = 1
-VARIANT_SSPM = 2
-_INT_MAX = jnp.int32(2**31 - 1)
-
-# Row-tournament geometry: the counter store is viewed as (R, LANES) so the
-# VPU reduces along the 128-wide lane axis and the serial loop only touches
-# (R,)-wide row summaries. BLOCKED marks capacity-padding slots (never
-# empty, never min-count, never max-error).
-LANES = 128
-BLOCKED = jnp.int32(-2)
-
-
-class SketchState(NamedTuple):
-    ids: jax.Array     # (k,) int32
-    counts: jax.Array  # (k,) int32
-    errors: jax.Array  # (k,) int32
-
-
-def init(capacity: int) -> SketchState:
-    return SketchState(
-        ids=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
-        counts=jnp.zeros((capacity,), dtype=jnp.int32),
-        errors=jnp.zeros((capacity,), dtype=jnp.int32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Single weighted update (branchless)
-# ---------------------------------------------------------------------------
-
-def _insert(state: SketchState, item: jax.Array, w: jax.Array) -> SketchState:
-    ids, counts, errors = state
-    eq = ids == item
-    monitored = eq.any()
-    slot_mon = jnp.argmax(eq)
-
-    empty = ids == EMPTY
-    has_empty = empty.any()
-    slot_empty = jnp.argmax(empty)
-
-    jmin = jnp.argmin(jnp.where(empty, _INT_MAX, counts))
-    min_count = counts[jmin]
-
-    sel = jnp.where(monitored, slot_mon, jnp.where(has_empty, slot_empty, jmin))
-    new_count = jnp.where(
-        monitored, counts[slot_mon] + w, jnp.where(has_empty, w, min_count + w)
-    )
-    new_error = jnp.where(
-        monitored, errors[slot_mon], jnp.where(has_empty, 0, min_count)
-    )
-    return SketchState(
-        ids=ids.at[sel].set(item),
-        counts=counts.at[sel].set(new_count),
-        errors=errors.at[sel].set(new_error),
-    )
-
-
-def _delete(
-    state: SketchState, item: jax.Array, w: jax.Array, variant: int
-) -> SketchState:
-    ids, counts, errors = state
-    eq = ids == item
-    monitored = eq.any()
-    slot_mon = jnp.argmax(eq)
-
-    # monitored: subtract w at the monitored slot
-    counts_mon = counts.at[slot_mon].add(jnp.where(monitored, -w, 0))
-
-    if variant == VARIANT_LAZY:
-        return SketchState(ids, counts_mon, errors)
-
-    # SS± (Alg 4): unmonitored deletion decrements (count, error) of the
-    # max-error item; weight spreads across items, each absorbing <= error_j.
-    def spread(carry):
-        rem, cnts, errs = carry
-        jerr = jnp.argmax(errs)
-        max_err = errs[jerr]
-        d = jnp.minimum(rem, max_err)
-        return (
-            rem - d,
-            cnts.at[jerr].add(-d),
-            errs.at[jerr].add(-d),
-        )
-
-    def cond(carry):
-        rem, _, errs = carry
-        return (rem > 0) & (errs.max() > 0)
-
-    rem0 = jnp.where(monitored, 0, w)
-    _, counts_un, errors_un = jax.lax.while_loop(
-        cond, lambda c: spread(c), (rem0, counts_mon, errors)
-    )
-    return SketchState(ids, counts_un, errors_un)
-
-
-def apply_update(
-    state: SketchState, item: jax.Array, weight: jax.Array, variant: int = VARIANT_SSPM
-) -> SketchState:
-    """One signed, weighted update. weight > 0 insert, < 0 delete, 0 no-op."""
-    ins = _insert(state, item, jnp.maximum(weight, 0))
-    dele = _delete(state, item, jnp.maximum(-weight, 0), variant)
-    pick = weight > 0
-    return jax.tree.map(
-        lambda a, b: jnp.where(pick, a, b), ins, dele
-    )
-
-
-# ---------------------------------------------------------------------------
-# Stream / block processing
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("variant",))
-def process_stream(
-    state: SketchState,
-    items: jax.Array,
-    weights: jax.Array,
-    variant: int = VARIANT_SSPM,
-) -> SketchState:
-    """Exact sequential semantics via lax.scan (the oracle path)."""
-
-    def step(st, xw):
-        item, w = xw
-        return apply_update(st, item, w, variant), None
-
-    state, _ = jax.lax.scan(step, state, (items.astype(jnp.int32), weights.astype(jnp.int32)))
-    return state
-
-
-def _stable_partition_perm(klass: jax.Array) -> jax.Array:
-    """Permutation that stably groups entries by small integer class.
-
-    Encodes (class, index) into one int32 key ``class * B + index`` and
-    runs a single plain sort — the only fast sort lowering on CPU XLA
-    (argsort / multi-operand lax.sort / B-wide scatters are all ~5-10x
-    slower). ``% B`` on the sorted keys recovers the permutation.
-    Requires ``max(klass) * B`` to fit int32 — trivially true for the
-    2-3 classes used here.
-    """
-    B = klass.shape[0]
-    idx = jnp.arange(B, dtype=jnp.int32)
-    return jnp.sort(klass.astype(jnp.int32) * B + idx) % B
-
-
-def _aggregate_block(items: jax.Array, weights: jax.Array,
-                     assume_sorted: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """Net weight per unique item in the block (sort + prefix sums).
-
-    Returns (uids, net) of the same length; padding slots have uid == EMPTY
-    and net == 0. Net weight order: uniques appear in ascending id order.
-    ``assume_sorted`` skips the argsort when the caller already provides
-    ascending items (the dyadic bank sorts the raw block once — every
-    per-layer ``x >> l`` view stays sorted because right-shift is
-    monotonic).
-
-    Per-unique sums are differences of the weight prefix-sum at segment
-    boundaries (next-head lookup via a reversed cummin) rather than
-    segment_sum scatters, which serialize on CPU.
-    """
-    B = items.shape[0]
-    if assume_sorted:
-        s = items.astype(jnp.int32)
-        w = weights.astype(jnp.int32)
-    else:
-        order = jnp.argsort(items)
-        s = items[order].astype(jnp.int32)
-        w = weights[order].astype(jnp.int32)
-    idx = jnp.arange(B, dtype=jnp.int32)
-    head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    c = jnp.cumsum(w)
-    # next head at-or-after i via suffix-min; strictly-after = shift by one
-    nh = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(head, idx, B))))
-    nh_after = jnp.concatenate([nh[1:], jnp.full((1,), B, jnp.int32)])
-    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
-    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0)
-    net_h = c[seg_end] - prev  # segment sum, valid at head positions
-    perm = _stable_partition_perm(jnp.where(head, 0, 1))
-    n_seg = head.sum()
-    uids = jnp.where(idx < n_seg, s[perm], EMPTY)
-    net = jnp.where(idx < n_seg, net_h[perm], 0)
-    return uids, net
-
-
-# ---------------------------------------------------------------------------
-# Two-phase block update: monitored-first scatter + residual tournament loop
-# ---------------------------------------------------------------------------
-
-def pad_rows(ids: jax.Array, counts: jax.Array, errors: jax.Array):
-    """View a (k,) store as (R, LANES) rows, padding with inert slots.
-
-    Padding slots carry BLOCKED ids (match nothing, never empty), INT_MAX
-    counts (never the minimum) and zero errors (never spread targets, since
-    spreading requires error > 0).
-    """
-    k = ids.shape[0]
-    rows = -(-k // LANES)
-    pad = rows * LANES - k
-    if pad:
-        ids = jnp.concatenate([ids, jnp.full((pad,), BLOCKED, jnp.int32)])
-        counts = jnp.concatenate([counts, jnp.full((pad,), _INT_MAX, jnp.int32)])
-        errors = jnp.concatenate([errors, jnp.zeros((pad,), jnp.int32)])
-    return (
-        ids.reshape(rows, LANES),
-        counts.reshape(rows, LANES),
-        errors.reshape(rows, LANES),
-    )
-
-
-def row_structures(ids2: jax.Array, cnt2: jax.Array, err2: jax.Array):
-    """Per-row tournament summaries: (has_empty, min_count, max_error)."""
-    empty = ids2 == -1
-    row_has_empty = empty.any(axis=1)
-    row_min = jnp.where(empty, 2**31 - 1, cnt2).min(axis=1)
-    row_max_err = err2.max(axis=1)
-    return row_has_empty, row_min, row_max_err
-
-
-def _pick_slot(ids2, cnt2, row_has_empty, row_min):
-    """Tournament final: replacement slot from per-row summaries.
-
-    Returns (r_sel, c_sel, min_count, has_empty) — the first empty slot if
-    one exists, else the first minimum-count slot; ``min_count`` is the
-    minimum over non-empty slots (INT_MAX when all are empty). Tie-breaking
-    matches flat argmin/argmax (lowest flat index). Python-int constants
-    only: shared by the Pallas residual kernel, which must not close over
-    arrays.
-    """
-    int_max = 2**31 - 1
-    has_empty = row_has_empty.any()
-    r_e = jnp.argmax(row_has_empty)
-    r_m = jnp.argmin(row_min)
-    min_count = row_min[r_m]
-    r_sel = jnp.where(has_empty, r_e, r_m)
-    row_ids = ids2[r_sel]
-    c_e = jnp.argmax(row_ids == -1)
-    c_m = jnp.argmin(jnp.where(row_ids == -1, int_max, cnt2[r_sel]))
-    c_sel = jnp.where(has_empty, c_e, c_m)
-    return r_sel, c_sel, min_count, has_empty
-
-
-def select_insert_slot(ids: jax.Array, counts: jax.Array):
-    """Tournament pick of the SpaceSaving replacement slot on a (k,) store.
-
-    Returns (slot, min_count, has_empty) with the semantics of
-    ``_pick_slot``; the reduction runs as a lane-wise (R, 128) min + an
-    (R,)-wide tournament — the TPU-friendly shape shared with the
-    block-update residual phase.
-    """
-    ids2, cnt2, err2 = pad_rows(ids, counts, jnp.zeros_like(counts))
-    row_has_empty, row_min, _ = row_structures(ids2, cnt2, err2)
-    r_sel, c_sel, min_count, has_empty = _pick_slot(
-        ids2, cnt2, row_has_empty, row_min)
-    return r_sel * LANES + c_sel, min_count, has_empty
-
-
-def _valid_mask(uids: jax.Array, net: jax.Array) -> jax.Array:
-    """Aggregated entries that carry real work: non-sentinel id, nonzero net."""
-    return (uids >= 0) & (net != 0)
-
-
-class BlockPartition(NamedTuple):
-    """Phase-1 output: monitored deltas applied, residual split by sign."""
-
-    counts1: jax.Array  # (k,) counts after the commuting monitored scatter
-    r_uids: jax.Array   # residual *insert* uids compacted to the front
-    r_net: jax.Array    # net weights aligned with r_uids
-    n_ins: jax.Array    # number of residual insert uniques (dynamic)
-    w_del: jax.Array    # summed unmonitored deletion weight (0 for lazy)
-    n_res: jax.Array    # all residual uniques incl. deletes (diagnostics)
-    n_mon: jax.Array    # monitored uniques (diagnostics)
-
-
-def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
-                    variant: int = VARIANT_SSPM) -> BlockPartition:
-    """Phase-1 split of an aggregated block against the monitored set.
-
-    Monitored membership runs in the cheap direction: the k slot ids are
-    binary-searched into the B sorted block uniques (k << B queries), so
-    the monitored delta application is a pure GATHER per slot — no
-    (U, k) materialization and no B-wide scatter-add (CPU XLA serializes
-    scatters). Residual inserts are compacted to the front of
-    (r_uids, r_net) in ascending id order; residual deletions are not
-    enumerated at all — unmonitored spreading is item-agnostic, so only
-    their summed weight ``w_del`` survives (see the module docstring).
-    """
-    B = uids.shape[0]
-    valid = _valid_mask(uids, net)
-    # compacted uids are ascending uniques then EMPTY padding; remap the
-    # padding to INT_MAX to keep the array sorted for searchsorted.
-    usearch = jnp.where(uids >= 0, uids, _INT_MAX)
-    pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
-    match = usearch[pos] == state.ids  # EMPTY/BLOCKED slots never match
-    # Monitored deltas commute (insert: count += w; delete: count -= w; ids
-    # and errors untouched) — one gather applies them all at once.
-    counts1 = state.counts + jnp.where(match, net[pos], 0)
-    monitored = (
-        jnp.zeros((B,), bool)
-        .at[jnp.where(match, pos, B)]
-        .set(True, mode="drop")
-    )
-    res_ins = valid & ~monitored & (net > 0)
-    if variant == VARIANT_LAZY:
-        # Lazy SS± drops unmonitored deletions entirely (Alg 3).
-        w_del = jnp.int32(0)
-        n_res = res_ins.sum()
-    else:
-        res_del = valid & ~monitored & (net < 0)
-        w_del = (-jnp.where(res_del, net, 0)).sum()
-        n_res = res_ins.sum() + res_del.sum()
-    perm = _stable_partition_perm(jnp.where(res_ins, 0, 1))
-    n_ins = res_ins.sum()
-    idx = jnp.arange(B)
-    r_uids = jnp.where(idx < n_ins, uids[perm], 0)
-    r_net = jnp.where(idx < n_ins, net[perm], 0)
-    return BlockPartition(counts1, r_uids, r_net,
-                          n_ins, w_del, n_res, (match & valid[pos]).sum())
-
-
-def fill_empty_slots(ids: jax.Array, counts: jax.Array, errors: jax.Array,
-                     r_uids: jax.Array, r_net: jax.Array, n_ins: jax.Array):
-    """Phase 1.5: bulk-place residual inserts into empty slots.
-
-    The sequential recurrence always prefers the first empty slot (flat
-    index order) and each fill consumes one empty, so the first
-    ``min(#empties, n_ins)`` residual inserts land deterministically:
-    the j-th insert (ascending uid) goes to the j-th empty slot. One
-    vectorized scatter, bit-identical to looping. Returns the updated
-    flat arrays and ``i0`` — the index where the eviction loop resumes
-    (if ``i0 == n_ins`` no empties ran out and the loop is skipped).
-    """
-    B = r_uids.shape[0]
-    empty = ids == EMPTY
-    e_rank = jnp.cumsum(empty) - 1  # 0,1,2,... over empty slots in index order
-    take = empty & (e_rank < n_ins)
-    src = jnp.clip(e_rank, 0, B - 1)
-    ids = jnp.where(take, r_uids[src], ids)
-    counts = jnp.where(take, r_net[src], counts)
-    errors = jnp.where(take, 0, errors)
-    return ids, counts, errors, jnp.minimum(n_ins, empty.sum())
-
-
-def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
-                           errors: jax.Array, uu: jax.Array, m: jax.Array):
-    """Phase 1.75: evict m unit-weight residual inserts in one shot.
-
-    The sequential recurrence for w = 1 pops the argmin count mc and
-    pushes mc + 1, m times. Each slot j therefore emits the consecutive
-    values count_j, count_j + 1, ... and the popped multiset is exactly
-    the m smallest values of the union {count_j + t : t >= 0}, ordered
-    by (value, slot index) — the same greedy order the loop takes. So:
-
-      * water level T = smallest value with #(union values <= T) >= m
-        (binary search, fixed trip count);
-      * slot j absorbs t_j = (T - count_j) pops below the level, plus
-        one value-T pop for the first r = m - #(values <= T-1) eligible
-        slots in index order;
-      * its final count is count_j + t_j, its error the last popped
-        value, and its id the uid whose global pop position (value-sorted,
-        index tie-broken) lands on that slot's last pop. Every non-extra
-        evicted slot fills exactly to the water line (last pop = T-1) and
-        every extra slot pops T, so positions collapse to two scalar
-        pop-counts plus one prefix count — O(k), no pairwise matrices.
-
-    Bit-identical to running the eviction loop — property-tested against
-    it — but one fused vector pass instead of m sequential steps.
-    ``uu``: unit-weight residual insert uids compacted to the front
-    (ascending id order), padded to any length >= m. BLOCKED padding
-    slots carry INT_MAX counts and stay above any water level.
-    """
-    B = uu.shape[0]
-
-    def n_leq(x):
-        # #union values <= x; the (T - count) subtraction may wrap for
-        # INT_MAX-blocked slots — masked out by the comparison.
-        return jnp.where(counts <= x, x - counts + 1, 0)
-
-    lo = counts.min()
-    hi = lo + m
-
-    def probe(_, lh):
-        lo, hi = lh
-        mid = lo + (hi - lo) // 2
-        ge = n_leq(mid).sum() >= m
-        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
-
-    steps = B.bit_length() + 1  # enough to bisect [lo, lo + m], m <= B
-    T, _ = jax.lax.fori_loop(0, steps, probe, (lo, hi))
-
-    f_tm1 = n_leq(T - 1).sum()
-    r = m - f_tm1
-    elig = counts <= T
-    rank = jnp.cumsum(elig) - 1
-    extra = elig & (rank < r)
-    t = jnp.where(counts <= T - 1, T - counts, 0) + extra
-    evicted = t > 0
-    v_last = counts + t - 1
-    # Global pop position of each slot's last pop. Non-extra slots all
-    # stop at value T-1: position = #pops strictly below T-1 + #lower-
-    # index slots also reaching T-1. Extra slots pop T: position =
-    # #pops below T + rank among the extra set.
-    f_tm2 = n_leq(T - 2).sum()
-    under = counts <= T - 1
-    below_line = jnp.cumsum(under) - under  # exclusive prefix count
-    pos = jnp.where(extra, f_tm1 + jnp.minimum(rank, r), f_tm2 + below_line)
-    pos = jnp.clip(pos, 0, B - 1)
-    return (
-        jnp.where(evicted, uu[pos], ids),
-        counts + t,
-        jnp.where(evicted, v_last, errors),
-    )
-
-
-def _phase1(state: SketchState, items: jax.Array, weights: jax.Array,
-            variant: int, assume_sorted: bool = False):
-    """Phases 1-1.75 — everything vectorizable, shared by the pure-JAX
-    and Pallas block paths so they stay bit-identical.
-
-    Aggregate, apply monitored deltas, bulk-fill empties, water-fill
-    unit-weight evictions. Returns the updated flat arrays plus the
-    kernel-bound residual-loop inputs: the re-grouped residual array
-    (uids, net) laid out [unit inserts | non-unit inserts | rest] with
-    the loop's [start, end) range covering the non-unit inserts, and the
-    summed unmonitored deletion weight.
-    """
-    uids, net = _aggregate_block(items, weights, assume_sorted)
-    part = partition_block(state, uids, net, variant)
-    ids1, cnt1, err1, i0 = fill_empty_slots(
-        state.ids, part.counts1, state.errors, part.r_uids, part.r_net,
-        part.n_ins)
-    idx = jnp.arange(part.r_uids.shape[0])
-    remaining = (idx >= i0) & (idx < part.n_ins)
-    unit = remaining & (part.r_net == 1)
-    nonunit = remaining & (part.r_net != 1)
-    # one cheap key-sort groups [units | non-units | rest]
-    perm = _stable_partition_perm(jnp.where(unit, 0, jnp.where(nonunit, 1, 2)))
-    r_uids = part.r_uids[perm]
-    r_net = part.r_net[perm]
-    m_u = unit.sum()
-    ids1, cnt1, err1 = waterfill_unit_inserts(ids1, cnt1, err1, r_uids, m_u)
-    return (ids1, cnt1, err1, r_uids, r_net, m_u, m_u + nonunit.sum(),
-            part.w_del)
-
-
-def residual_phase(ids2, cnt2, err2, r_uids, r_net, start, n_ins, w_del,
-                   variant: int):
-    """Phase 2: eviction loop over non-unit residual inserts + one bulk
-    deletion spread.
-
-    Operates on the (R, LANES) row view, after ``_phase1`` has
-    bulk-placed empty-slot fills and water-filled every unit-weight
-    eviction. The loop covers ``r_uids[start:n_ins]`` — the inserts with
-    net weight != 1, pairwise-distinct, unmonitored, and (since the
-    empties ran out whenever the loop runs) pure min-count evictions;
-    each step is an O(R + LANES) row tournament instead of an O(k) flat
-    reduce. All unmonitored deletion weight then drains in ONE greedy
-    max-error spread (spreading is item-agnostic and commutes), so its
-    trip count is the number of slots drained, not deleted uniques. Only
-    python-int constants below — this body is shared verbatim by the
-    Pallas kernel, which must not close over arrays.
-    """
-    int_max = 2**31 - 1
-    rhe, rmin, rmaxe = row_structures(ids2, cnt2, err2)
-
-    def step(carry):
-        i, ids2, cnt2, err2, rhe, rmin, rmaxe = carry
-        uid = r_uids[i]
-        w = r_net[i]
-        # unmonitored insert: empty slot if any survived, else evict min
-        r_sel, c_sel, mc, has_empty = _pick_slot(ids2, cnt2, rhe, rmin)
-        ids2 = ids2.at[r_sel, c_sel].set(uid)
-        cnt2 = cnt2.at[r_sel, c_sel].set(jnp.where(has_empty, w, mc + w))
-        err2 = err2.at[r_sel, c_sel].set(jnp.where(has_empty, 0, mc))
-        # refresh the one touched row's summaries
-        row_ids = ids2[r_sel]
-        rhe = rhe.at[r_sel].set((row_ids == -1).any())
-        rmin = rmin.at[r_sel].set(
-            jnp.where(row_ids == -1, int_max, cnt2[r_sel]).min())
-        rmaxe = rmaxe.at[r_sel].set(err2[r_sel].max())
-        return i + 1, ids2, cnt2, err2, rhe, rmin, rmaxe
-
-    def cond(carry):
-        return carry[0] < n_ins
-
-    _, ids2, cnt2, err2, rhe, rmin, rmaxe = jax.lax.while_loop(
-        cond, step, (start.astype(jnp.int32), ids2, cnt2, err2,
-                     rhe, rmin, rmaxe))
-
-    if variant != VARIANT_LAZY:
-        # bulk unmonitored-deletion spread: greedy max-error drain of the
-        # summed weight; each slot absorbs up to its whole error.
-        def sp_cond(c):
-            rem, _, _, rme = c
-            return (rem > 0) & (rme.max() > 0)
-
-        def sp_body(c):
-            rem, cnt2, err2, rme = c
-            r = jnp.argmax(rme)
-            row_err = err2[r]
-            cc = jnp.argmax(row_err)
-            d = jnp.minimum(rem, row_err[cc])
-            cnt2 = cnt2.at[r, cc].add(-d)
-            err2 = err2.at[r, cc].add(-d)
-            rme = rme.at[r].set(err2[r].max())
-            return rem - d, cnt2, err2, rme
-
-        _, cnt2, err2, _ = jax.lax.while_loop(
-            sp_cond, sp_body, (w_del.astype(jnp.int32), cnt2, err2, rmaxe))
-    return ids2, cnt2, err2
-
-
-@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
-def block_update(
-    state: SketchState,
-    items: jax.Array,
-    weights: jax.Array,
-    variant: int = VARIANT_SSPM,
-    assume_sorted: bool = False,
-) -> SketchState:
-    """Two-phase block (weighted) update — the production TPU path.
-
-    Segment-aggregate, scatter all monitored deltas at once (they commute:
-    bit-identical to sequential processing for monitored-only blocks),
-    bulk-fill empty slots, then run the sequential recurrence only over
-    the leftover residual inserts with O(R + LANES) tournament steps and
-    drain all unmonitored deletion weight in one bulk spread. Guarantees
-    are those of weighted SpaceSaving± (module docstring); equivalence to
-    unit-update processing holds up to within-block reordering (inserts
-    are canonically processed before unmonitored deletions), which the
-    bounded-deletion model's guarantees (Thms 2/4/5) are stable to.
-    """
-    k = state.ids.shape[0]
-    ids1, cnt1, err1, r_uids, r_net, nu_start, nu_end, w_del = _phase1(
-        state, items, weights, variant, assume_sorted)
-    ids2, cnt2, err2 = pad_rows(ids1, cnt1, err1)
-    ids2, cnt2, err2 = residual_phase(
-        ids2, cnt2, err2, r_uids, r_net, nu_start, nu_end, w_del, variant)
-    return SketchState(
-        ids=ids2.reshape(-1)[:k],
-        counts=cnt2.reshape(-1)[:k],
-        errors=err2.reshape(-1)[:k],
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("variant",))
-def block_update_serial(
-    state: SketchState,
-    items: jax.Array,
-    weights: jax.Array,
-    variant: int = VARIANT_SSPM,
-) -> SketchState:
-    """Pre-two-phase baseline: serial scan over the aggregated uniques.
-
-    Kept for A/B benchmarking (bench_kernels reports the speedup) and as a
-    semantics cross-check in tests. Same aggregation, same per-unique
-    weighted-apply — just O(U · k) with no inter-update parallelism.
-    """
-    uids, net = _aggregate_block(items, weights)
-
-    def step(st, xw):
-        uid, w = xw
-        new = apply_update(st, uid, w, variant)
-        skip = (uid == EMPTY) | (w == 0)
-        return jax.tree.map(lambda a, b: jnp.where(skip, a, b), st, new), None
-
-    state, _ = jax.lax.scan(step, state, (uids, net))
-    return state
-
-
-@functools.partial(jax.jit, static_argnames=("variant", "assume_sorted"))
-def block_update_batched(
-    states: SketchState,
-    items: jax.Array,
-    weights: jax.Array,
-    variant: int = VARIANT_SSPM,
-    assume_sorted: bool = False,
-) -> SketchState:
-    """vmap'd two-phase update over stacked sketches.
-
-    states: SketchState with leading batch axis (E, k); items/weights:
-    (E, B). One launch for a per-expert / per-layer sketch bank (the
-    configs/ model zoo stacks per-layer sketches this way).
-    ``assume_sorted``: every row of ``items`` is already ascending (the
-    dyadic bank sorts the raw block once; monotone shifts keep every
-    layer sorted) — skips E argsorts.
-    """
-    return jax.vmap(
-        lambda s, i, w: block_update(s, i, w, variant, assume_sorted)
-    )(states, items, weights)
-
-
-def block_partition_stats(state: SketchState, items: jax.Array,
-                          weights: jax.Array, variant: int = VARIANT_SSPM):
-    """Diagnostics: (n_unique, n_monitored, n_residual) for one block.
-
-    ``n_residual / n_unique`` is the serial fraction of the two-phase
-    update — the quantity bench_kernels reports per distribution. (Since
-    the bulk empty-fill and bulk deletion spread landed, the serial
-    eviction loop covers only part of n_residual; this stays the
-    conservative upper bound.)
-    """
-    uids, net = _aggregate_block(items, weights)
-    part = partition_block(state, uids, net, variant)
-    return int(_valid_mask(uids, net).sum()), int(part.n_mon), int(part.n_res)
-
-
-# ---------------------------------------------------------------------------
-# Queries / merge
-# ---------------------------------------------------------------------------
-
-def query(state: SketchState, item) -> jax.Array:
-    eq = state.ids == jnp.int32(item)
-    return jnp.where(eq.any(), jnp.where(eq, state.counts, 0).sum(), 0)
-
-
-@jax.jit
-def query_many(state: SketchState, items: jax.Array) -> jax.Array:
-    eq = state.ids[None, :] == items.astype(jnp.int32)[:, None]  # (n, k)
-    return jnp.where(eq, state.counts[None, :], 0).sum(axis=1) * eq.any(axis=1)
-
-
-def topk(state: SketchState, m: int) -> Tuple[jax.Array, jax.Array]:
-    """Top-m (ids, counts) by estimated count (heavy-hitter report)."""
-    counts = jnp.where(state.ids == EMPTY, jnp.int32(-2**31), state.counts)
-    vals, idx = jax.lax.top_k(counts, m)
-    return state.ids[idx], vals
-
-
-@jax.jit
-def merge(a: SketchState, b: SketchState) -> SketchState:
-    """Mergeable-summaries merge (same rule as the reference `merge`).
-
-    Items in both: counts/errors add. Items in one: the other sketch bounds
-    the unseen frequency by its minCount (only if it is full). Keep top-k.
-    Used for cross-host reduction of data-parallel sketches.
-    """
-    k = a.ids.shape[0]
-
-    def mincount(s: SketchState):
-        full = (s.ids != EMPTY).all()
-        mc = jnp.where(s.ids == EMPTY, _INT_MAX, s.counts).min()
-        return jnp.where(full, mc, 0)
-
-    m_a, m_b = mincount(a), mincount(b)
-
-    ids = jnp.concatenate([a.ids, b.ids])
-    counts = jnp.concatenate([a.counts, b.counts])
-    errors = jnp.concatenate([a.errors, b.errors])
-    cross = jnp.concatenate([jnp.full((k,), m_b), jnp.full((k,), m_a)])
-    cross = jnp.where(ids == EMPTY, 0, cross).astype(jnp.int32)
-
-    # combine duplicates: sort by id; adjacent-equal pairs fold together.
-    order = jnp.argsort(ids)
-    ids_s = ids[order]
-    cnt_s = counts[order] + cross[order]
-    err_s = errors[order] + cross[order]
-    dup_prev = jnp.concatenate([jnp.zeros((1,), bool), ids_s[1:] == ids_s[:-1]])
-    # fold each duplicate's (count,error) into the *first* of its run.
-    seg = jnp.cumsum(~dup_prev) - 1
-    n = ids.shape[0]
-    cnt_m = jax.ops.segment_sum(cnt_s, seg, num_segments=n)
-    err_m = jax.ops.segment_sum(err_s, seg, num_segments=n)
-    id_m = jax.ops.segment_max(ids_s, seg, num_segments=n)
-    # duplicates were double-cross-counted: a duplicate pair means the item is
-    # in both sketches, so no cross term applies — subtract both cross adds.
-    had_dup = jax.ops.segment_sum(dup_prev.astype(jnp.int32), seg, num_segments=n)
-    cnt_m = cnt_m - had_dup * (m_a + m_b)
-    err_m = err_m - had_dup * (m_a + m_b)
-    n_seg = (~dup_prev).sum()
-    valid = (jnp.arange(n) < n_seg) & (id_m != EMPTY)
-    # top-k by merged count
-    key = jnp.where(valid, cnt_m, jnp.int32(-2**31))
-    _, idx = jax.lax.top_k(key, k)
-    sel_valid = valid[idx]
-    return SketchState(
-        ids=jnp.where(sel_valid, id_m[idx], EMPTY).astype(jnp.int32),
-        counts=jnp.where(sel_valid, cnt_m[idx], 0).astype(jnp.int32),
-        errors=jnp.where(sel_valid, err_m[idx], 0).astype(jnp.int32),
-    )
-
-
-def to_dict(state: SketchState) -> dict:
-    """Materialize to {item: (count, error)} for test comparison."""
-    out = {}
-    ids = jax.device_get(state.ids)
-    cnts = jax.device_get(state.counts)
-    errs = jax.device_get(state.errors)
-    for i, c, e in zip(ids, cnts, errs):
-        if i != -1:
-            out[int(i)] = (int(c), int(e))
-    return out
+from .blocks import (
+    BlockPartition,
+    _aggregate_block,
+    _apply_update_scan,
+    _delete,
+    _insert,
+    _phase1,
+    _valid_mask,
+    apply_update,
+    block_partition_stats,
+    block_update,
+    block_update_batched,
+    block_update_serial,
+    partition_block,
+    process_stream,
+)
+from .phases import (
+    _pick_slot,
+    _stable_partition_perm,
+    fill_empty_slots,
+    pad_rows,
+    residual_phase,
+    row_structures,
+    select_insert_slot,
+    waterfill_unit_inserts,
+)
+from .state import (
+    BLOCKED,
+    EMPTY,
+    LANES,
+    VARIANT_LAZY,
+    VARIANT_SSPM,
+    SketchState,
+    _INT_MAX,
+    init,
+    merge,
+    query,
+    query_many,
+    to_dict,
+    topk,
+)
+
+__all__ = [
+    # state layer
+    "EMPTY",
+    "BLOCKED",
+    "LANES",
+    "VARIANT_LAZY",
+    "VARIANT_SSPM",
+    "SketchState",
+    "init",
+    "query",
+    "query_many",
+    "topk",
+    "merge",
+    "to_dict",
+    # phases layer
+    "pad_rows",
+    "row_structures",
+    "select_insert_slot",
+    "fill_empty_slots",
+    "waterfill_unit_inserts",
+    "residual_phase",
+    # blocks layer
+    "apply_update",
+    "process_stream",
+    "BlockPartition",
+    "partition_block",
+    "block_update",
+    "block_update_serial",
+    "block_update_batched",
+    "block_partition_stats",
+]

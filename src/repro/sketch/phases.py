@@ -1,0 +1,289 @@
+"""Phase primitives of the two-phase SpaceSaving± block update.
+
+Middle layer of the sketch package (DESIGN.md §9): pure, shape-polymorphic
+building blocks with no knowledge of whole-block orchestration —
+
+  * ``_stable_partition_perm``  packed-key single-sort stable partition
+    (the CPU-XLA-friendly replacement for argsort/segment scatters, also
+    reused by the dyadic bank's shared sort and the sharded router);
+  * ``pad_rows`` / ``row_structures`` / ``_pick_slot`` /
+    ``select_insert_slot``  the (R, LANES) row-tournament view and the
+    replacement-slot reduction (shared with serve/h2o eviction);
+  * ``fill_empty_slots``  phase 1.5 bulk empty fill;
+  * ``waterfill_unit_inserts``  phase 1.75 unit-weight eviction water-fill;
+  * ``residual_phase``  phase 2 eviction tournament loop + bulk
+    max-error deletion spread (body shared verbatim with the Pallas
+    residual kernel, which must not close over arrays).
+
+Block orchestration (aggregation, monitored partition, ``block_update``)
+lives one layer up in ``repro.sketch.blocks``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .state import BLOCKED, EMPTY, LANES, VARIANT_LAZY, _INT_MAX
+
+
+def _stable_partition_perm(klass: jax.Array) -> jax.Array:
+    """Permutation that stably groups entries by small integer class.
+
+    Encodes (class, index) into one int32 key ``class * B + index`` and
+    runs a single plain sort — the only fast sort lowering on CPU XLA
+    (argsort / multi-operand lax.sort / B-wide scatters are all ~5-10x
+    slower). ``% B`` on the sorted keys recovers the permutation.
+    Requires ``max(klass) * B`` to fit int32 — trivially true for the
+    2-3 classes used here.
+    """
+    B = klass.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    return jnp.sort(klass.astype(jnp.int32) * B + idx) % B
+
+
+def pad_rows(ids: jax.Array, counts: jax.Array, errors: jax.Array):
+    """View a (k,) store as (R, LANES) rows, padding with inert slots.
+
+    Padding slots carry BLOCKED ids (match nothing, never empty), INT_MAX
+    counts (never the minimum) and zero errors (never spread targets, since
+    spreading requires error > 0).
+    """
+    k = ids.shape[0]
+    rows = -(-k // LANES)
+    pad = rows * LANES - k
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), BLOCKED, jnp.int32)])
+        counts = jnp.concatenate([counts, jnp.full((pad,), _INT_MAX, jnp.int32)])
+        errors = jnp.concatenate([errors, jnp.zeros((pad,), jnp.int32)])
+    return (
+        ids.reshape(rows, LANES),
+        counts.reshape(rows, LANES),
+        errors.reshape(rows, LANES),
+    )
+
+
+def row_structures(ids2: jax.Array, cnt2: jax.Array, err2: jax.Array):
+    """Per-row tournament summaries: (has_empty, min_count, max_error)."""
+    empty = ids2 == -1
+    row_has_empty = empty.any(axis=1)
+    row_min = jnp.where(empty, 2**31 - 1, cnt2).min(axis=1)
+    row_max_err = err2.max(axis=1)
+    return row_has_empty, row_min, row_max_err
+
+
+def _pick_slot(ids2, cnt2, row_has_empty, row_min):
+    """Tournament final: replacement slot from per-row summaries.
+
+    Returns (r_sel, c_sel, min_count, has_empty) — the first empty slot if
+    one exists, else the first minimum-count slot; ``min_count`` is the
+    minimum over non-empty slots (INT_MAX when all are empty). Tie-breaking
+    matches flat argmin/argmax (lowest flat index). Python-int constants
+    only: shared by the Pallas residual kernel, which must not close over
+    arrays.
+    """
+    int_max = 2**31 - 1
+    has_empty = row_has_empty.any()
+    r_e = jnp.argmax(row_has_empty)
+    r_m = jnp.argmin(row_min)
+    min_count = row_min[r_m]
+    r_sel = jnp.where(has_empty, r_e, r_m)
+    row_ids = ids2[r_sel]
+    c_e = jnp.argmax(row_ids == -1)
+    c_m = jnp.argmin(jnp.where(row_ids == -1, int_max, cnt2[r_sel]))
+    c_sel = jnp.where(has_empty, c_e, c_m)
+    return r_sel, c_sel, min_count, has_empty
+
+
+def select_insert_slot(ids: jax.Array, counts: jax.Array):
+    """Tournament pick of the SpaceSaving replacement slot on a (k,) store.
+
+    Returns (slot, min_count, has_empty) with the semantics of
+    ``_pick_slot``; the reduction runs as a lane-wise (R, 128) min + an
+    (R,)-wide tournament — the TPU-friendly shape shared with the
+    block-update residual phase.
+    """
+    ids2, cnt2, err2 = pad_rows(ids, counts, jnp.zeros_like(counts))
+    row_has_empty, row_min, _ = row_structures(ids2, cnt2, err2)
+    r_sel, c_sel, min_count, has_empty = _pick_slot(
+        ids2, cnt2, row_has_empty, row_min)
+    return r_sel * LANES + c_sel, min_count, has_empty
+
+
+def fill_empty_slots(ids: jax.Array, counts: jax.Array, errors: jax.Array,
+                     r_uids: jax.Array, r_net: jax.Array, n_ins: jax.Array,
+                     offset=0):
+    """Phase 1.5: bulk-place residual inserts into empty slots.
+
+    The sequential recurrence always prefers the first empty slot (flat
+    index order) and each fill consumes one empty, so the first
+    ``min(#empties, n_ins)`` residual inserts land deterministically:
+    the j-th insert (ascending uid) goes to the j-th empty slot. One
+    vectorized scatter, bit-identical to looping. Returns the updated
+    flat arrays and ``i0`` — the index where the eviction loop resumes
+    (if ``i0 == n_ins`` no empties ran out and the loop is skipped).
+
+    ``offset``: the inserts live at ``r_uids[offset:]`` — lets the
+    sharded bank pass one concatenated global layout with per-shard
+    offsets instead of materializing per-shard slices.
+    """
+    B = r_uids.shape[0]
+    empty = ids == EMPTY
+    e_rank = jnp.cumsum(empty) - 1  # 0,1,2,... over empty slots in index order
+    take = empty & (e_rank < n_ins)
+    src = jnp.clip(offset + e_rank, 0, B - 1)
+    ids = jnp.where(take, r_uids[src], ids)
+    counts = jnp.where(take, r_net[src], counts)
+    errors = jnp.where(take, 0, errors)
+    return ids, counts, errors, jnp.minimum(n_ins, empty.sum())
+
+
+def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
+                           errors: jax.Array, uu: jax.Array, m: jax.Array,
+                           offset=0):
+    """Phase 1.75: evict m unit-weight residual inserts in one shot.
+
+    The sequential recurrence for w = 1 pops the argmin count mc and
+    pushes mc + 1, m times. Each slot j therefore emits the consecutive
+    values count_j, count_j + 1, ... and the popped multiset is exactly
+    the m smallest values of the union {count_j + t : t >= 0}, ordered
+    by (value, slot index) — the same greedy order the loop takes. So:
+
+      * water level T = smallest value with #(union values <= T) >= m
+        (binary search, fixed trip count);
+      * slot j absorbs t_j = (T - count_j) pops below the level, plus
+        one value-T pop for the first r = m - #(values <= T-1) eligible
+        slots in index order;
+      * its final count is count_j + t_j, its error the last popped
+        value, and its id the uid whose global pop position (value-sorted,
+        index tie-broken) lands on that slot's last pop. Every non-extra
+        evicted slot fills exactly to the water line (last pop = T-1) and
+        every extra slot pops T, so positions collapse to two scalar
+        pop-counts plus one prefix count — O(k), no pairwise matrices.
+
+    Bit-identical to running the eviction loop — property-tested against
+    it — but one fused vector pass instead of m sequential steps.
+    ``uu``: unit-weight residual insert uids compacted to the front
+    (ascending id order), padded to any length >= m; ``offset`` shifts
+    the run's start inside ``uu`` (the sharded bank passes one global
+    layout with per-shard offsets). BLOCKED padding slots carry INT_MAX
+    counts and stay above any water level.
+    """
+    B = uu.shape[0]
+
+    def n_leq(x):
+        # #union values <= x; the (T - count) subtraction may wrap for
+        # INT_MAX-blocked slots — masked out by the comparison.
+        return jnp.where(counts <= x, x - counts + 1, 0)
+
+    lo = counts.min()
+    hi = lo + m
+
+    def probe(_, lh):
+        lo, hi = lh
+        mid = lo + (hi - lo) // 2
+        ge = n_leq(mid).sum() >= m
+        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+    steps = B.bit_length() + 1  # enough to bisect [lo, lo + m], m <= B
+    T, _ = jax.lax.fori_loop(0, steps, probe, (lo, hi))
+
+    f_tm1 = n_leq(T - 1).sum()
+    r = m - f_tm1
+    elig = counts <= T
+    rank = jnp.cumsum(elig) - 1
+    extra = elig & (rank < r)
+    t = jnp.where(counts <= T - 1, T - counts, 0) + extra
+    evicted = t > 0
+    v_last = counts + t - 1
+    # Global pop position of each slot's last pop. Non-extra slots all
+    # stop at value T-1: position = #pops strictly below T-1 + #lower-
+    # index slots also reaching T-1. Extra slots pop T: position =
+    # #pops below T + rank among the extra set.
+    f_tm2 = n_leq(T - 2).sum()
+    under = counts <= T - 1
+    below_line = jnp.cumsum(under) - under  # exclusive prefix count
+    pos = jnp.where(extra, f_tm1 + jnp.minimum(rank, r), f_tm2 + below_line)
+    pos = jnp.clip(offset + pos, 0, B - 1)
+    return (
+        jnp.where(evicted, uu[pos], ids),
+        counts + t,
+        jnp.where(evicted, v_last, errors),
+    )
+
+
+def residual_phase(ids2, cnt2, err2, r_uids, r_net, start, n_ins, w_del,
+                   variant: int):
+    """Phase 2: eviction loop over non-unit residual inserts + one bulk
+    deletion spread.
+
+    Operates on the (R, LANES) row view, after ``blocks._phase1`` has
+    bulk-placed empty-slot fills and water-filled every unit-weight
+    eviction. The loop covers ``r_uids[start:n_ins]`` — the inserts with
+    net weight != 1, pairwise-distinct, unmonitored, and (since the
+    empties ran out whenever the loop runs) pure min-count evictions;
+    each step is an O(R + LANES) row tournament instead of an O(k) flat
+    reduce. All unmonitored deletion weight then drains in ONE greedy
+    max-error spread (spreading is item-agnostic and commutes), so its
+    trip count is the number of slots drained, not deleted uniques. Only
+    python-int constants below — this body is shared verbatim by the
+    Pallas kernel, which must not close over arrays.
+    """
+    int_max = 2**31 - 1
+    rhe, rmin, rmaxe = row_structures(ids2, cnt2, err2)
+
+    def step(carry):
+        i, ids2, cnt2, err2, rhe, rmin, rmaxe = carry
+        uid = r_uids[i]
+        w = r_net[i]
+        # unmonitored insert: empty slot if any survived, else evict min
+        r_sel, c_sel, mc, has_empty = _pick_slot(ids2, cnt2, rhe, rmin)
+        ids2 = ids2.at[r_sel, c_sel].set(uid)
+        cnt2 = cnt2.at[r_sel, c_sel].set(jnp.where(has_empty, w, mc + w))
+        err2 = err2.at[r_sel, c_sel].set(jnp.where(has_empty, 0, mc))
+        # refresh the one touched row's summaries
+        row_ids = ids2[r_sel]
+        rhe = rhe.at[r_sel].set((row_ids == -1).any())
+        rmin = rmin.at[r_sel].set(
+            jnp.where(row_ids == -1, int_max, cnt2[r_sel]).min())
+        rmaxe = rmaxe.at[r_sel].set(err2[r_sel].max())
+        return i + 1, ids2, cnt2, err2, rhe, rmin, rmaxe
+
+    def cond(carry):
+        return carry[0] < n_ins
+
+    _, ids2, cnt2, err2, rhe, rmin, rmaxe = jax.lax.while_loop(
+        cond, step, (start.astype(jnp.int32), ids2, cnt2, err2,
+                     rhe, rmin, rmaxe))
+
+    if variant != VARIANT_LAZY:
+        # bulk unmonitored-deletion spread: greedy max-error drain of the
+        # summed weight; each slot absorbs up to its whole error.
+        def sp_cond(c):
+            rem, _, _, rme = c
+            return (rem > 0) & (rme.max() > 0)
+
+        def sp_body(c):
+            rem, cnt2, err2, rme = c
+            r = jnp.argmax(rme)
+            row_err = err2[r]
+            cc = jnp.argmax(row_err)
+            d = jnp.minimum(rem, row_err[cc])
+            cnt2 = cnt2.at[r, cc].add(-d)
+            err2 = err2.at[r, cc].add(-d)
+            rme = rme.at[r].set(err2[r].max())
+            return rem - d, cnt2, err2, rme
+
+        _, cnt2, err2, _ = jax.lax.while_loop(
+            sp_cond, sp_body, (w_del.astype(jnp.int32), cnt2, err2, rmaxe))
+    return ids2, cnt2, err2
+
+
+__all__ = [
+    "_stable_partition_perm",
+    "pad_rows",
+    "row_structures",
+    "select_insert_slot",
+    "fill_empty_slots",
+    "waterfill_unit_inserts",
+    "residual_phase",
+]

@@ -1,0 +1,152 @@
+"""SketchState layer: the dense SpaceSaving± counter store + its queries.
+
+State layout (the TPU adaptation of the paper's two-heap structure):
+    ids:    (k,) int32   item ids, EMPTY = -1 for free slots
+    counts: (k,) int32   estimated counts  (min over lanes ~ paper's min-heap)
+    errors: (k,) int32   estimated errors  (max over lanes ~ paper's max-heap)
+
+This module is the bottom of the sketch package's layer map
+(DESIGN.md §9): it owns the state container, its constructors, and every
+*read-side* operation (query/query_many/topk/to_dict) plus the
+mergeable-summaries ``merge``. Phase primitives live in
+``repro.sketch.phases``; block algorithms in ``repro.sketch.blocks``;
+``repro.sketch.jax_sketch`` re-exports everything for backward compat.
+
+Item ids are assumed non-negative; negative ids are reserved sentinels
+(EMPTY, BLOCKED) and ignored as padding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+VARIANT_LAZY = 1
+VARIANT_SSPM = 2
+_INT_MAX = jnp.int32(2**31 - 1)
+
+# Row-tournament geometry: the counter store is viewed as (R, LANES) so the
+# VPU reduces along the 128-wide lane axis and the serial loop only touches
+# (R,)-wide row summaries. BLOCKED marks capacity-padding slots (never
+# empty, never min-count, never max-error).
+LANES = 128
+BLOCKED = jnp.int32(-2)
+
+
+class SketchState(NamedTuple):
+    ids: jax.Array     # (k,) int32
+    counts: jax.Array  # (k,) int32
+    errors: jax.Array  # (k,) int32
+
+
+def init(capacity: int) -> SketchState:
+    return SketchState(
+        ids=jnp.full((capacity,), EMPTY, dtype=jnp.int32),
+        counts=jnp.zeros((capacity,), dtype=jnp.int32),
+        errors=jnp.zeros((capacity,), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Queries / merge
+# ---------------------------------------------------------------------------
+
+def query(state: SketchState, item) -> jax.Array:
+    eq = state.ids == jnp.int32(item)
+    return jnp.where(eq.any(), jnp.where(eq, state.counts, 0).sum(), 0)
+
+
+@jax.jit
+def query_many(state: SketchState, items: jax.Array) -> jax.Array:
+    eq = state.ids[None, :] == items.astype(jnp.int32)[:, None]  # (n, k)
+    return jnp.where(eq, state.counts[None, :], 0).sum(axis=1) * eq.any(axis=1)
+
+
+def topk(state: SketchState, m: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-m (ids, counts) by estimated count (heavy-hitter report)."""
+    counts = jnp.where(state.ids == EMPTY, jnp.int32(-2**31), state.counts)
+    vals, idx = jax.lax.top_k(counts, m)
+    return state.ids[idx], vals
+
+
+@jax.jit
+def merge(a: SketchState, b: SketchState) -> SketchState:
+    """Mergeable-summaries merge (same rule as the reference `merge`).
+
+    Items in both: counts/errors add. Items in one: the other sketch bounds
+    the unseen frequency by its minCount (only if it is full). Keep top-k.
+    Used for cross-host reduction of data-parallel sketches.
+    """
+    k = a.ids.shape[0]
+
+    def mincount(s: SketchState):
+        full = (s.ids != EMPTY).all()
+        mc = jnp.where(s.ids == EMPTY, _INT_MAX, s.counts).min()
+        return jnp.where(full, mc, 0)
+
+    m_a, m_b = mincount(a), mincount(b)
+
+    ids = jnp.concatenate([a.ids, b.ids])
+    counts = jnp.concatenate([a.counts, b.counts])
+    errors = jnp.concatenate([a.errors, b.errors])
+    cross = jnp.concatenate([jnp.full((k,), m_b), jnp.full((k,), m_a)])
+    cross = jnp.where(ids == EMPTY, 0, cross).astype(jnp.int32)
+
+    # combine duplicates: sort by id; adjacent-equal pairs fold together.
+    order = jnp.argsort(ids)
+    ids_s = ids[order]
+    cnt_s = counts[order] + cross[order]
+    err_s = errors[order] + cross[order]
+    dup_prev = jnp.concatenate([jnp.zeros((1,), bool), ids_s[1:] == ids_s[:-1]])
+    # fold each duplicate's (count,error) into the *first* of its run.
+    seg = jnp.cumsum(~dup_prev) - 1
+    n = ids.shape[0]
+    cnt_m = jax.ops.segment_sum(cnt_s, seg, num_segments=n)
+    err_m = jax.ops.segment_sum(err_s, seg, num_segments=n)
+    id_m = jax.ops.segment_max(ids_s, seg, num_segments=n)
+    # duplicates were double-cross-counted: a duplicate pair means the item is
+    # in both sketches, so no cross term applies — subtract both cross adds.
+    had_dup = jax.ops.segment_sum(dup_prev.astype(jnp.int32), seg, num_segments=n)
+    cnt_m = cnt_m - had_dup * (m_a + m_b)
+    err_m = err_m - had_dup * (m_a + m_b)
+    n_seg = (~dup_prev).sum()
+    valid = (jnp.arange(n) < n_seg) & (id_m != EMPTY)
+    # top-k by merged count
+    key = jnp.where(valid, cnt_m, jnp.int32(-2**31))
+    _, idx = jax.lax.top_k(key, k)
+    sel_valid = valid[idx]
+    return SketchState(
+        ids=jnp.where(sel_valid, id_m[idx], EMPTY).astype(jnp.int32),
+        counts=jnp.where(sel_valid, cnt_m[idx], 0).astype(jnp.int32),
+        errors=jnp.where(sel_valid, err_m[idx], 0).astype(jnp.int32),
+    )
+
+
+def to_dict(state: SketchState) -> dict:
+    """Materialize to {item: (count, error)} for test comparison."""
+    out = {}
+    ids = jax.device_get(state.ids)
+    cnts = jax.device_get(state.counts)
+    errs = jax.device_get(state.errors)
+    for i, c, e in zip(ids, cnts, errs):
+        if i != -1:
+            out[int(i)] = (int(c), int(e))
+    return out
+
+
+__all__ = [
+    "EMPTY",
+    "BLOCKED",
+    "LANES",
+    "VARIANT_LAZY",
+    "VARIANT_SSPM",
+    "SketchState",
+    "init",
+    "query",
+    "query_many",
+    "topk",
+    "merge",
+    "to_dict",
+]

@@ -10,10 +10,17 @@ stream is bounded-deletion with alpha = window/(window-1) per step and
 alpha <= 2 cumulatively for window >= 2 — the exact regime the paper's
 Thm 4 sizes capacity for (2*alpha/eps counters).
 
-The sketch state is pure JAX (repro.sketch.jax_sketch) and is part of the
-training checkpoint; sketches merge across data-parallel hosts with the
-mergeable-summaries merge (jax_sketch.merge), giving the global view the
-paper's distributed-setting footnote describes.
+The sketch state is pure JAX (repro.sketch.state / blocks) and is part
+of the training checkpoint; sketches merge across data-parallel hosts
+with the mergeable-summaries merge (state.merge), giving the global view
+the paper's distributed-setting footnote describes.
+
+``shards=S`` switches either tracker onto the hash-partitioned
+``repro.sketch.sharded`` bank at the same total counter budget: blocks
+route shard-by-hash in one launch (shard_map over the mesh "data" axis
+on real meshes), queries stay merge-error-free, and ``merge_from``
+reduces shard-wise. The default (``shards=None``) keeps the single
+(k,) sketch and its exact checkpoint layout.
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sketch import jax_sketch as js
+from repro.sketch import blocks as bl, sharded as shd, state as st
 
 
 def _aggregate_np(tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -47,6 +54,93 @@ class StatsReport:
         return self.insertions / live
 
 
+class _SketchBank:
+    """Single-sketch vs hash-sharded backend behind one tiny facade.
+
+    Keeps TokenStats/ExpertLoadStats free of per-call branching: both
+    talk to ``update/topk/query_many/merge_from/state_dict`` and the
+    backend routes to ``repro.sketch.blocks`` (shards=None) or
+    ``repro.sketch.sharded`` (shards=S, same total budget).
+    """
+
+    def __init__(self, capacity: int, variant: int,
+                 shards: Optional[int] = None,
+                 universe_bits: Optional[int] = None):
+        self.capacity = capacity
+        self.variant = variant
+        self.shards = shards
+        self.universe_bits = universe_bits
+        if shards:
+            self.sharded = shd.init(capacity, shards)
+            self.state = None
+        else:
+            self.sharded = None
+            self.state = st.init(capacity)
+
+    def update(self, items: jax.Array, weights: jax.Array) -> None:
+        if self.shards:
+            self.sharded = shd.update_block(
+                self.sharded, items, weights, self.variant,
+                universe_bits=self.universe_bits)
+        else:
+            self.state = bl.block_update(self.state, items, weights,
+                                         self.variant)
+
+    def topk(self, m: int):
+        if self.shards:
+            return shd.topk(self.sharded, m)
+        return st.topk(self.state, m)
+
+    def query_many(self, items: jax.Array) -> jax.Array:
+        if self.shards:
+            return shd.query_many(self.sharded, items)
+        return st.query_many(self.state, items)
+
+    def merge_from(self, other: "_SketchBank") -> None:
+        if bool(self.shards) != bool(other.shards):
+            raise ValueError("cannot merge sharded and unsharded trackers")
+        if self.shards:
+            if self.shards != other.shards:
+                raise ValueError(
+                    f"shard count mismatch: {self.shards} != {other.shards}")
+            self.sharded = shd.merge(self.sharded, other.sharded)
+        else:
+            self.state = st.merge(self.state, other.state)
+
+    def consolidated(self) -> st.SketchState:
+        """One (k,)-counter summary (checkpoint compaction for sharded)."""
+        if self.shards:
+            return shd.consolidate(self.sharded)
+        return self.state
+
+    # checkpointing — the unsharded layout is unchanged from before the
+    # sharded tier existed, so old checkpoints load as-is.
+    def state_dict(self) -> dict:
+        s = self.sharded.bank if self.shards else self.state
+        d = {
+            "ids": np.asarray(s.ids),
+            "counts": np.asarray(s.counts),
+            "errors": np.asarray(s.errors),
+        }
+        if self.shards:
+            d["shards"] = self.shards
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        fields = st.SketchState(
+            ids=jnp.asarray(d["ids"]), counts=jnp.asarray(d["counts"]),
+            errors=jnp.asarray(d["errors"]),
+        )
+        if d.get("shards"):
+            self.shards = int(d["shards"])
+            self.sharded = shd.ShardedSketch(bank=fields)
+            self.state = None
+        else:
+            self.shards = None
+            self.sharded = None
+            self.state = fields
+
+
 class TokenStats:
     """SS± heavy-token tracking over a sliding window of batches."""
 
@@ -54,17 +148,37 @@ class TokenStats:
         self,
         capacity: int = 4096,
         window: int = 64,
-        variant: int = js.VARIANT_SSPM,
+        variant: int = st.VARIANT_SSPM,
         block: int = 8192,
+        shards: Optional[int] = None,
+        universe_bits: Optional[int] = None,
     ):
         self.capacity = capacity
         self.window = window
         self.variant = variant
         self.block = block
-        self.state = js.init(capacity)
+        self.bank = _SketchBank(capacity, variant, shards, universe_bits)
         self._fifo: Deque[Tuple[np.ndarray, np.ndarray]] = collections.deque()
         self.insertions = 0
         self.deletions = 0
+
+    @property
+    def state(self):
+        """The underlying (k,) SketchState (single-sketch mode only)."""
+        return self.bank.state
+
+    @state.setter
+    def state(self, value) -> None:
+        if self.bank.shards:
+            raise ValueError(
+                "TokenStats(shards=S) has no single (k,) state to assign; "
+                "restore via load_state_dict (bank layout: (S, k) arrays + "
+                "'shards')")
+        self.bank.state = value
+
+    @property
+    def shards(self) -> Optional[int]:
+        return self.bank.shards
 
     def _ingest(self, uids: np.ndarray, weights: np.ndarray) -> None:
         # pad to the fixed block length so the jitted update never retraces
@@ -76,9 +190,7 @@ class TokenStats:
             if pad:
                 chunk_u = np.pad(chunk_u, (0, pad), constant_values=0)
                 chunk_w = np.pad(chunk_w, (0, pad), constant_values=0)
-            self.state = js.block_update(
-                self.state, jnp.asarray(chunk_u), jnp.asarray(chunk_w), self.variant
-            )
+            self.bank.update(jnp.asarray(chunk_u), jnp.asarray(chunk_w))
 
     def update(self, tokens) -> None:
         uids, counts = _aggregate_np(np.asarray(tokens))
@@ -91,38 +203,36 @@ class TokenStats:
             self.deletions += int(dc.sum())
 
     def topk(self, m: int = 16) -> StatsReport:
-        ids, counts = js.topk(self.state, min(m, self.capacity))
+        ids, counts = self.bank.topk(min(m, self.capacity))
         return StatsReport(
             items=np.asarray(ids), counts=np.asarray(counts),
             insertions=self.insertions, deletions=self.deletions,
         )
 
     def query(self, items) -> np.ndarray:
-        return np.asarray(js.query_many(self.state, jnp.asarray(items, jnp.int32)))
+        return np.asarray(
+            self.bank.query_many(jnp.asarray(items, jnp.int32)))
 
     def merge_from(self, other: "TokenStats") -> None:
-        """Cross-host reduction (mergeable summaries)."""
-        self.state = js.merge(self.state, other.state)
+        """Cross-host reduction (mergeable summaries; shard-wise when
+        sharded)."""
+        self.bank.merge_from(other.bank)
         self.insertions += other.insertions
         self.deletions += other.deletions
 
     # checkpointing
     def state_dict(self) -> dict:
-        return {
-            "ids": np.asarray(self.state.ids),
-            "counts": np.asarray(self.state.counts),
-            "errors": np.asarray(self.state.errors),
-            "insertions": self.insertions,
-            "deletions": self.deletions,
-            "fifo_u": [u for u, _ in self._fifo],
-            "fifo_c": [c for _, c in self._fifo],
-        }
+        d = self.bank.state_dict()
+        d.update(
+            insertions=self.insertions,
+            deletions=self.deletions,
+            fifo_u=[u for u, _ in self._fifo],
+            fifo_c=[c for _, c in self._fifo],
+        )
+        return d
 
     def load_state_dict(self, d: dict) -> None:
-        self.state = js.SketchState(
-            ids=jnp.asarray(d["ids"]), counts=jnp.asarray(d["counts"]),
-            errors=jnp.asarray(d["errors"]),
-        )
+        self.bank.load_state_dict(d)
         self.insertions = int(d["insertions"])
         self.deletions = int(d["deletions"])
         self._fifo = collections.deque(
@@ -140,32 +250,41 @@ class ExpertLoadStats:
     """
 
     def __init__(self, num_experts: int, capacity: Optional[int] = None,
-                 window: int = 128, variant: int = js.VARIANT_SSPM):
+                 window: int = 128, variant: int = st.VARIANT_SSPM,
+                 shards: Optional[int] = None):
         self.E = num_experts
         self.capacity = capacity or max(8, num_experts // 2)
         self.window = window
         self.variant = variant
-        self.state = js.init(self.capacity)
+        self.bank = _SketchBank(
+            self.capacity, variant, shards,
+            universe_bits=max(int(num_experts - 1).bit_length(), 1))
         self._fifo: Deque[np.ndarray] = collections.deque()
         self._ids = jnp.arange(num_experts, dtype=jnp.int32)
         self.insertions = 0
         self.deletions = 0
 
+    @property
+    def state(self):
+        return self.bank.state
+
+    @property
+    def shards(self) -> Optional[int]:
+        return self.bank.shards
+
     def update(self, expert_counts) -> None:
         w = jnp.asarray(expert_counts, jnp.int32)
-        self.state = js.block_update(self.state, self._ids, w, self.variant)
+        self.bank.update(self._ids, w)
         self.insertions += int(np.asarray(expert_counts).sum())
         self._fifo.append(np.asarray(expert_counts))
         while len(self._fifo) > self.window:
             old = self._fifo.popleft()
-            self.state = js.block_update(
-                self.state, self._ids, -jnp.asarray(old, jnp.int32), self.variant
-            )
+            self.bank.update(self._ids, -jnp.asarray(old, jnp.int32))
             self.deletions += int(old.sum())
 
     def hot_experts(self, phi: float = 0.125) -> StatsReport:
         """Experts with windowed load >= phi * live mass (paper's phi-HH)."""
-        ids, counts = js.topk(self.state, self.capacity)
+        ids, counts = self.bank.topk(self.capacity)
         live = max(self.insertions - self.deletions, 1)
         mask = np.asarray(counts) >= phi * live
         return StatsReport(

@@ -145,7 +145,7 @@ class Trainer:
             restored, extra = ckpt.restore(self.tcfg.ckpt_dir, payload, axes=axes)
         self.state = restored["train"]
         if self.token_stats is not None and "sketch" in restored:
-            from repro.sketch.jax_sketch import SketchState
+            from repro.sketch.state import SketchState
             s = restored["sketch"]
             self.token_stats.state = SketchState(s["ids"], s["counts"], s["errors"])
             meta = extra.get("sketch_meta", {})

@@ -25,7 +25,8 @@ from repro.core.quantiles import (
     make_dss_pm,
 )
 from repro.core.streams import bounded_stream, exact_stats
-from repro.sketch import dyadic, jax_sketch as js
+from repro import sketch as js
+from repro.sketch import dyadic
 
 BITS = 8
 EPS = 0.15

@@ -1,4 +1,4 @@
-"""Tests for the vectorized JAX SpaceSaving± (repro.sketch.jax_sketch)."""
+"""Tests for the vectorized JAX SpaceSaving± (repro.sketch state/phases/blocks)."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.streams import bounded_stream, exact_stats
-from repro.sketch import jax_sketch as js
+from repro import sketch as js
+from repro.sketch.blocks import _aggregate_block
 
 
 def py_array_oracle(k, items, weights, variant=2):
@@ -149,7 +150,7 @@ class TestBlockUpdate:
             for x, y in zip(out, st0):
                 np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
         # aggregation itself: all-padding block yields no valid segments
-        uids, net = js._aggregate_block(
+        uids, net = _aggregate_block(
             jnp.asarray([9, 3, 9, 1], jnp.int32), jnp.zeros(4, jnp.int32)
         )
         assert int(jnp.sum((uids >= 0) & (net != 0))) == 0

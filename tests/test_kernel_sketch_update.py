@@ -3,7 +3,7 @@
 Three layers of guarantees (DESIGN.md §3.4), each pinned here:
 
   1. The kernel path is **bit-identical** to the pure-JAX two-phase
-     ``jax_sketch.block_update`` on every block (they share phase-1/2
+     ``blocks.block_update`` on every block (they share phase-1/2
      code; the kernel runs phase 2 in interpret mode on this CPU
      container — TPU is the target).
   2. Monitored-only blocks are **bit-identical** to the serial unit-update
@@ -25,7 +25,7 @@ from repro.kernels.sketch_update.ops import (
     sketch_block_update_serial,
 )
 from repro.kernels.sketch_update.ref import sketch_update_ref
-from repro.sketch import jax_sketch as js
+from repro import sketch as js
 
 from test_jax_sketch import random_strict_stream
 

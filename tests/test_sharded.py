@@ -1,0 +1,327 @@
+"""Differential suite for the hash-sharded SpaceSaving± bank.
+
+Pins the three load-bearing properties of ``repro.sketch.sharded``:
+
+  * **bit-identity** — the fused one-launch ingest equals (a) a
+    reference that routes then updates each shard serially and (b) S
+    sketches built independently from their own substreams, for every
+    path (block / vmap / kernel / shard_map), both variants, mixed
+    insert/delete streams;
+  * **routing invariants** — a uid's owner shard is a pure function of
+    (uid, S); a shard only ever monitors its own uids;
+  * **query parity** — per-item error, recall and precision of
+    query_many/topk against the exact counts and against the
+    equal-budget single sketch, across alpha in {1.25, 2, 4}.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import bounded_stream, exact_stats
+from repro.sketch import blocks, sharded as shd, state as st
+
+
+def _assert_banks_equal(a, b):
+    for x, y in zip(a.bank, b.bank):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _stream(dist, n, ratio, seed):
+    s = bounded_stream(dist, n, ratio, order="interleaved", seed=seed)[:n]
+    return (jnp.asarray(s[:, 0], jnp.int32), jnp.asarray(s[:, 1], jnp.int32))
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("variant", [1, 2])
+    @pytest.mark.parametrize("S,ktot,B,dist,ratio", [
+        (4, 256, 1024, "zipf", 0.2),
+        (2, 128, 512, "caida", 0.5),
+        (8, 512, 2048, "binomial", 0.75),
+        (3, 96, 777, "zipf", 0.5),     # S and B neither powers of two
+    ])
+    def test_fused_equals_serial_routed_reference(self, variant, S, ktot, B,
+                                                  dist, ratio):
+        items, w = _stream(dist, B, ratio, seed=S + B)
+        s0 = shd.init(ktot, S)
+        out = shd.update_block(s0, items, w, variant, universe_bits=16)
+        ref = shd.update_block_serial_reference(s0, items, w, variant,
+                                                universe_bits=16)
+        _assert_banks_equal(out, ref)
+        # second block on the warm state (non-trivial empties/monitored mix)
+        i2, w2 = _stream(dist, B, ratio, seed=S + B + 1)
+        _assert_banks_equal(
+            shd.update_block(out, i2, w2, variant, universe_bits=16),
+            shd.update_block_serial_reference(ref, i2, w2, variant,
+                                              universe_bits=16))
+
+    def test_fused_equals_independently_built_shards(self):
+        S, ktot, B = 4, 256, 2048
+        items, w = _stream("zipf", B, 0.5, seed=7)
+        out = shd.update_block(shd.init(ktot, S), items, w)
+        owner = np.asarray(shd.shard_of(items, S))
+        it_np, w_np = np.asarray(items), np.asarray(w)
+        for s in range(S):
+            # shard s's substream, padded back to the block length
+            mask = owner == s
+            sub_i = np.zeros(B, np.int32)
+            sub_w = np.zeros(B, np.int32)
+            sub_i[: mask.sum()] = it_np[mask]
+            sub_w[: mask.sum()] = w_np[mask]
+            want = blocks.block_update(
+                st.init(ktot // S), jnp.asarray(sub_i), jnp.asarray(sub_w))
+            got = jax.tree.map(lambda x: x[s], out.bank)
+            for g, y in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(y))
+
+    @pytest.mark.parametrize("path", ["vmap", "kernel"])
+    def test_alternate_paths_match_fused(self, path):
+        items, w = _stream("zipf", 1024, 0.5, seed=11)
+        s0 = shd.init(128, 4)
+        base = shd.update_block(s0, items, w, universe_bits=16)
+        _assert_banks_equal(
+            base, shd.update_block(s0, items, w, universe_bits=16, path=path))
+
+    def test_shard_map_path_matches_fused(self):
+        from jax.sharding import Mesh
+        from repro.parallel import sharding as psh
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        items, w = _stream("zipf", 512, 0.25, seed=3)
+        s0 = shd.init(64, 4)
+        base = shd.update_block(s0, items, w)
+        with psh.use_mesh(mesh):
+            assert psh.mesh_axis("shards") == ("data",)
+            out = shd.update_block(s0, items, w, path="shard_map")
+        _assert_banks_equal(base, out)
+
+    def test_all_padding_block_is_noop(self):
+        s0 = shd.init(64, 4)
+        warm = shd.update_block(
+            s0, jnp.asarray([4, 4, 6, 9], jnp.int32), jnp.ones(4, jnp.int32))
+        for pad_items in ([0, 0, 0, 0], [9, 3, 9, 1], [-1, -1, -1, -1]):
+            out = shd.update_block(
+                warm, jnp.asarray(pad_items, jnp.int32),
+                jnp.zeros(4, jnp.int32))
+            _assert_banks_equal(out, warm)
+
+
+class TestRoutingInvariants:
+    def test_shard_of_is_stable_and_total(self):
+        S = 8
+        ids = jnp.arange(50000, dtype=jnp.int32)
+        a = np.asarray(shd.shard_of(ids, S))
+        b = np.asarray(shd.shard_of(ids, S))
+        np.testing.assert_array_equal(a, b)       # pure function of (uid, S)
+        assert a.min() >= 0 and a.max() < S
+        # avalanche hash: structured id spaces still spread ~uniformly
+        counts = np.bincount(a, minlength=S)
+        assert counts.min() > 0.8 * len(ids) / S
+        assert counts.max() < 1.2 * len(ids) / S
+
+    def test_shards_only_monitor_their_own_uids(self):
+        S = 4
+        items, w = _stream("zipf", 4096, 0.5, seed=5)
+        out = shd.init(512, S)
+        for blk in range(4):
+            i2, w2 = _stream("zipf", 4096, 0.5, seed=blk)
+            out = shd.update_block(out, i2, w2)
+        ids = np.asarray(out.bank.ids)
+        for s in range(S):
+            live = ids[s][ids[s] >= 0]
+            owner = np.asarray(shd.shard_of(jnp.asarray(live, jnp.int32), S))
+            assert (owner == s).all()
+
+    def test_query_answers_come_from_owner_shard_only(self):
+        # no merge cross-terms: an absent item reads exactly 0, even when
+        # other shards are full (a merged summary would charge minCount).
+        S, ktot = 4, 64
+        out = shd.init(ktot, S)
+        for blk in range(8):
+            i2, w2 = _stream("zipf", 1024, 0.0, seed=blk + 20)
+            out = shd.update_block(out, i2, w2)
+        missing = []
+        ids = set(np.asarray(out.bank.ids).ravel().tolist())
+        x = 1 << 20
+        while len(missing) < 16:
+            if x not in ids:
+                missing.append(x)
+            x += 1
+        est = np.asarray(shd.query_many(out, jnp.asarray(missing, jnp.int32)))
+        np.testing.assert_array_equal(est, 0)
+
+
+def _recall_precision(est, freqs, thresh):
+    cand = np.nonzero(freqs > 0)[0]
+    true_hot = set(np.nonzero(freqs >= thresh)[0].tolist())
+    reported = set(cand[est[cand] >= thresh].tolist())
+    tp = len(true_hot & reported)
+    return (tp / max(len(true_hot), 1), tp / max(len(reported), 1))
+
+
+class TestQueryParity:
+    @pytest.mark.parametrize("alpha", [1.25, 2.0, 4.0])
+    @pytest.mark.parametrize("S", [2, 4])
+    def test_error_recall_precision_vs_single_reference(self, alpha, S):
+        """At equal total budget, the sharded bank's per-item error obeys
+        the per-shard Thm 4 bound and its phi-heavy-hitter recall is
+        perfect, matching the single-sketch reference."""
+        ratio = 1.0 - 1.0 / alpha
+        n_insert = 6000
+        ktot = 1024
+        stream = bounded_stream("zipf", n_insert, ratio,
+                                order="interleaved", seed=int(alpha * 10) + S)
+        stats = exact_stats(stream)
+        items = jnp.asarray(stream[:, 0], jnp.int32)
+        weights = jnp.asarray(stream[:, 1], jnp.int32)
+        single = st.init(ktot)
+        bank = shd.init(ktot, S)
+        B = 2048
+        n = len(stream)
+        nb = -(-n // B)
+        pad = nb * B - n
+        items = jnp.concatenate([items, jnp.zeros((pad,), jnp.int32)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), jnp.int32)])
+        for b in range(nb):
+            sl = slice(b * B, (b + 1) * B)
+            single = blocks.block_update(single, items[sl], weights[sl])
+            bank = shd.update_block(bank, items[sl], weights[sl],
+                                    universe_bits=16)
+        freqs = np.zeros(1 << 16, np.int64)
+        for it, f in stats.frequencies.items():
+            freqs[it] = f
+        q = jnp.arange(1 << 16, dtype=jnp.int32)
+        est_sh = np.asarray(shd.query_many(bank, q), np.int64)
+        est_si = np.asarray(st.query_many(single, q), np.int64)
+
+        # per-item error: each shard monitors its substream with k/S
+        # counters; a uniform hash keeps every shard's residual mass near
+        # |F|res/S, so the error scales like the single sketch's
+        # eps * |F|res. Assert the worst shard against its own substream
+        # residual (the honest per-shard Thm 4 bound).
+        owner = np.asarray(shd.shard_of(q, S))
+        live = np.asarray(stream[:, 0], np.int64)
+        for s in range(S):
+            sub = stream[owner[stream[:, 0]] == s]
+            sub_stats = exact_stats(sub)
+            eps_s = 2 * alpha / (ktot // S)
+            bound = eps_s * sub_stats.residual_mass + 1e-9
+            sel = (owner == 0 + s) & (freqs >= 0)
+            err = np.abs(est_sh[sel] - freqs[sel])
+            assert err.max() <= bound, (s, err.max(), bound)
+
+        # recall/precision parity at phi = 1% of live mass
+        live_mass = freqs.sum()
+        thresh = max(0.01 * live_mass, 1.0)
+        r_sh, p_sh = _recall_precision(est_sh, freqs, thresh)
+        r_si, p_si = _recall_precision(est_si, freqs, thresh)
+        assert r_sh == 1.0  # SpaceSaving-family overestimates: full recall
+        assert r_si == 1.0
+        assert abs(p_sh - p_si) <= 0.1, (p_sh, p_si)
+
+        # topk: every true phi-heavy item is reported by both
+        hot = set(np.nonzero(freqs >= thresh)[0].tolist())
+        ids_sh, _ = shd.topk(bank, 64)
+        ids_si, _ = st.topk(single, 64)
+        assert hot <= set(np.asarray(ids_sh).tolist())
+        assert hot <= set(np.asarray(ids_si).tolist())
+
+
+class TestMergeConsolidate:
+    def test_shardwise_merge_matches_per_shard_merge(self):
+        S, ktot = 4, 256
+        a = shd.init(ktot, S)
+        b = shd.init(ktot, S)
+        i1, w1 = _stream("zipf", 2048, 0.25, seed=1)
+        i2, w2 = _stream("zipf", 2048, 0.25, seed=2)
+        a = shd.update_block(a, i1, w1)
+        b = shd.update_block(b, i2, w2)
+        m = shd.merge(a, b)
+        for s in range(S):
+            want = st.merge(jax.tree.map(lambda x: x[s], a.bank),
+                            jax.tree.map(lambda x: x[s], b.bank))
+            got = jax.tree.map(lambda x: x[s], m.bank)
+            for g, y in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(y))
+
+    def test_consolidate_no_underestimation_insert_only(self):
+        S, ktot = 4, 512
+        bank = shd.init(ktot, S)
+        rng = np.random.default_rng(9)
+        toks = (rng.zipf(1.4, 4096) % 100).astype(np.int32)
+        bank = shd.update_block(
+            bank, jnp.asarray(toks), jnp.ones(len(toks), jnp.int32))
+        cons = shd.consolidate(bank)
+        assert cons.ids.shape == (ktot // S,)
+        from collections import Counter
+
+        freq = Counter(toks.tolist())
+        got = st.to_dict(cons)
+        for it, (c, e) in got.items():
+            assert c >= freq.get(it, 0)
+
+    def test_to_dict_union(self):
+        bank = shd.update_block(
+            shd.init(64, 2),
+            jnp.asarray([1, 2, 3, 1], jnp.int32), jnp.ones(4, jnp.int32))
+        d = shd.to_dict(bank)
+        assert d[1][0] == 2 and d[2][0] == 1 and d[3][0] == 1
+
+
+class TestStatsAndPipelineWiring:
+    def test_token_stats_sharded_exact_small_universe(self):
+        from repro.sketch.stats import TokenStats
+
+        # capacity >= universe: every shard holds its whole sub-universe
+        ts = TokenStats(capacity=64, window=4, block=256, shards=4,
+                        universe_bits=5)
+        rng = np.random.default_rng(0)
+        window_batches = []
+        for _ in range(8):
+            batch = rng.integers(0, 32, size=(2, 50)).astype(np.int32)
+            ts.update(batch)
+            window_batches.append(batch)
+            window_batches = window_batches[-4:]
+        import collections
+
+        exact = collections.Counter(
+            np.concatenate([b.ravel() for b in window_batches]))
+        got = ts.query(np.arange(32))
+        for i in range(32):
+            assert got[i] == exact.get(i, 0)
+
+    def test_expert_stats_sharded_tracks_hot_experts(self):
+        from repro.sketch.stats import ExpertLoadStats
+
+        es = ExpertLoadStats(32, capacity=32, window=8, shards=2)
+        loads = np.ones(32, np.int64)
+        loads[3] = 100
+        for _ in range(6):
+            es.update(loads)
+        rep = es.hot_experts(0.25)
+        assert 3 in rep.items.tolist()
+
+    def test_pipeline_token_stats_feeder(self):
+        from repro.data.pipeline import DataConfig, TokenPipeline
+
+        cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4)
+        pipe = TokenPipeline(cfg, host_id=1, num_hosts=2)
+        ts = pipe.token_stats(5, capacity=128, window=2, shards=4, block=128)
+        assert ts.shards == 4
+        assert ts.insertions == 5 * 2 * 16
+        assert ts.deletions == 3 * 2 * 16  # 3 batches expired at window=2
+        # host-sharded stream: host 1's stats differ from host 0's
+        ts0 = TokenPipeline(cfg, host_id=0, num_hosts=2).token_stats(
+            5, capacity=128, window=2, shards=4, block=128)
+        assert not np.array_equal(ts.query(np.arange(512)),
+                                  ts0.query(np.arange(512)))
+
+    def test_sharded_merge_guard(self):
+        from repro.sketch.stats import TokenStats
+
+        a = TokenStats(capacity=64, shards=2)
+        b = TokenStats(capacity=64)
+        with pytest.raises(ValueError):
+            a.merge_from(b)
