@@ -3,13 +3,18 @@
 Figs 8-10 mirror the paper's §5.5 quantile experiments (DSS± vs DCS vs
 KLL±: KS divergence vs space, vs delete ratio, and update time). New
 since the JAX dyadic bank landed: per distribution, the python-reference
-per-item loop (bits heap updates per element) is raced against the JAX
-block path (one ``block_update_batched`` launch per block over the
-(bits, k) bank) and the Pallas kernel path (one residual-kernel launch
-per layer, interpret mode on CPU), with KS divergence reported for each
-so the speedup is provably not bought with accuracy. Results land in
-``BENCH_quantiles.json`` at the repo root (same contract as
-BENCH_kernels.json): machine-readable perf trajectory across PRs.
+per-item loop (bits heap updates per element) is raced against the
+fused bank-engine path (``path='bank'``: batched dense phase 1 + the
+lockstep banked residual loop, one launch for the whole (bits, k) bank
+— the production path), the pre-engine vmapped block path
+(``block_update_batched``, kept for A/B) and the Pallas banked-kernel
+path (one residual launch for the whole bank, interpret mode on CPU),
+with KS divergence reported for each so the speedup is provably not
+bought with accuracy. The acceptance cell for the bank engine is
+(zipf, bits=16, budget=2048): ``bank`` must be ≥1.5× ``jax_block``.
+Results land in ``BENCH_quantiles.json`` at the repo root (same
+contract as BENCH_kernels.json): machine-readable perf trajectory
+across PRs.
 
 Wall-times are CPU interpret-mode numbers — relative trends only
 (DESIGN.md §7-§8).
@@ -125,7 +130,7 @@ def _ks_dyadic_jax(state, live: np.ndarray, num_queries: int = 128) -> float:
     return float(np.max(np.abs(est - tr)) / len(live))
 
 
-def _time_jax_path(bits, budget, stream, block, path, variant=2, runs=2):
+def _time_jax_path(bits, budget, stream, block, path, variant=2, runs=3):
     """Min-of-N seconds for a full feed (post-compile) + the final state.
 
     Min-of-N (matching bench_kernels) because CPU-contention outliers at
@@ -165,7 +170,8 @@ def run_dyadic(n_insert: int = 6000, budget: int = 2048, block: int = 2048,
         rows.append([dist, BITS, budget, "python_ref", 1,
                      ref_ups, ks_divergence(ref, live), 1.0])
 
-        for impl, path in (("jax_block", "block"), ("pallas_kernel", "kernel")):
+        for impl, path in (("bank", "bank"), ("jax_block", "block"),
+                           ("pallas_kernel", "kernel")):
             dt, st = _time_jax_path(BITS, budget, stream, block, path)
             ups = n / dt
             rows.append([dist, BITS, budget, impl, block,

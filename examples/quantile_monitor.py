@@ -7,20 +7,29 @@ over the last W steps?" to drive adaptive clipping — a deterministic
 answer with the paper's rank-error guarantee.
 
 Updates are buffered host-side and flushed as fixed-size blocks, so the
-whole window maintenance costs ONE batched sketch-bank launch per flush
+whole window maintenance costs ONE fused bank-engine launch per flush
 (inserts of new steps and deletions of expired ones net out inside the
-block), and quantile queries are one jit'd binary search. State is three
-dense arrays + a scalar — checkpointable like every other sketch here.
+block; `dyadic.update_block` defaults to the engine's `path='bank'` —
+DESIGN.md §10), and quantile queries are one jit'd binary search. State
+is three dense arrays + a scalar — checkpointable like every other
+sketch here.
 
-    PYTHONPATH=src python examples/quantile_monitor.py
+``--shards S`` runs the same monitor on the mesh-distributed bank
+(`repro.sketch.dyadic_sharded`): (level, node) summaries hash-partition
+over S shards (shard_map over the mesh "shards" axis on real meshes),
+queries read owner shards only, and `consolidate()` folds back to a
+single-host DyadicState for checkpoints.
+
+    PYTHONPATH=src python examples/quantile_monitor.py [--shards 4]
 """
+import argparse
 import collections
 
 import numpy as np
 
 import jax.numpy as jnp
 
-from repro.sketch import dyadic
+from repro.sketch import dyadic, dyadic_sharded
 
 BITS = 12           # quantize gradient norms into 2^12 buckets
 SCALE = 100.0       # norm 0..40.95 -> bucket id
@@ -34,10 +43,18 @@ def to_bucket(x: float) -> int:
 
 
 class WindowedQuantileMonitor:
-    """Sliding-window quantiles via one dyadic bank + an update buffer."""
+    """Sliding-window quantiles via one dyadic bank + an update buffer.
 
-    def __init__(self, window: int = WINDOW):
-        self.state = dyadic.init(BITS, total_counters=BUDGET)
+    ``shards=S`` swaps the single-host bank for the mesh-distributed
+    shard × level bank — same observe/quantile API, same guarantees.
+    """
+
+    def __init__(self, window: int = WINDOW, shards: int = 0):
+        self._mod = dyadic_sharded if shards else dyadic
+        self.state = (dyadic_sharded.init(BITS, shards,
+                                          total_counters=BUDGET)
+                      if shards else dyadic.init(BITS,
+                                                 total_counters=BUDGET))
         self.fifo = collections.deque()
         self.window = window
         self._pending_items = []
@@ -64,19 +81,23 @@ class WindowedQuantileMonitor:
         assert n <= BLOCK
         items[:n] = self._pending_items
         weights[:n] = self._pending_weights
-        self.state = dyadic.update_block(
+        self.state = self._mod.update_block(
             self.state, jnp.asarray(items), jnp.asarray(weights))
         self._pending_items.clear()
         self._pending_weights.clear()
 
     def quantile(self, q: float) -> float:
         self.flush()
-        return dyadic.quantile(self.state, q) / SCALE
+        return self._mod.quantile(self.state, q) / SCALE
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=0,
+                    help="distribute the bank over S hash shards")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
-    mon = WindowedQuantileMonitor()
+    mon = WindowedQuantileMonitor(shards=args.shards)
 
     # synthetic training: grad norms drift down, with a spike burst
     true_window = collections.deque(maxlen=WINDOW)
@@ -97,6 +118,12 @@ def main():
     assert int(mon.state.mass) == len(true_window)
     print("ok: windowed p95 tracked through drift and burst "
           f"(|F|1 = {int(mon.state.mass)} = window size).")
+    if args.shards:
+        # checkpoint compaction: fold shards back to one DyadicState
+        cons = dyadic_sharded.consolidate(mon.state)
+        p95c = dyadic.quantile(cons, 0.95) / SCALE
+        print(f"consolidated ({args.shards} shards -> 1 bank): "
+              f"p95 {p95c:.2f}")
 
 
 if __name__ == "__main__":

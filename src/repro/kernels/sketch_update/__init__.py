@@ -1,11 +1,13 @@
 from .ops import (
     sketch_block_update,
+    sketch_block_update_banked,
     sketch_block_update_batched,
     sketch_block_update_serial,
 )
 
 __all__ = [
     "sketch_block_update",
+    "sketch_block_update_banked",
     "sketch_block_update_batched",
     "sketch_block_update_serial",
 ]

@@ -7,7 +7,7 @@ all k = R*128 counters instead of heap operations. The whole block of B
 updates is applied in one kernel launch: one HBM round-trip for the state
 per *block*, not per update.
 
-Two kernels live here:
+Three kernels live here:
 
 ``sketch_residual_kernel`` — the production two-phase path's phase 2. The
 wrapper (ops.py) segment-aggregates the block and scatter-adds all
@@ -19,6 +19,15 @@ summaries updated incrementally, (R,)-wide final reduce) instead of a flat
 O(k) argmin/argmax. The body is shared with the pure-JAX layer
 (``repro.sketch.phases.residual_phase``) so the two paths are
 bit-identical.
+
+``sketch_residual_kernel_banked`` — the whole-bank variant: ONE launch
+covers a stacked (R, K) bank (dyadic layers, hash shards, shard × level
+rows). The wrapper runs the engine's dense phase 1
+(``repro.sketch.bank.phase1_dense``) and this kernel runs every row's
+residual loop in lockstep via the shared ``bank.residual_phase_banked``
+body — flat per-row argmin/argmax with one-hot where-mask updates, no
+batched scatters — so the kernel path is bit-identical to the pure-JAX
+banked path by construction.
 
 ``sketch_update_kernel_serial`` — the pre-two-phase baseline: a serial
 fori_loop over all B raw updates, each with flat O(k) reductions. Kept for
@@ -96,6 +105,65 @@ def sketch_residual_kernel(
         input_output_aliases={3: 0, 4: 1, 5: 2},  # state updated in place
         interpret=interpret,
     )(scalars, r_uids, r_net, ids, counts, errors)
+
+
+# ---------------------------------------------------------------------------
+# Banked residual kernel: every bank row's phase 2 in one launch
+# ---------------------------------------------------------------------------
+
+def _residual_kernel_banked(scalars_ref, uids_ref, nets_ref, ids_ref,
+                            counts_ref, errors_ref, ids_out, counts_out,
+                            errors_out, *, variant: int):
+    # scalars = (4, R) rows [uoff, start, n_ins, w_del]: each bank row's
+    # grouped-layout offset, non-unit eviction range and summed
+    # unmonitored deletion weight. The body is the engine's banked loop,
+    # shared verbatim (it closes over no arrays).
+    from repro.sketch.bank import residual_phase_banked
+
+    ids, counts, errors = residual_phase_banked(
+        ids_ref[...], counts_ref[...], errors_ref[...],
+        uids_ref[...], nets_ref[...],
+        scalars_ref[0], scalars_ref[1], scalars_ref[2], scalars_ref[3],
+        variant,
+    )
+    ids_out[...] = ids
+    counts_out[...] = counts
+    errors_out[...] = errors
+
+
+def sketch_residual_kernel_banked(
+    ids: jax.Array,      # (R, K) int32 bank, phases 1-1.75 applied,
+    counts: jax.Array,   #        K a multiple of LANES (padded inert)
+    errors: jax.Array,
+    h_uids: jax.Array,   # (G,) int32 flattened grouped residual layout
+    h_net: jax.Array,    # (G,) int32 net weights aligned with h_uids
+    uoff: jax.Array,     # (R,) int32 row offsets into the grouped layout
+    start: jax.Array,    # (R,) int32 first non-unit insert per row
+    n_ins: jax.Array,    # (R,) int32 end of the non-unit range per row
+    w_del: jax.Array,    # (R,) int32 summed unmonitored deletions per row
+    *,
+    variant: int = 2,
+    interpret: bool = True,
+):
+    assert ids.ndim == 2 and ids.shape[1] % LANES == 0, ids.shape
+    R, K = ids.shape
+    G = h_uids.shape[0]
+    out_shape = [jax.ShapeDtypeStruct((R, K), jnp.int32)] * 3
+    kern = functools.partial(_residual_kernel_banked, variant=variant)
+    state_spec = pl.BlockSpec((R, K), lambda: (0, 0))
+    upd_spec = pl.BlockSpec((G,), lambda: (0,))
+    scalar_spec = pl.BlockSpec((4, R), lambda: (0, 0))
+    scalars = jnp.stack([uoff.astype(jnp.int32), start.astype(jnp.int32),
+                         n_ins.astype(jnp.int32), w_del.astype(jnp.int32)])
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        in_specs=[scalar_spec, upd_spec, upd_spec,
+                  state_spec, state_spec, state_spec],
+        out_specs=[state_spec] * 3,
+        input_output_aliases={3: 0, 4: 1, 5: 2},  # state updated in place
+        interpret=interpret,
+    )(scalars, h_uids, h_net, ids, counts, errors)
 
 
 # ---------------------------------------------------------------------------

@@ -38,8 +38,12 @@ import jax.numpy as jnp
 
 from repro.sketch.blocks import _phase1
 from repro.sketch.phases import pad_rows
-from repro.sketch.state import SketchState
-from .kernel import sketch_residual_kernel, sketch_update_kernel_serial
+from repro.sketch.state import BLOCKED, LANES, SketchState, _INT_MAX
+from .kernel import (
+    sketch_residual_kernel,
+    sketch_residual_kernel_banked,
+    sketch_update_kernel_serial,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))
@@ -66,6 +70,49 @@ def sketch_block_update(
         counts=cnt2.reshape(-1)[:k],
         errors=err2.reshape(-1)[:k],
     )
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def sketch_block_update_banked(
+    bank: SketchState,
+    row_items: jax.Array,
+    row_weights: jax.Array,
+    variant: int = 2,
+    interpret: bool = True,
+) -> SketchState:
+    """Whole-bank two-phase update: ONE Pallas launch for all (R, k) rows.
+
+    The banked layout path shared by every bank-engine client (dyadic
+    layers, hash shards, shard × level rows): phase 1 is the engine's
+    dense batched pipeline (``repro.sketch.bank.phase1_dense`` — per-row
+    prefix-sum aggregation, vmapped monitored match, one batched
+    grouping sort, bulk fill + water-fill), and phase 2 is a single
+    ``sketch_residual_kernel_banked`` launch running every row's
+    eviction loop in lockstep via the engine's shared body. Bit-identical
+    to ``bank.update_rows`` (same phase 1, same residual body).
+
+    ``row_items``: (R, B) row-sorted views from a router's
+    ``route_dense``; ``row_weights`` may be (1, B) when rows share one
+    weight vector. Columns pad to a LANES multiple with inert BLOCKED
+    slots for the VMEM (R, K) tiling, then slice back.
+    """
+    from repro.sketch.bank import phase1_dense
+
+    R, k = bank.ids.shape
+    ids1, cnt1, err1, h_uids, h_net, uoff, mu, nnu, w_del = phase1_dense(
+        bank, row_items, row_weights, variant)
+    pad = (-k) % LANES
+    if pad:
+        ids1 = jnp.pad(ids1, ((0, 0), (0, pad)), constant_values=int(BLOCKED))
+        cnt1 = jnp.pad(cnt1, ((0, 0), (0, pad)),
+                       constant_values=int(_INT_MAX))
+        err1 = jnp.pad(err1, ((0, 0), (0, pad)))
+    ids2, cnt2, err2 = sketch_residual_kernel_banked(
+        ids1, cnt1, err1, h_uids, h_net, uoff, mu, mu + nnu, w_del,
+        variant=variant, interpret=interpret,
+    )
+    return SketchState(
+        ids=ids2[:, :k], counts=cnt2[:, :k], errors=err2[:, :k])
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))

@@ -74,10 +74,12 @@ def default_rules(
         # over the slot dim psums across "model"). With seq_shard (batch=1
         # long context) it additionally takes the data axis.
         "cache": ("model",) + tuple(dp) if seq_shard else "model",
-        # Hash-sharded sketch banks (repro.sketch.sharded): the shard dim
-        # rides the data axis — each DP slice owns S/|data| shards, block
-        # ingest is shard-local (zero cross-device traffic), cross-host
-        # reduction is the shard-wise mergeable-summaries merge.
+        # Hash-sharded sketch banks (repro.sketch.sharded and the
+        # shard × level dyadic bank in repro.sketch.dyadic_sharded): the
+        # shard dim rides the data axis — each DP slice owns S/|data|
+        # shards, block ingest is shard-local (zero cross-device
+        # traffic), cross-host reduction is the shard-/row-wise
+        # mergeable-summaries merge.
         "shards": dp,
     }
     param = {

@@ -1,30 +1,45 @@
 """JAX-native SpaceSaving± — the TPU-adapted implementation of the paper.
 
-Layered package (DESIGN.md §9):
+Layered package (DESIGN.md §9-§10):
 
   * ``state``   — the dense ids/counts/errors counter store, its
     constructors, queries, topk and the mergeable-summaries merge;
   * ``phases``  — the two-phase update's primitives (stable partition,
-    (R, LANES) row tournament, bulk empty fill, unit-weight water-fill,
-    residual phase) shared bit-identically with the Pallas kernel in
-    ``repro.kernels.sketch_update``;
+    segment nets, (R, LANES) row tournament, bulk empty fill,
+    unit-weight water-fill, residual phase) shared bit-identically with
+    the Pallas kernel in ``repro.kernels.sketch_update``;
   * ``blocks``  — apply_update / process_stream and the two-phase
     monitored-first block updates (vectorized monitored scatter + short
     residual tournament loop); ``block_update_serial`` keeps the old
     serial scan for A/B benchmarking;
+  * ``bank``    — the unified multi-row engine (DESIGN.md §10): one
+    stacked (R, k) bank with per-row capacity masks, pluggable routers
+    (hash shard / dyadic level / shard × level) and the fused
+    single-launch ingest cores every client below runs on;
   * ``dyadic``  — ``bits`` sketches stacked into one (bits, k) bank:
     Dyadic SpaceSaving±, the paper's deterministic bounded-deletion
-    quantile sketch, one batched launch per block (DESIGN.md §8);
+    quantile sketch, one fused engine launch per block (DESIGN.md §8);
   * ``sharded`` — a hash-partitioned bank of S per-shard sketches
-    (stacked (S, k) arrays): one routed ``block_update_batched`` launch
-    per block, vmap on CPU or shard_map over the mesh data axis, with
-    merge-error-free global queries (DESIGN.md §9);
+    (stacked (S, k) arrays) over the engine's partition core, vmap on
+    CPU or shard_map over the mesh data axis, with merge-error-free
+    global queries (DESIGN.md §9);
+  * ``dyadic_sharded`` — the composition: mesh-distributed Dyadic
+    SpaceSaving± (shard × level rows, owner-shard rank/quantile);
   * ``jax_sketch`` — backward-compat shim re-exporting every historical
     name from the layer modules.
 
 All ops are pure functions, jit/vmap/scan-compatible.
 """
-from . import blocks, dyadic, jax_sketch, phases, sharded, state
+from . import (
+    bank,
+    blocks,
+    dyadic,
+    dyadic_sharded,
+    jax_sketch,
+    phases,
+    sharded,
+    state,
+)
 from .blocks import (
     apply_update,
     block_partition_stats,
@@ -38,6 +53,7 @@ from .phases import (
     pad_rows,
     residual_phase,
     row_structures,
+    segment_nets,
     select_insert_slot,
     waterfill_unit_inserts,
 )
@@ -57,8 +73,10 @@ from .state import (
 )
 
 __all__ = [
+    "bank",
     "blocks",
     "dyadic",
+    "dyadic_sharded",
     "jax_sketch",
     "phases",
     "sharded",
@@ -78,6 +96,7 @@ __all__ = [
     "to_dict",
     # phases layer
     "pad_rows",
+    "segment_nets",
     "row_structures",
     "select_insert_slot",
     "fill_empty_slots",

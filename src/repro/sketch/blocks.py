@@ -59,6 +59,7 @@ from .phases import (
     fill_empty_slots,
     pad_rows,
     residual_phase,
+    segment_nets,
     waterfill_unit_inserts,
 )
 from .state import EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX
@@ -205,9 +206,8 @@ def _aggregate_block(items: jax.Array, weights: jax.Array,
     per-layer ``x >> l`` view stays sorted because right-shift is
     monotonic; the sharded router shares one sort the same way).
 
-    Per-unique sums are differences of the weight prefix-sum at segment
-    boundaries (next-head lookup via a reversed cummin) rather than
-    segment_sum scatters, which serialize on CPU.
+    Per-unique sums come from the shared ``phases.segment_nets`` prefix
+    trick (segment_sum scatters serialize on CPU).
     """
     B = items.shape[0]
     if assume_sorted:
@@ -218,14 +218,8 @@ def _aggregate_block(items: jax.Array, weights: jax.Array,
         s = items[order].astype(jnp.int32)
         w = weights[order].astype(jnp.int32)
     idx = jnp.arange(B, dtype=jnp.int32)
-    head = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    c = jnp.cumsum(w)
-    # next head at-or-after i via suffix-min; strictly-after = shift by one
-    nh = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(head, idx, B))))
-    nh_after = jnp.concatenate([nh[1:], jnp.full((1,), B, jnp.int32)])
-    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
-    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0)
-    net_h = c[seg_end] - prev  # segment sum, valid at head positions
+    head, net_h = segment_nets(s[None, :], w[None, :])
+    head, net_h = head[0], net_h[0]  # net valid at head positions
     perm = _stable_partition_perm(jnp.where(head, 0, 1))
     n_seg = head.sum()
     uids = jnp.where(idx < n_seg, s[perm], EMPTY)

@@ -19,10 +19,13 @@ per stream element; this module is the TPU adaptation:
 
 * **Update** — a block of (item, signed weight) pairs becomes the
   (bits, B) layer-item matrix via a single broadcast right-shift
-  (``items >> layer``); the whole dyadic update is then one
-  ``block_update_batched`` call (``path='block'``), one vmapped
-  two-phase launch over the bank — or one Pallas residual-kernel launch
-  per layer (``path='kernel'``). |F|₁ is tracked exactly as a scalar.
+  (``items >> layer``, the engine's ``bank.DyadicLevelRouter``); the
+  whole dyadic update is then ONE fused bank-engine launch
+  (``path='bank'``, the default — batched dense phase 1 + the lockstep
+  banked residual loop, DESIGN.md §10), with the pre-engine vmapped
+  ``block_update_batched`` path kept as ``path='block'`` for A/B and
+  the banked Pallas residual kernel as ``path='kernel'`` — all
+  bit-identical. |F|₁ is tracked exactly as a scalar.
 
 * **Query** — ``rank(x)`` sums ≤ bits dyadic node frequencies: the node
   of layer l is included iff bit l of y = x+1 is set, and its index is
@@ -51,17 +54,9 @@ import jax.numpy as jnp
 
 from repro.core.quantiles import dyadic_layer_capacities
 
+from . import bank as bk
 from .blocks import block_update_batched, block_update_serial
-from .phases import _stable_partition_perm
-from .state import (
-    BLOCKED,
-    EMPTY,
-    VARIANT_LAZY,
-    VARIANT_SSPM,
-    SketchState,
-    _INT_MAX,
-    query_many,
-)
+from .state import VARIANT_SSPM, SketchState, query_many
 
 
 class DyadicState(NamedTuple):
@@ -96,24 +91,12 @@ def init(
     caps = dyadic_layer_capacities(
         bits, total_counters=total_counters, eps=eps, alpha=alpha
     )
-    k = max(caps)
-    lane = np.arange(k)[None, :]
-    real = lane < np.asarray(caps)[:, None]  # (bits, k) live-slot mask
-    return DyadicState(
-        bank=SketchState(
-            ids=jnp.asarray(np.where(real, int(EMPTY), int(BLOCKED)),
-                            jnp.int32),
-            counts=jnp.asarray(np.where(real, 0, int(_INT_MAX)), jnp.int32),
-            errors=jnp.zeros((bits, k), jnp.int32),
-        ),
-        mass=jnp.int32(0),
-    )
+    return DyadicState(bank=bk.init(caps), mass=jnp.int32(0))
 
 
 def layer_capacities(state: DyadicState) -> list:
     """Live (non-BLOCKED) counters per layer — mirrors the oracle sizing."""
-    ids = jax.device_get(state.bank.ids)
-    return [int(c) for c in np.asarray(ids != int(BLOCKED)).sum(1)]
+    return bk.row_capacities(state.bank)
 
 
 def space_counters(state: DyadicState) -> int:
@@ -137,42 +120,48 @@ def update_block(
     items: jax.Array,
     weights: jax.Array,
     variant: int = VARIANT_SSPM,
-    path: str = "block",
+    path: str = "bank",
     interpret: bool = True,
 ) -> DyadicState:
     """Apply a block of signed weighted updates to every layer at once.
 
-    path: 'block'  — vmapped pure-JAX two-phase update (production XLA path)
-          'kernel' — Pallas residual kernel per layer (bit-identical, the
-                     two paths share phase 1 and the residual body)
+    path: 'bank'   — fused bank-engine ingest (production path): batched
+                     dense phase 1 + the lockstep banked residual loop,
+                     no per-layer vmap of scatter ops
+                     (``repro.sketch.bank``)
+          'block'  — vmapped pure-JAX two-phase update (pre-engine path,
+                     kept for A/B; bit-identical to 'bank')
+          'kernel' — Pallas banked residual kernel, ONE launch for the
+                     whole bank (bit-identical: shares phase 1 and the
+                     banked residual body with 'bank')
           'serial' — vmapped pre-two-phase serial scan (A/B baseline)
     """
     items = items.astype(jnp.int32)
     weights = weights.astype(jnp.int32)
     bits = state.bank.ids.shape[0]
-    B = items.shape[0]
-    # ONE sort covers the whole bank: right-shift is monotonic, so the
-    # sorted block stays sorted in every layer view — each layer's
-    # aggregation skips its own O(B log B) sort (assume_sorted below).
-    # Items live in [0, 2^bits), so the packed-key single-sort trick
-    # (phases._stable_partition_perm with the item as the "class")
-    # replaces the argsort whenever item*B fits int32.
-    if bits + (B - 1).bit_length() <= 31:
-        order = _stable_partition_perm(items)
-    else:
-        order = jnp.argsort(items)
-    items_l = layer_items(items[order], bits)
-    weights_l = jnp.broadcast_to(weights[order][None, :], items_l.shape)
+    # ONE sort covers the whole bank (bank.DyadicLevelRouter): right-shift
+    # is monotonic, so the sorted block stays sorted in every layer view —
+    # each layer's aggregation skips its own O(B log B) sort. Items live
+    # in [0, 2^bits), so the packed-key single-sort trick replaces the
+    # argsort whenever item*B fits int32 (bank.sort_block).
+    router = bk.DyadicLevelRouter(bits)
+    items_l, weights_l = router.route_dense(items, weights)
+    if path == "bank":
+        bank = bk.update_rows(state.bank, items_l, weights_l, variant)
+        return DyadicState(bank=bank, mass=state.mass + weights.sum())
+    if path == "kernel":
+        # the banked kernel shares phase1_dense: (1, B) weights pass
+        # through, prefix-summed once like the 'bank' path
+        from repro.kernels.sketch_update.ops import sketch_block_update_banked
+
+        bank = sketch_block_update_banked(
+            state.bank, items_l, weights_l, variant, interpret)
+        return DyadicState(bank=bank, mass=state.mass + weights.sum())
+    # pre-engine paths vmap per layer: materialize the shared weight row
+    weights_l = jnp.broadcast_to(weights_l, items_l.shape)
     if path == "block":
         bank = block_update_batched(
             state.bank, items_l, weights_l, variant, assume_sorted=True)
-    elif path == "kernel":
-        from repro.kernels.sketch_update.ops import sketch_block_update_batched
-
-        bank = sketch_block_update_batched(
-            state.bank, items_l, weights_l, variant, interpret,
-            assume_sorted=True,
-        )
     elif path == "serial":
         bank = jax.vmap(
             lambda s, i, w: block_update_serial(s, i, w, variant)
@@ -182,15 +171,9 @@ def update_block(
     return DyadicState(bank=bank, mass=state.mass + weights.sum())
 
 
-def process_stream(
-    state: DyadicState,
-    items: np.ndarray,
-    weights: np.ndarray,
-    variant: int = VARIANT_SSPM,
-    block: int = 1024,
-    path: str = "block",
-) -> DyadicState:
-    """Host-side convenience: feed a whole stream in fixed-size blocks.
+def feed_blocks(update_fn, state, items: np.ndarray, weights: np.ndarray,
+                block: int):
+    """Pad-and-chunk host driver shared by both dyadic banks.
 
     The last block is zero-weight padded so every call traces the same
     (bits, block) shapes — one compilation per (bits, k, block, variant).
@@ -204,14 +187,26 @@ def process_stream(
     pi[:n] = items
     pw[:n] = weights
     for b in range(nb):
-        state = update_block(
+        state = update_fn(
             state,
             jnp.asarray(pi[b * block:(b + 1) * block]),
             jnp.asarray(pw[b * block:(b + 1) * block]),
-            variant,
-            path,
         )
     return state
+
+
+def process_stream(
+    state: DyadicState,
+    items: np.ndarray,
+    weights: np.ndarray,
+    variant: int = VARIANT_SSPM,
+    block: int = 1024,
+    path: str = "bank",
+) -> DyadicState:
+    """Host-side convenience: feed a whole stream in fixed-size blocks."""
+    return feed_blocks(
+        lambda st, i, w: update_block(st, i, w, variant, path),
+        state, items, weights, block)
 
 
 # ---------------------------------------------------------------------------
@@ -245,18 +240,19 @@ def rank(state: DyadicState, x) -> int:
     return int(rank_many(state, jnp.asarray([x], jnp.int32))[0])
 
 
-@jax.jit
-def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
+def lockstep_quantile_search(rank_fn, mass, bits: int,
+                             qs: jax.Array) -> jax.Array:
     """Smallest x with rank(x) >= q·|F|₁, per query — lockstep binary
     search over the universe (bits+1 rounds; converged lanes freeze).
+    Shared by the single-host and sharded dyadic banks (``rank_fn`` is
+    the bank's batched rank query).
 
     The rank target is formed in float32 (x64 is off in this stack): for
     |F|₁ beyond 2^24 the q·mass product can round by a few ranks, so a
     returned quantile may sit a handful of ranks off the oracle's at
     extreme masses — far inside the ε·|F|₁ guarantee, but not bit-equal.
     """
-    bits = state.bank.ids.shape[0]
-    target = qs.astype(jnp.float32) * state.mass.astype(jnp.float32)
+    target = qs.astype(jnp.float32) * mass.astype(jnp.float32)
     lo = jnp.zeros(qs.shape, jnp.int32)
     hi = jnp.full(qs.shape, (1 << bits) - 1, jnp.int32)
 
@@ -264,7 +260,7 @@ def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
         lo, hi = lh
         active = lo < hi
         mid = (lo + hi) // 2
-        pred = rank_many(state, mid).astype(jnp.float32) >= target
+        pred = rank_fn(mid).astype(jnp.float32) >= target
         return (
             jnp.where(active & ~pred, mid + 1, lo),
             jnp.where(active & pred, mid, hi),
@@ -272,6 +268,15 @@ def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
 
     lo, _ = jax.lax.fori_loop(0, bits + 1, body, (lo, hi))
     return lo
+
+
+@jax.jit
+def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
+    """Per-query quantiles via ``lockstep_quantile_search`` (see its
+    float32 rank-target caveat)."""
+    return lockstep_quantile_search(
+        lambda xs: rank_many(state, xs), state.mass,
+        state.bank.ids.shape[0], qs)
 
 
 def quantile(state: DyadicState, q: float) -> int:

@@ -42,6 +42,7 @@ from .phases import (
     pad_rows,
     residual_phase,
     row_structures,
+    segment_nets,
     select_insert_slot,
     waterfill_unit_inserts,
 )
@@ -77,6 +78,7 @@ __all__ = [
     "to_dict",
     # phases layer
     "pad_rows",
+    "segment_nets",
     "row_structures",
     "select_insert_slot",
     "fill_empty_slots",

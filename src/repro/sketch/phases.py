@@ -6,6 +6,9 @@ building blocks with no knowledge of whole-block orchestration —
   * ``_stable_partition_perm``  packed-key single-sort stable partition
     (the CPU-XLA-friendly replacement for argsort/segment scatters, also
     reused by the dyadic bank's shared sort and the sharded router);
+  * ``segment_nets``  per-segment net weights of row-sorted (R, B)
+    matrices via prefix sums (the aggregation core shared by
+    ``blocks._aggregate_block`` and the bank engine's fused phase 1);
   * ``pad_rows`` / ``row_structures`` / ``_pick_slot`` /
     ``select_insert_slot``  the (R, LANES) row-tournament view and the
     replacement-slot reduction (shared with serve/h2o eviction);
@@ -39,6 +42,42 @@ def _stable_partition_perm(klass: jax.Array) -> jax.Array:
     B = klass.shape[0]
     idx = jnp.arange(B, dtype=jnp.int32)
     return jnp.sort(klass.astype(jnp.int32) * B + idx) % B
+
+
+def segment_nets(s_items: jax.Array, s_weights: jax.Array):
+    """Per-segment net weights of row-sorted (R, B) item/weight matrices.
+
+    Each row must be ascending in item id. Returns ``(head, net)``, both
+    (R, B): ``head`` marks the first entry of every equal-item segment
+    and ``net`` carries the segment's summed weight at head positions
+    (undefined elsewhere). Segment sums are differences of the per-row
+    weight prefix-sum at segment boundaries (next-head lookup via a
+    reversed cummin) rather than segment_sum scatters, which serialize
+    on CPU XLA. ``s_weights`` may be (1, B) when every row shares one
+    weight vector (the dyadic router broadcasts the sorted block): the
+    prefix sum is then computed once and broadcast, not R times. Shared
+    by the single-sketch aggregation (``blocks._aggregate_block``), the
+    bank engine's dense multi-row phase 1, and the sharded partition
+    phase 1 (``repro.sketch.bank``).
+    """
+    R, B = s_items.shape
+    idx = jnp.arange(B, dtype=jnp.int32)
+    head = jnp.concatenate(
+        [jnp.ones((R, 1), bool), s_items[:, 1:] != s_items[:, :-1]], axis=1)
+    c = jnp.cumsum(s_weights, axis=1)
+    # next head at-or-after i via suffix-min (reverse cummin — no flips);
+    # strictly-after = shift by one; c[head-1] = c[head] - w[head].
+    nh = jax.lax.cummin(jnp.where(head, idx[None, :], B), axis=1,
+                        reverse=True)
+    nh_after = jnp.concatenate(
+        [nh[:, 1:], jnp.full((R, 1), B, jnp.int32)], axis=1)
+    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
+    if c.shape[0] == 1 and R > 1:
+        # shared-weights fast path: one (B,) prefix sum, gathered per row
+        net = c[0][seg_end] - c + s_weights
+    else:
+        net = jnp.take_along_axis(c, seg_end, axis=1) - c + s_weights
+    return head, net
 
 
 def pad_rows(ids: jax.Array, counts: jax.Array, errors: jax.Array):
@@ -280,6 +319,7 @@ def residual_phase(ids2, cnt2, err2, r_uids, r_net, start, n_ins, w_del,
 
 __all__ = [
     "_stable_partition_perm",
+    "segment_nets",
     "pad_rows",
     "row_structures",
     "select_insert_slot",

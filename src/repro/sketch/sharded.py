@@ -1,10 +1,13 @@
 """Hash-sharded SpaceSaving± bank: S per-shard sketches, one launch/block.
 
-The paper's summaries are mergeable (the SpaceSaving± Family follow-up
-proves merged summaries keep the bounded-deletion guarantee), but merging
-is the *fallback* here, not the query path: every item id is owned by
-exactly one shard of a hash partition, so the bank is a sharded-by-key
-frequency store —
+Thin client of the unified bank engine (``repro.sketch.bank``,
+DESIGN.md §10): the shard dim maps to the engine's row axis through a
+``HashShardRouter`` and the fused ingest/queries/merge below delegate to
+the engine's partition core. The paper's summaries are mergeable (the
+SpaceSaving± Family follow-up proves merged summaries keep the
+bounded-deletion guarantee), but merging is the *fallback* here, not the
+query path: every item id is owned by exactly one shard of a hash
+partition, so the bank is a sharded-by-key frequency store —
 
   * **State** — one stacked :class:`SketchState` of shape (S, k): shard s
     monitors only items with ``shard_of(x, S) == s``. At equal total
@@ -57,14 +60,11 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import bank as bk
 from . import state as st
+from .bank import HashShardRouter, shard_of  # noqa: F401  (re-exported API)
 from .blocks import block_update, block_update_batched
-from .phases import (
-    _stable_partition_perm,
-    fill_empty_slots,
-    waterfill_unit_inserts,
-)
-from .state import EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX
+from .state import VARIANT_SSPM, SketchState
 
 
 class ShardedSketch(NamedTuple):
@@ -91,29 +91,7 @@ def init(total_capacity: int, num_shards: int) -> ShardedSketch:
     """
     assert num_shards >= 1
     k = -(-total_capacity // num_shards)
-    return ShardedSketch(
-        bank=SketchState(
-            ids=jnp.full((num_shards, k), EMPTY, jnp.int32),
-            counts=jnp.zeros((num_shards, k), jnp.int32),
-            errors=jnp.zeros((num_shards, k), jnp.int32),
-        )
-    )
-
-
-def shard_of(items: jax.Array, num_shards: int) -> jax.Array:
-    """Owner shard of each item id: lowbias32 avalanche hash mod S.
-
-    A multiplicative-xorshift finalizer (not ``id % S``) so that
-    structured id spaces — strided token ids, dyadic prefixes, expert
-    indices — still spread uniformly. Pure function of (id, S): any
-    host, device or restart routes a uid identically (the routing
-    invariant tests/test_sharded.py pins).
-    """
-    x = items.astype(jnp.uint32)
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return (x % jnp.uint32(num_shards)).astype(jnp.int32)
+    return ShardedSketch(bank=bk.init(k, num_shards))
 
 
 def route_block(
@@ -124,30 +102,17 @@ def route_block(
 ) -> Tuple[jax.Array, jax.Array]:
     """One-sort hash routing: (B,) block -> (S, B) per-shard views.
 
-    Sorts the block ONCE (packed-key partition when ``universe_bits``
-    proves item*B fits int32 — the same trick the dyadic bank uses —
-    else argsort), then materializes shard s's view as the shared sorted
-    id row with foreign weights masked to 0. Every row stays ascending,
-    so downstream aggregation runs ``assume_sorted`` with no per-shard
-    sort, and each row aggregates to exactly the shard's own (uid, net)
-    multiset: zero-net foreign uniques are dropped by the partition's
-    validity mask, preserving bit-identity with independently built
-    shards.
+    Thin front-end over ``bank.HashShardRouter.route_dense``: sorts the
+    block ONCE (packed-key partition when ``universe_bits`` proves
+    item*B fits int32, else argsort), then materializes shard s's view
+    as the shared sorted id row with foreign weights masked to 0. Every
+    row stays ascending, so downstream aggregation runs
+    ``assume_sorted`` with no per-shard sort, and each row aggregates to
+    exactly the shard's own (uid, net) multiset, preserving bit-identity
+    with independently built shards.
     """
-    items = items.astype(jnp.int32)
-    weights = weights.astype(jnp.int32)
-    B = items.shape[0]
-    order = _sort_block(items, universe_bits)
-    s_items = items[order]
-    s_w = weights[order]
-    owner = shard_of(s_items, num_shards)
-    w_routed = jnp.where(
-        owner[None, :] == jnp.arange(num_shards, dtype=jnp.int32)[:, None],
-        s_w[None, :],
-        0,
-    )
-    items_b = jnp.broadcast_to(s_items[None, :], (num_shards, B))
-    return items_b, w_routed
+    return HashShardRouter(num_shards, universe_bits).route_dense(
+        items, weights)
 
 
 def _axis_sizes(mesh, axes) -> int:
@@ -177,93 +142,6 @@ def _shard_mesh_axes(num_shards: int, min_size: int = 2):
     return axes
 
 
-def _residual_phase_banked(ids2, cnt2, err2, h_uids, h_net, uoff, start,
-                           n_ins, w_del, variant: int):
-    """Bank-wide phase 2: all shards' eviction loops in lockstep.
-
-    Semantically ``vmap(phases.residual_phase)`` — the while loops run
-    until every shard lane finishes, ≈ max_s(U_s) trips — but the body
-    avoids the batched scatter/gather ops vmap generates (CPU XLA lowers
-    those to per-element loops that cost ~4x a plain trip, cancelling
-    the 1/S trip reduction). The store stays FLAT (S, k): a flat argmin
-    over a shard's k slots traverses the same elements as the
-    (R, LANES) tournament's reductions, so with every shard reduced at
-    once there is nothing for the two-level view to save. The body also
-    drops the empty-slot branch of ``phases._pick_slot`` outright: a
-    shard lane is only active while it still has non-unit residual
-    inserts, which (phase 1.5) implies the bulk fill consumed every
-    empty slot — pure min-count evictions, the same case analysis the
-    single-sketch loop resolves dynamically. Inserts are read straight
-    from the one global grouped layout at per-shard offsets; the
-    touched slot updates through a one-hot where-mask and finished
-    lanes freeze via an ``active`` mask (the select semantics jax gives
-    a batched while_loop). Tie-breaking matches flat argmin/argmax
-    (lowest slot index), so results are bit-identical to the per-shard
-    loop.
-    """
-    S, k = ids2.shape
-    G = h_uids.shape[0]
-    lane = jnp.arange(k, dtype=jnp.int32)[None, :]
-
-    def ins_cond(carry):
-        return (carry[0] < n_ins).any()
-
-    def ins_step(carry):
-        i, ids2, cnt2, err2 = carry
-        active = i < n_ins
-        g = jnp.clip(uoff + i, 0, G - 1)
-        uid = h_uids[g]
-        w = h_net[g]
-        mc = cnt2.min(axis=1)
-        sel = jnp.argmin(cnt2, axis=1)
-        hot = (lane == sel[:, None]) & active[:, None]
-        return (
-            i + active.astype(jnp.int32),
-            jnp.where(hot, uid[:, None], ids2),
-            jnp.where(hot, (mc + w)[:, None], cnt2),
-            jnp.where(hot, mc[:, None], err2),
-        )
-
-    _, ids2, cnt2, err2 = jax.lax.while_loop(
-        ins_cond, ins_step, (start.astype(jnp.int32), ids2, cnt2, err2))
-
-    if variant != VARIANT_LAZY:
-        def sp_cond(carry):
-            rem, _, err2 = carry
-            return ((rem > 0) & (err2.max(axis=1) > 0)).any()
-
-        def sp_step(carry):
-            rem, cnt2, err2 = carry
-            sel = jnp.argmax(err2, axis=1)
-            maxe = jnp.take_along_axis(err2, sel[:, None], axis=1)[:, 0]
-            active = (rem > 0) & (maxe > 0)
-            d = jnp.where(active, jnp.minimum(rem, maxe), 0)
-            hot = (lane == sel[:, None]) & active[:, None]
-            d2 = d[:, None]
-            return (
-                rem - d,
-                jnp.where(hot, cnt2 - d2, cnt2),
-                jnp.where(hot, err2 - d2, err2),
-            )
-
-        _, cnt2, err2 = jax.lax.while_loop(
-            sp_cond, sp_step, (w_del.astype(jnp.int32), cnt2, err2))
-    return ids2, cnt2, err2
-
-
-def _sort_block(items: jax.Array, universe_bits: Optional[int]) -> jax.Array:
-    """Shared ascending-id sort permutation for the whole bank.
-
-    Packed-key single sort when the static universe bound proves
-    ``item * B`` fits int32 (argsort lowers ~4x slower on CPU XLA), else
-    one argsort — either way the ONLY B log B sort paid per block.
-    """
-    B = items.shape[0]
-    if universe_bits is not None and universe_bits + (B - 1).bit_length() <= 31:
-        return _stable_partition_perm(items)
-    return jnp.argsort(items)
-
-
 @functools.partial(jax.jit, static_argnames=("variant", "universe_bits"))
 def _update_block_fused(
     state: ShardedSketch,
@@ -272,133 +150,22 @@ def _update_block_fused(
     variant: int,
     universe_bits: Optional[int],
 ) -> ShardedSketch:
-    """Fused single-launch ingest: global phase 1, per-shard phase 2.
+    """Fused single-launch ingest via the bank engine's partition core.
 
-    The single-sketch two-phase pipeline (blocks._phase1) run once on
-    global arrays with shard-aware grouping, so the B-wide sorts and the
-    monitored matching are paid once — not once per shard:
-
-      1. one shared sort; one global aggregation to (uids, net);
-      2. monitored matching for ALL shards with one searchsorted of the
-         stacked (S, k) ids into the global uniques (same total work as
-         the single sketch: an id matches only in its owner shard);
-      3. ONE packed-key partition groups residual inserts into every
-         shard's [units | non-units | consumed-by-fill] layout at once
-         (the layout blocks._phase1 builds per sketch, back to back —
-         the consumed prefix is known up front from in-shard ranks);
-      4. per-shard slices of that one global array feed batched
-         fill_empty_slots / waterfill_unit_inserts and the flat banked
-         residual loop on the (S, k) bank, whose trip count is
-         max_s(non-unit_s) ≈ U/S instead of U.
-
-    Per-shard results are bit-identical to blocks.block_update on the
-    shard's own substream (each step sees exactly the shard's aggregated
-    multiset in the same order) — pinned against
-    ``update_block_serial_reference`` by tests and BENCH_sharded.json.
+    ``bank._fused_partition``: global phase 1 (one shared sort, one
+    in-place segment aggregation, one searchsorted monitored match for
+    all shards, ONE packed-key grouping sort building every shard's
+    [units | non-units | consumed] layout), then the batched O(k)
+    phases and the flat banked residual loop whose trip count is
+    max_s(non-unit_s) ≈ U/S instead of U. Per-shard results are
+    bit-identical to blocks.block_update on the shard's own substream —
+    pinned against ``update_block_serial_reference`` by tests and
+    BENCH_sharded.json.
     """
-    S = state.num_shards
-    k = state.capacity
-    bank = state.bank
-    items = items.astype(jnp.int32)
-    weights = weights.astype(jnp.int32)
-    B = items.shape[0]
-    if (3 * S + 1) * B >= 2**31:
-        # the shard-grouping packed key is klass * B + idx with 3S + 1
-        # classes — the one partition call whose key range grows with S
-        raise ValueError(
-            f"fused sharded update needs (3*shards+1)*block < 2^31 for the "
-            f"packed grouping sort; got shards={S}, block={B}. Use "
-            f"path='vmap' (or fewer shards per launch).")
-
-    # -- 1. shared sort + in-place segment aggregation ---------------------
-    # Same prefix-sum aggregation as blocks._aggregate_block but WITHOUT
-    # its head-compaction sort: the fused path matches and groups
-    # directly against the raw sorted block (a segment's head position
-    # stands in for the compacted unique), so the one grouping sort in
-    # step 3 does all the compaction this path ever needs.
-    order = _sort_block(items, universe_bits)
-    uids = items[order]      # sorted; segment heads carry the uniques
-    wts = weights[order]
-    idx = jnp.arange(B, dtype=jnp.int32)
-    head = jnp.concatenate([jnp.ones((1,), bool), uids[1:] != uids[:-1]])
-    c = jnp.cumsum(wts)
-    nh = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(head, idx, B))))
-    nh_after = jnp.concatenate([nh[1:], jnp.full((1,), B, jnp.int32)])
-    seg_end = jnp.clip(nh_after - 1, 0, B - 1)
-    prev = jnp.where(idx > 0, c[jnp.maximum(idx - 1, 0)], 0)
-    net = c[seg_end] - prev  # per-unique net, valid at head positions
-    valid = head & (uids >= 0) & (net != 0)
-    owner = shard_of(uids, S)  # read at head positions only
-
-    # -- 2. monitored matching, all shards at once -------------------------
-    # searchsorted returns the FIRST occurrence = the segment head; the
-    # (flat_ids >= 0) guard keeps EMPTY slots from matching -1 padding
-    # items (the compacted path got this from its sentinel remap).
-    flat_ids = bank.ids.reshape(-1)
-    pos = jnp.clip(jnp.searchsorted(uids, flat_ids), 0, B - 1)
-    match = (uids[pos] == flat_ids) & (flat_ids >= 0)
-    counts1 = bank.counts + jnp.where(match, net[pos], 0).reshape(S, k)
-    monitored = (
-        jnp.zeros((B,), bool)
-        .at[jnp.where(match, pos, B)]
-        .set(True, mode="drop")
-    )
-
-    # -- 3. residual classification + ONE shard-major grouping sort --------
-    # blocks._phase1 builds the [units | non-units | consumed] layout per
-    # sketch with a second partition AFTER the empty fill; here the
-    # consumed prefix ("the leading i0_s inserts the bulk empty fill
-    # places") is known up front from each entry's rank within its shard
-    # — an (S, B) one-hot cumsum — so one packed sort builds all S
-    # layouts back to back. Per-shard tallies come from the same (S, B)
-    # masks (no segment_sum: CPU XLA serializes B-wide scatter-adds).
-    owner_c = jnp.clip(owner, 0, S - 1)
-    res_ins = valid & ~monitored & (net > 0)
-    shard_rows = jnp.arange(S, dtype=jnp.int32)[:, None]
-    owner_mat = owner[None, :] == shard_rows                      # (S, B)
-    ins_mat = owner_mat & res_ins[None, :]
-    rank_mat = jnp.cumsum(ins_mat, axis=1)                        # inclusive
-    n_ins_s = rank_mat[:, -1]
-    rank = jnp.take_along_axis(rank_mat, owner_c[None, :], axis=0)[0] - 1
-    empties_s = (bank.ids == EMPTY).sum(axis=1)
-    i0_s = jnp.minimum(n_ins_s, empties_s)
-    consumed = res_ins & (rank < i0_s[owner_c])
-    unit = res_ins & ~consumed & (net == 1)
-    nonunit = res_ins & ~consumed & (net != 1)
-    if variant == VARIANT_LAZY:
-        w_del_s = jnp.zeros((S,), jnp.int32)
-    else:
-        res_del = valid & ~monitored & (net < 0)
-        w_del_s = jnp.where(owner_mat & res_del[None, :],
-                            -net[None, :], 0).sum(axis=1)
-    klass = jnp.where(
-        res_ins,
-        owner_c * 3 + jnp.where(unit, 0, jnp.where(nonunit, 1, 2)),
-        3 * S,
-    )
-    perm = _stable_partition_perm(klass)
-    h_uids = uids[perm]
-    h_net = net[perm]
-    mu_s = (owner_mat & unit[None, :]).sum(axis=1)
-    nnu_s = (owner_mat & nonunit[None, :]).sum(axis=1)
-    cc = jnp.stack([mu_s, nnu_s, i0_s], axis=1).reshape(-1)       # (3S,)
-    class_off = jnp.cumsum(cc) - cc
-    uoff_s = class_off[0::3]   # start of shard s's [units | non-units] run
-    coff_s = class_off[2::3]   # start of shard s's consumed (fill) run
-
-    # -- 4. batched O(k) phases + flat banked residual loop ----------------
-    # All three consumers read the ONE global grouped layout at
-    # per-shard offsets — no per-shard (S, B) slices materialize.
-    ids1, cnt1, err1, _ = jax.vmap(
-        fill_empty_slots, in_axes=(0, 0, 0, None, None, 0, 0))(
-        bank.ids, counts1, bank.errors, h_uids, h_net, i0_s, coff_s)
-    ids1, cnt1, err1 = jax.vmap(
-        waterfill_unit_inserts, in_axes=(0, 0, 0, None, 0, 0))(
-        ids1, cnt1, err1, h_uids, mu_s, uoff_s)
-    ids1, cnt1, err1 = _residual_phase_banked(
-        ids1, cnt1, err1, h_uids, h_net, uoff_s, mu_s, mu_s + nnu_s,
-        w_del_s, variant)
-    return ShardedSketch(bank=SketchState(ids1, cnt1, err1))
+    router = HashShardRouter(state.num_shards, universe_bits)
+    return ShardedSketch(
+        bank=bk.update_block_fused(state.bank, items, weights, router,
+                                   variant))
 
 
 @functools.partial(
@@ -417,11 +184,10 @@ def _update_block_routed(
     S = state.num_shards
     items_b, w_routed = route_block(items, weights, S, universe_bits)
     if path == "kernel":
-        from repro.kernels.sketch_update.ops import sketch_block_update_batched
+        from repro.kernels.sketch_update.ops import sketch_block_update_banked
 
-        bank = sketch_block_update_batched(
-            state.bank, items_b, w_routed, variant, interpret,
-            assume_sorted=True)
+        bank = sketch_block_update_banked(
+            state.bank, items_b, w_routed, variant, interpret)
     else:
         bank = block_update_batched(
             state.bank, items_b, w_routed, variant, assume_sorted=True)
@@ -570,10 +336,7 @@ def topk(state: ShardedSketch, m: int) -> Tuple[jax.Array, jax.Array]:
     Exact given the per-shard states (every candidate heavy hitter is
     monitored by its owner shard with its full estimated count).
     """
-    ids = state.bank.ids.reshape(-1)
-    counts = jnp.where(ids < 0, jnp.int32(-2**31), state.bank.counts.reshape(-1))
-    vals, idx = jax.lax.top_k(counts, m)
-    return ids[idx], vals
+    return bk.topk_bank(state.bank, m)
 
 
 # ---------------------------------------------------------------------------
@@ -588,27 +351,19 @@ def merge(a: ShardedSketch, b: ShardedSketch) -> ShardedSketch:
     bank only ever monitored ids owned by s, so the pairing is exact and
     the merged bank keeps the shard-ownership invariant.
     """
-    return ShardedSketch(bank=jax.vmap(st.merge)(a.bank, b.bank))
+    return ShardedSketch(bank=bk.merge_banks(a.bank, b.bank))
 
 
 def consolidate(state: ShardedSketch) -> SketchState:
     """Fold all shards into ONE k-counter summary (checkpoint compaction).
 
-    A tree of ``state.merge`` reduces (S, k) -> (k,): the compact global
-    view for checkpoints/telemetry, carrying the standard merged-summary
-    error bounds (unlike queries on the live bank, which are
-    merge-error-free). Not an inverse of sharding — S·k counters collapse
-    to k.
+    A tree of ``state.merge`` reduces (S, k) -> (k,) (``bank.
+    consolidate``): the compact global view for checkpoints/telemetry,
+    carrying the standard merged-summary error bounds (unlike queries on
+    the live bank, which are merge-error-free). Not an inverse of
+    sharding — S·k counters collapse to k.
     """
-    shards = [jax.tree.map(lambda x: x[s], state.bank)
-              for s in range(state.num_shards)]
-    while len(shards) > 1:
-        nxt = [st.merge(shards[i], shards[i + 1])
-               for i in range(0, len(shards) - 1, 2)]
-        if len(shards) % 2:
-            nxt.append(shards[-1])
-        shards = nxt
-    return shards[0]
+    return bk.consolidate(state.bank)
 
 
 def to_dict(state: ShardedSketch) -> dict:

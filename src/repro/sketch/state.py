@@ -78,6 +78,13 @@ def merge(a: SketchState, b: SketchState) -> SketchState:
     Items in both: counts/errors add. Items in one: the other sketch bounds
     the unseen frequency by its minCount (only if it is full). Keep top-k.
     Used for cross-host reduction of data-parallel sketches.
+
+    BLOCKED capacity-padding slots are inert: they count as occupied for
+    the is-full test (their INT_MAX counts never win the minCount), take
+    no cross term, and never surface in the merged top-k — so rows of a
+    capacity-masked bank (dyadic layers, ``bank.init`` with per-row
+    caps) merge correctly. The merged summary itself has no BLOCKED
+    slots (its capacity is the full k).
     """
     k = a.ids.shape[0]
 
@@ -92,7 +99,7 @@ def merge(a: SketchState, b: SketchState) -> SketchState:
     counts = jnp.concatenate([a.counts, b.counts])
     errors = jnp.concatenate([a.errors, b.errors])
     cross = jnp.concatenate([jnp.full((k,), m_b), jnp.full((k,), m_a)])
-    cross = jnp.where(ids == EMPTY, 0, cross).astype(jnp.int32)
+    cross = jnp.where(ids < 0, 0, cross).astype(jnp.int32)
 
     # combine duplicates: sort by id; adjacent-equal pairs fold together.
     order = jnp.argsort(ids)
@@ -112,7 +119,7 @@ def merge(a: SketchState, b: SketchState) -> SketchState:
     cnt_m = cnt_m - had_dup * (m_a + m_b)
     err_m = err_m - had_dup * (m_a + m_b)
     n_seg = (~dup_prev).sum()
-    valid = (jnp.arange(n) < n_seg) & (id_m != EMPTY)
+    valid = (jnp.arange(n) < n_seg) & (id_m >= 0)
     # top-k by merged count
     key = jnp.where(valid, cnt_m, jnp.int32(-2**31))
     _, idx = jax.lax.top_k(key, k)

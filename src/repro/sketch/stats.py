@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sketch import blocks as bl, sharded as shd, state as st
+from repro.sketch import bank as bk, sharded as shd, state as st
 
 
 def _aggregate_np(tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -58,9 +58,13 @@ class _SketchBank:
     """Single-sketch vs hash-sharded backend behind one tiny facade.
 
     Keeps TokenStats/ExpertLoadStats free of per-call branching: both
-    talk to ``update/topk/query_many/merge_from/state_dict`` and the
-    backend routes to ``repro.sketch.blocks`` (shards=None) or
-    ``repro.sketch.sharded`` (shards=S, same total budget).
+    talk to ``update/topk/query_many/merge_from/state_dict``. Either
+    mode now ingests through the SAME unified bank engine
+    (``repro.sketch.bank``): shards=None runs the fused core on a
+    one-row view of the flat (k,) sketch (``bank.update_single``,
+    bit-identical to ``blocks.block_update``), shards=S routes through
+    the hash-sharded client (``repro.sketch.sharded``) at the same
+    total budget — one hot path to optimize, two layouts.
     """
 
     def __init__(self, capacity: int, variant: int,
@@ -83,8 +87,8 @@ class _SketchBank:
                 self.sharded, items, weights, self.variant,
                 universe_bits=self.universe_bits)
         else:
-            self.state = bl.block_update(self.state, items, weights,
-                                         self.variant)
+            self.state = bk.update_single(self.state, items, weights,
+                                          self.variant, self.universe_bits)
 
     def topk(self, m: int):
         if self.shards:

@@ -1,0 +1,61 @@
+"""Shared test helpers (stream builders and oracles used across modules).
+
+Lives beside the test modules so suites stop importing from each other
+(``test_kernel_sketch_update`` used to ``from test_jax_sketch import``,
+which breaks under test-file isolation and confuses collection order).
+"""
+import numpy as np
+
+
+def random_strict_stream(rng, n, universe, delete_frac):
+    """Unit-weight strict bounded-deletion stream, interleaved."""
+    items, weights = [], []
+    live = []
+    for _ in range(n):
+        if live and rng.random() < delete_frac:
+            x = live.pop(rng.integers(0, len(live)))
+            items.append(x)
+            weights.append(-1)
+        else:
+            x = int(rng.integers(0, universe))
+            live.append(x)
+            items.append(x)
+            weights.append(1)
+    return np.array(items, np.int32), np.array(weights, np.int32)
+
+
+def py_array_oracle(k, items, weights, variant=2):
+    """Dense-array SpaceSaving± with flat argmin/argmax tie-breaking —
+    the exact Python mirror of the JAX semantics."""
+    ids = [-1] * k
+    counts = [0] * k
+    errors = [0] * k
+    for item, w in zip(items, weights):
+        item, w = int(item), int(w)
+        if w == 0:
+            continue
+        if w > 0:
+            if item in ids:
+                counts[ids.index(item)] += w
+            elif -1 in ids:
+                j = ids.index(-1)
+                ids[j], counts[j], errors[j] = item, w, 0
+            else:
+                j = min(range(k), key=lambda i: counts[i])
+                mc = counts[j]
+                ids[j], counts[j], errors[j] = item, mc + w, mc
+        else:
+            wd = -w
+            if item in ids:
+                counts[ids.index(item)] -= wd
+            elif variant == 2:
+                rem = wd
+                while rem > 0:
+                    j = max(range(k), key=lambda i: errors[i])
+                    if errors[j] <= 0:
+                        break
+                    d = min(rem, errors[j])
+                    errors[j] -= d
+                    counts[j] -= d
+                    rem -= d
+    return ids, counts, errors

@@ -1,0 +1,261 @@
+"""Unified bank engine tests: fused-core bit-identity + routing invariants.
+
+Two layers:
+
+  * **engine differential** — ``bank.update_single`` / ``update_rows`` /
+    ``update_block_fused`` are bit-identical to ``blocks.block_update``
+    run per row on that row's routed view, for both router kinds and
+    both variants (the invariant every client — sharded, dyadic,
+    dyadic_sharded, stats — relies on);
+  * **routing invariants** (fixed-seed backbone + hypothesis fuzz) —
+    router outputs are a permutation partition of the input block, level
+    routing matches the per-item ``>>`` computation, and composed
+    shard × level routing equals sequential application of the two.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import bounded_stream
+from repro.sketch import bank as bk, blocks, state as st
+
+from helpers import random_strict_stream
+
+
+def _stream(n, ratio, seed, universe=1 << 8):
+    s = bounded_stream("zipf", n, ratio, universe=universe,
+                       order="interleaved", seed=seed)[:n]
+    return (jnp.asarray(s[:, 0], jnp.int32), jnp.asarray(s[:, 1], jnp.int32))
+
+
+def _assert_states_equal(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestEngineCore:
+    def test_init_row_capacities_roundtrip(self):
+        bank = bk.init([5, 3, 8, 1])
+        assert bank.ids.shape == (4, 8)
+        assert bk.row_capacities(bank) == [5, 3, 8, 1]
+        # BLOCKED padding: inert sentinel slots
+        assert int((np.asarray(bank.ids) == -2).sum()) == 32 - 17
+
+    @pytest.mark.parametrize("variant", [1, 2])
+    def test_update_single_bit_identical_to_block_update(self, variant):
+        rng = np.random.default_rng(7 + variant)
+        state = st.init(48)
+        for blk in range(3):
+            items, weights = random_strict_stream(rng, 256, 300, 0.3)
+            a = bk.update_single(state, jnp.asarray(items),
+                                 jnp.asarray(weights), variant)
+            b = blocks.block_update(state, jnp.asarray(items),
+                                    jnp.asarray(weights), variant)
+            _assert_states_equal(a, b)
+            state = a
+
+    @pytest.mark.parametrize("variant", [1, 2])
+    def test_update_rows_bit_identical_to_per_row_block_update(self, variant):
+        """The dense fused core == blocks.block_update per row, warm and
+        cold, with per-row capacity masks in play."""
+        rng = np.random.default_rng(3 + variant)
+        R, B = 5, 192
+        bank = bk.init([16, 7, 32, 3, 16])
+        for blk in range(2):
+            rows_i, rows_w = [], []
+            for r in range(R):
+                i, w = random_strict_stream(rng, B, 100, 0.35)
+                order = np.argsort(i, kind="stable")
+                rows_i.append(i[order])
+                rows_w.append(w[order])
+            row_items = jnp.asarray(np.stack(rows_i))
+            row_weights = jnp.asarray(np.stack(rows_w))
+            out = bk.update_rows(bank, row_items, row_weights, variant)
+            for r in range(R):
+                want = blocks.block_update(
+                    jax.tree.map(lambda x: x[r], bank),
+                    row_items[r], row_weights[r], variant,
+                    assume_sorted=True)
+                got = jax.tree.map(lambda x: x[r], out)
+                _assert_states_equal(got, want)
+            bank = out
+
+    def test_update_rows_shared_weight_row(self):
+        """(1, B) shared weights == the materialized (R, B) broadcast."""
+        items, weights = _stream(256, 0.4, seed=2)
+        router = bk.DyadicLevelRouter(6)
+        bank = bk.init([12] * 6)
+        ri, rw = router.route_dense(items, weights)
+        assert rw.shape == (1, 256)
+        a = bk.update_rows(bank, ri, rw, 2)
+        b = bk.update_rows(bank, ri, jnp.broadcast_to(rw, ri.shape), 2)
+        _assert_states_equal(a, b)
+
+    def test_query_rows_owner_reads(self):
+        bank = bk.init(8, 2)
+        bank = bk.update_block_fused(
+            bank, jnp.asarray([3, 3, 5, 9], jnp.int32),
+            jnp.ones(4, jnp.int32), bk.HashShardRouter(2), 2)
+        owner = bk.shard_of(jnp.asarray([3, 5, 9, 77], jnp.int32), 2)
+        est = bk.query_rows(bank, owner, jnp.asarray([3, 5, 9, 77],
+                                                     jnp.int32))
+        assert est.tolist() == [2, 1, 1, 0]
+
+    def test_merge_banks_is_rowwise_state_merge(self):
+        i1, w1 = _stream(256, 0.25, seed=1)
+        i2, w2 = _stream(256, 0.25, seed=2)
+        r = bk.HashShardRouter(3)
+        a = bk.update_block_fused(bk.init(16, 3), i1, w1, r, 2)
+        b = bk.update_block_fused(bk.init(16, 3), i2, w2, r, 2)
+        m = bk.merge_banks(a, b)
+        for row in range(3):
+            want = st.merge(jax.tree.map(lambda x: x[row], a),
+                            jax.tree.map(lambda x: x[row], b))
+            _assert_states_equal(jax.tree.map(lambda x: x[row], m), want)
+
+    def test_blocked_rows_merge_cleanly(self):
+        """BLOCKED capacity padding never surfaces through state.merge."""
+        a = bk.init([4, 2])
+        b = bk.init([4, 2])
+        a = bk.update_rows(
+            a, jnp.asarray([[1, 2, 3, 7], [1, 4, 6, 8]], jnp.int32),
+            jnp.ones((2, 4), jnp.int32), 2)
+        b = bk.update_rows(
+            b, jnp.asarray([[2, 5, 5, 9], [3, 3, 6, 6]], jnp.int32),
+            jnp.ones((2, 4), jnp.int32), 2)
+        m = bk.merge_banks(a, b)
+        ids = np.asarray(m.ids)
+        counts = np.asarray(m.counts)
+        assert (ids >= -1).all()                  # no BLOCKED in output
+        assert (counts[ids < 0] == 0).all()       # no INT_MAX leakage
+
+
+class TestRoutingInvariants:
+    """Fixed-seed backbone; the hypothesis class below fuzzes the same
+    properties (CI property job; skips via the conftest shim otherwise)."""
+
+    def _check_hash_partition(self, items, weights, S, universe_bits=None):
+        items_b, w_routed = bk.HashShardRouter(S, universe_bits).route_dense(
+            items, weights)
+        it, w = np.asarray(items), np.asarray(weights)
+        ib, wb = np.asarray(items_b), np.asarray(w_routed)
+        B = len(it)
+        assert ib.shape == wb.shape == (S, B)
+        # every row carries the SAME sorted block (a permutation of input)
+        assert (np.diff(ib[0]) >= 0).all()
+        np.testing.assert_array_equal(np.sort(it), ib[0])
+        for s in range(1, S):
+            np.testing.assert_array_equal(ib[0], ib[s])
+        # weights partition: per column, weight lives ONLY in the owner
+        # row and sums back to the input weight — a permutation partition
+        owner = np.asarray(bk.shard_of(jnp.asarray(ib[0]), S))
+        np.testing.assert_array_equal(wb.sum(axis=0),
+                                      wb[owner, np.arange(B)])
+        # recover the routed multiset {(item, weight)} and compare
+        got = sorted(zip(ib[0].tolist(), wb.sum(axis=0).tolist()))
+        want = sorted(zip(it.tolist(), w.tolist()))
+        # weights of equal items may swap under the sort: compare by item
+        # groups
+        from collections import defaultdict
+
+        g1, g2 = defaultdict(list), defaultdict(list)
+        for i, x in got:
+            g1[i].append(x)
+        for i, x in want:
+            g2[i].append(x)
+        assert {i: sorted(v) for i, v in g1.items()} == \
+            {i: sorted(v) for i, v in g2.items()}
+        # foreign rows carry zero weight
+        for s in range(S):
+            assert (wb[s][owner != s] == 0).all()
+
+    def _check_levels(self, items, weights, bits):
+        row_items, rw = bk.DyadicLevelRouter(bits).route_dense(items, weights)
+        ri = np.asarray(row_items)
+        order = np.argsort(np.asarray(items), kind="stable")
+        si = np.asarray(items)[order]
+        for l in range(bits):
+            np.testing.assert_array_equal(ri[l], si >> l)
+        np.testing.assert_array_equal(np.asarray(rw)[0],
+                                      np.asarray(weights)[order])
+
+    def _check_composed(self, items, weights, bits, S):
+        ci, cw = bk.ShardLevelRouter(bits, S).route_dense(items, weights)
+        nodes, w_l = bk.DyadicLevelRouter(bits).route_dense(items, weights)
+        B = len(np.asarray(items))
+        for s in range(S):
+            for l in range(bits):
+                row = s * bits + l
+                np.testing.assert_array_equal(np.asarray(ci)[row],
+                                              np.asarray(nodes)[l])
+                owner = np.asarray(bk.shard_of(nodes[l], S))
+                want_w = np.where(owner == s, np.asarray(w_l)[0], 0)
+                np.testing.assert_array_equal(np.asarray(cw)[row], want_w)
+
+    def test_hash_partition_fixed(self):
+        items, weights = _stream(777, 0.5, seed=5)
+        self._check_hash_partition(items, weights, 4, universe_bits=8)
+        self._check_hash_partition(items, weights, 3)  # no packed sort
+
+    def test_levels_fixed(self):
+        items, weights = _stream(300, 0.4, seed=6)
+        self._check_levels(items, weights, 8)
+
+    def test_composed_fixed(self):
+        items, weights = _stream(200, 0.4, seed=7)
+        self._check_composed(items, weights, 6, 3)
+
+
+class TestRoutingInvariantsHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=hst.integers(0, 2**20), S=hst.integers(1, 8),
+           packed=hst.booleans())
+    def test_hash_partition_random(self, seed, S, packed):
+        rng = np.random.default_rng(seed)
+        B = int(rng.integers(2, 300))
+        items = jnp.asarray(rng.integers(0, 256, B), jnp.int32)
+        weights = jnp.asarray(rng.integers(-3, 4, B), jnp.int32)
+        TestRoutingInvariants()._check_hash_partition(
+            items, weights, S, universe_bits=8 if packed else None)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=hst.integers(0, 2**20), bits=hst.integers(1, 12))
+    def test_levels_random(self, seed, bits):
+        rng = np.random.default_rng(seed)
+        B = int(rng.integers(2, 300))
+        items = jnp.asarray(rng.integers(0, 1 << bits, B), jnp.int32)
+        weights = jnp.asarray(rng.integers(-3, 4, B), jnp.int32)
+        TestRoutingInvariants()._check_levels(items, weights, bits)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=hst.integers(0, 2**20), bits=hst.integers(1, 8),
+           S=hst.integers(1, 5))
+    def test_composed_random(self, seed, bits, S):
+        rng = np.random.default_rng(seed)
+        B = int(rng.integers(2, 150))
+        items = jnp.asarray(rng.integers(0, 1 << bits, B), jnp.int32)
+        weights = jnp.asarray(rng.integers(-3, 4, B), jnp.int32)
+        TestRoutingInvariants()._check_composed(items, weights, bits, S)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=hst.integers(0, 2**20), variant=hst.sampled_from([1, 2]))
+    def test_fused_partition_matches_per_row_updates(self, seed, variant):
+        """End-to-end engine property: the fused partition launch equals
+        blocks.block_update per shard on its routed view."""
+        rng = np.random.default_rng(seed)
+        S = int(rng.integers(1, 5))
+        B = int(rng.integers(8, 200))
+        items = jnp.asarray(rng.integers(0, 128, B), jnp.int32)
+        weights = jnp.asarray(rng.integers(-2, 4, B), jnp.int32)
+        bank = bk.init(8, S)
+        router = bk.HashShardRouter(S, universe_bits=7)
+        out = bk.update_block_fused(bank, items, weights, router, variant)
+        items_b, w_routed = router.route_dense(items, weights)
+        for s in range(S):
+            want = blocks.block_update(
+                jax.tree.map(lambda x: x[s], bank),
+                items_b[s], w_routed[s], variant, assume_sorted=True)
+            _assert_states_equal(jax.tree.map(lambda x: x[s], out), want)

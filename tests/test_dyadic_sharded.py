@@ -1,0 +1,203 @@
+"""Differential tests: mesh-distributed Dyadic SpaceSaving± vs oracles.
+
+Pins the acceptance properties of ``repro.sketch.dyadic_sharded``:
+
+  * **rank/quantile parity** — under the shard_map path, ranks and
+    quantiles stay within the paper's ε·|F|₁ bound of the true ranks AND
+    of the single-host Python oracle (`repro.core.quantiles`), across
+    α ∈ {1.25, 2, 4} and both variants;
+  * **path bit-identity** — the shard_map local program and the
+    single-launch composed-router path produce identical banks;
+  * **ownership** — a (level, node) summary lives only in its owner
+    shard's row;
+  * **merge / consolidate** — row-wise merge matches per-row
+    ``state.merge``; ``consolidate`` folds to a queryable single-host
+    :class:`DyadicState` (BLOCKED-aware merge).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantiles import dyadic_layer_capacities, make_dss_pm
+from repro.core.streams import bounded_stream, exact_stats
+from repro.sketch import bank as bk, dyadic, dyadic_sharded as ds
+
+BITS = 8
+EPS = 0.15
+
+
+def _size1_mesh():
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def _live_values(stream):
+    stats = exact_stats(stream)
+    out = []
+    for v, c in stats.frequencies.items():
+        out.extend([v] * c)
+    return np.asarray(sorted(out), dtype=np.int64), stats
+
+
+def run_differential(seed, alpha, variant, num_shards=4, block=64,
+                     bits=BITS, eps=EPS, n_insert=1200, path="bank"):
+    delete_ratio = 1.0 - 1.0 / alpha
+    stream = bounded_stream("zipf", n_insert, delete_ratio,
+                            universe=1 << bits, seed=seed,
+                            order="interleaved")
+    live, stats = _live_values(stream)
+    st = ds.process_stream(
+        ds.init(bits, num_shards, eps=eps, alpha=alpha),
+        stream[:, 0], stream[:, 1], variant=variant, block=block, path=path)
+    oracle = make_dss_pm(bits, eps=eps, alpha=alpha,
+                         variant="lazy" if variant == 1 else "sspm"
+                         ).process(stream)
+    assert int(st.mass) == oracle.mass == stats.residual_mass
+    qs = np.unique(np.concatenate([
+        np.quantile(live, np.linspace(0, 1, 33)).astype(np.int64),
+        [0, (1 << bits) - 1]]))
+    tr = np.searchsorted(live, qs, side="right").astype(np.float64)
+    jr = np.asarray(ds.rank_many(st, jnp.asarray(qs, jnp.int32)), np.float64)
+    pr = np.asarray([oracle.rank(int(q)) for q in qs], np.float64)
+    bound = eps * stats.residual_mass
+    return st, oracle, live, stats, qs, jr, pr, tr, bound
+
+
+class TestSizing:
+    def test_per_shard_layers_match_oracle_sizing(self):
+        for alpha in (1.25, 2.0, 4.0):
+            st = ds.init(10, 4, eps=0.1, alpha=alpha)
+            oracle = make_dss_pm(10, eps=0.1, alpha=alpha)
+            assert ds.layer_capacities(st) == [
+                l.capacity for l in oracle.layers]
+            assert ds.space_counters(st) == 4 * oracle.space_counters
+
+    def test_budget_split_matches_single_host_bank(self):
+        caps = dyadic_layer_capacities(12, total_counters=1024)
+        st = ds.init(12, 2, total_counters=1024)
+        assert ds.layer_capacities(st) == caps
+
+
+class TestDifferentialShardMap:
+    """The acceptance property: shard_map-path quantiles vs the oracle."""
+
+    @pytest.mark.parametrize("variant", [1, 2])
+    @pytest.mark.parametrize("alpha", [1.25, 2.0, 4.0])
+    def test_rank_within_bound_across_alpha(self, variant, alpha):
+        from repro.parallel import sharding as psh
+
+        with psh.use_mesh(_size1_mesh()):
+            _, _, _, _, _, jr, pr, tr, bound = run_differential(
+                seed=11, alpha=alpha, variant=variant, path="shard_map")
+        assert np.max(np.abs(jr - tr)) <= bound
+        assert np.max(np.abs(pr - tr)) <= bound
+        assert np.max(np.abs(jr - pr)) <= bound  # the differential claim
+
+    def test_quantiles_match_oracle_within_rank_bound(self):
+        from repro.parallel import sharding as psh
+
+        with psh.use_mesh(_size1_mesh()):
+            st, oracle, live, stats, _, _, _, _, bound = run_differential(
+                seed=7, alpha=2.0, variant=2, path="shard_map")
+            qs = np.asarray([0.1, 0.25, 0.5, 0.75, 0.9, 0.99])
+            jq = np.asarray(ds.quantile_many(
+                st, jnp.asarray(qs, jnp.float32)))
+        for q, xj in zip(qs, jq):
+            xo = oracle.quantile(float(q))
+            tj = np.searchsorted(live, xj, side="right")
+            to = np.searchsorted(live, xo, side="right")
+            assert abs(tj - q * stats.residual_mass) <= bound + 1
+            assert abs(to - q * stats.residual_mass) <= bound + 1
+
+
+class TestPathBitIdentity:
+    @pytest.mark.parametrize("variant", [1, 2])
+    def test_shard_map_matches_bank_path(self, variant):
+        from repro.parallel import sharding as psh
+
+        stream = bounded_stream("zipf", 500, 0.25, universe=1 << BITS,
+                                seed=3, order="interleaved")
+        s0 = ds.init(BITS, 4, total_counters=256)
+        base = ds.process_stream(s0, stream[:, 0], stream[:, 1],
+                                 variant=variant, block=128, path="bank")
+        with psh.use_mesh(_size1_mesh()):
+            assert psh.mesh_axis("shards") == ("data",)
+            out = ds.process_stream(s0, stream[:, 0], stream[:, 1],
+                                    variant=variant, block=128,
+                                    path="shard_map")
+        for x, y in zip(base.bank, out.bank):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_shard_map_requires_mesh(self):
+        s0 = ds.init(BITS, 2, total_counters=128)
+        with pytest.raises(ValueError):
+            ds.update_block(s0, jnp.zeros(8, jnp.int32),
+                            jnp.zeros(8, jnp.int32), path="shard_map")
+
+
+class TestOwnership:
+    def test_rows_only_monitor_their_own_nodes(self):
+        S = 4
+        stream = bounded_stream("zipf", 2000, 0.3, universe=1 << BITS,
+                                seed=9, order="interleaved")
+        st = ds.process_stream(ds.init(BITS, S, total_counters=256),
+                               stream[:, 0], stream[:, 1], block=256)
+        ids = np.asarray(st.bank.ids)  # (S, bits, k)
+        for s in range(S):
+            live = ids[s][ids[s] >= 0]
+            if len(live):
+                owner = np.asarray(bk.shard_of(
+                    jnp.asarray(live, jnp.int32), S))
+                assert (owner == s).all()
+
+
+class TestMergeConsolidate:
+    def test_rowwise_merge_and_mass(self):
+        from repro.sketch import state as st_mod
+
+        s1 = bounded_stream("zipf", 800, 0.25, universe=1 << BITS, seed=1,
+                            order="interleaved")
+        s2 = bounded_stream("zipf", 800, 0.25, universe=1 << BITS, seed=2,
+                            order="interleaved")
+        a = ds.process_stream(ds.init(BITS, 2, total_counters=256),
+                              s1[:, 0], s1[:, 1], block=256)
+        b = ds.process_stream(ds.init(BITS, 2, total_counters=256),
+                              s2[:, 0], s2[:, 1], block=256)
+        m = ds.merge(a, b)
+        assert int(m.mass) == int(a.mass) + int(b.mass)
+        for s in range(2):
+            for l in range(BITS):
+                want = st_mod.merge(
+                    jax.tree.map(lambda x: x[s, l], a.bank),
+                    jax.tree.map(lambda x: x[s, l], b.bank))
+                got = jax.tree.map(lambda x: x[s, l], m.bank)
+                for g, y in zip(got, want):
+                    np.testing.assert_array_equal(np.asarray(g),
+                                                  np.asarray(y))
+
+    def test_consolidate_is_queryable_dyadic_state(self):
+        stream = bounded_stream("zipf", 1200, 0.5, universe=1 << BITS,
+                                seed=5, order="interleaved")
+        live, stats = _live_values(stream)
+        st = ds.process_stream(ds.init(BITS, 4, eps=EPS, alpha=2.0),
+                               stream[:, 0], stream[:, 1], block=128)
+        cons = ds.consolidate(st)
+        assert isinstance(cons, dyadic.DyadicState)
+        assert int(cons.mass) == stats.residual_mass
+        qs = np.unique(np.quantile(live, np.linspace(0, 1, 17))
+                       .astype(np.int64))
+        tr = np.searchsorted(live, qs, side="right").astype(np.float64)
+        cr = np.asarray(dyadic.rank_many(cons, jnp.asarray(qs, jnp.int32)),
+                        np.float64)
+        # consolidation adds merged-summary error on top of per-shard ε
+        assert np.max(np.abs(cr - tr)) <= 2 * EPS * stats.residual_mass + 1
+
+    def test_empty_bank(self):
+        st = ds.init(4, 2, total_counters=32)
+        assert int(st.mass) == 0
+        assert np.asarray(ds.rank_many(
+            st, jnp.asarray([0, 7, 15], jnp.int32))).tolist() == [0, 0, 0]

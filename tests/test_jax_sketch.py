@@ -10,60 +10,8 @@ from repro.core.streams import bounded_stream, exact_stats
 from repro import sketch as js
 from repro.sketch.blocks import _aggregate_block
 
-
-def py_array_oracle(k, items, weights, variant=2):
-    """Dense-array SpaceSaving± with flat argmin/argmax tie-breaking —
-    the exact Python mirror of the JAX semantics."""
-    ids = [-1] * k
-    counts = [0] * k
-    errors = [0] * k
-    INT_MAX = 2**31 - 1
-    for item, w in zip(items, weights):
-        item, w = int(item), int(w)
-        if w == 0:
-            continue
-        if w > 0:
-            if item in ids:
-                counts[ids.index(item)] += w
-            elif -1 in ids:
-                j = ids.index(-1)
-                ids[j], counts[j], errors[j] = item, w, 0
-            else:
-                j = min(range(k), key=lambda i: counts[i])
-                mc = counts[j]
-                ids[j], counts[j], errors[j] = item, mc + w, mc
-        else:
-            wd = -w
-            if item in ids:
-                counts[ids.index(item)] -= wd
-            elif variant == 2:
-                rem = wd
-                while rem > 0:
-                    j = max(range(k), key=lambda i: errors[i])
-                    if errors[j] <= 0:
-                        break
-                    d = min(rem, errors[j])
-                    errors[j] -= d
-                    counts[j] -= d
-                    rem -= d
-    return ids, counts, errors
-
-
-def random_strict_stream(rng, n, universe, delete_frac):
-    """Unit-weight strict bounded-deletion stream, interleaved."""
-    items, weights = [], []
-    live = []
-    for _ in range(n):
-        if live and rng.random() < delete_frac:
-            x = live.pop(rng.integers(0, len(live)))
-            items.append(x)
-            weights.append(-1)
-        else:
-            x = int(rng.integers(0, universe))
-            live.append(x)
-            items.append(x)
-            weights.append(1)
-    return np.array(items, np.int32), np.array(weights, np.int32)
+from helpers import py_array_oracle, random_strict_stream  # noqa: F401
+# (re-exported: historical import site for other suites, now in helpers)
 
 
 class TestScanPathMatchesOracle:

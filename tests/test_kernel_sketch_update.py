@@ -27,7 +27,7 @@ from repro.kernels.sketch_update.ops import (
 from repro.kernels.sketch_update.ref import sketch_update_ref
 from repro import sketch as js
 
-from test_jax_sketch import random_strict_stream
+from helpers import random_strict_stream
 
 
 def assert_states_equal(a: js.SketchState, b: js.SketchState):
@@ -107,6 +107,31 @@ def test_kernel_matches_serial_kernel_insert_only_unique():
     a = sketch_block_update(st0, items, weights, variant=2, interpret=True)
     b = sketch_block_update_serial(st0, items, weights, variant=2, interpret=True)
     assert_states_equal(a, b)
+
+
+def test_kernel_banked_matches_engine_dense_core():
+    """One banked launch == bank.update_rows, bit for bit — including
+    per-row capacity masks and a row width that needs LANES padding."""
+    from repro.sketch import bank as bk
+    from repro.kernels.sketch_update.ops import sketch_block_update_banked
+
+    rng = np.random.default_rng(5)
+    R, B = 4, 96
+    bank = bk.init([40, 7, 200, 40])  # k=200: pads to 256 inside the kernel
+    for variant in (1, 2):
+        rows_i, rows_w = [], []
+        for r in range(R):
+            i, w = random_strict_stream(rng, B, universe=120,
+                                        delete_frac=0.3)
+            order = np.argsort(i, kind="stable")
+            rows_i.append(i[order])
+            rows_w.append(w[order])
+        row_items = jnp.asarray(np.stack(rows_i))
+        row_weights = jnp.asarray(np.stack(rows_w))
+        got = sketch_block_update_banked(bank, row_items, row_weights,
+                                         variant, interpret=True)
+        want = bk.update_rows(bank, row_items, row_weights, variant)
+        assert_states_equal(got, want)
 
 
 def test_kernel_batched_matches_unbatched():

@@ -55,8 +55,8 @@ def test_shim_all_is_importable_and_canonical():
 def test_package_root_reexports_match_layers():
     for name in pkg.__all__:
         obj = getattr(pkg, name)
-        if name in ("blocks", "dyadic", "phases", "sharded", "state",
-                    "jax_sketch"):
+        if name in ("bank", "blocks", "dyadic", "dyadic_sharded", "phases",
+                    "sharded", "state", "jax_sketch"):
             continue
         home = next(m for m in (state, phases, blocks)
                     if hasattr(m, name))
