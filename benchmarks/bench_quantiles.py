@@ -26,7 +26,13 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_print, run_sketch, write_bench_json
+from benchmarks.common import (
+    csv_print,
+    run_sketch,
+    run_spec,
+    session_overhead,
+    write_bench_json,
+)
 from repro.core.quantiles import (
     KLLpm,
     dyadic_from_budget,
@@ -43,6 +49,8 @@ JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_quantiles.json")
 
 DYADIC_COLUMNS = ["dist", "bits", "budget", "impl", "block",
                   "updates_per_s", "ks", "speedup_vs_ref"]
+SESSION_COLUMNS = ["dist", "bits", "budget", "block", "ms_direct",
+                   "ms_session", "overhead_pct"]
 FIG8_COLUMNS = ["dist", "budget", "sketch", "ks"]
 FIG9_COLUMNS = ["ratio", "sketch", "ks"]
 FIG10_COLUMNS = ["stream_len", "sketch", "us"]
@@ -176,13 +184,55 @@ def run_dyadic(n_insert: int = 6000, budget: int = 2048, block: int = 2048,
             ups = n / dt
             rows.append([dist, BITS, budget, impl, block,
                          ups, _ks_dyadic_jax(st, live), ups / ref_ups])
+
+        # the spec-driven session over the same bank path: same KS (it IS
+        # the same math), throughput within session-overhead of 'bank'
+        from repro.sketch import api
+        spec = api.SketchSpec(kind="quantile", bits=BITS, k=budget,
+                              backend="bank")
+        dt, sess = run_spec(spec, stream, block)
+        ups = n / dt
+        rows.append([dist, BITS, budget, "session", block, ups,
+                     _ks_dyadic_jax(sess.state, live), ups / ref_ups])
     csv_print("dyadic_update_throughput", DYADIC_COLUMNS, rows)
+    return rows
+
+
+def run_session_overhead(budget: int = 2048, block: int = 2048,
+                         n_blocks: int = 16, runs: int = 9, seed0: int = 0):
+    """StreamSession dispatch overhead vs the raw fused engine launch at
+    the headline zipf cell (DESIGN.md §11: <5% required).
+
+    Direct = ``bank.update_block_fused`` with the level router + the
+    exact-mass add; session = the cached jitted ingest for the same
+    spec. Both feed the SAME evolving block sequence, so the gap is
+    pure session overhead.
+    """
+    import jax
+    from repro.sketch import api, bank as bkmod, dyadic
+
+    stream = dist_stream("zipf", (n_blocks + 1) * block, 0.0, seed=seed0)
+    spec = api.SketchSpec(kind="quantile", bits=BITS, k=budget,
+                          backend="bank")
+    router = bkmod.DyadicLevelRouter(BITS)
+    direct = jax.jit(lambda s_, i, w: dyadic.DyadicState(
+        bank=bkmod.update_block_fused(s_.bank, i, w, router,
+                                      spec.variant_id),
+        mass=s_.mass + w.sum()))
+    warm = lambda i, w: dyadic.update_block(
+        dyadic.init(BITS, total_counters=budget), i, w)
+    t_d, t_s, pct = session_overhead(spec, direct, warm, stream, block,
+                                     n_blocks, runs)
+    rows = [["zipf", BITS, budget, block, t_d / n_blocks * 1e3,
+             t_s / n_blocks * 1e3, pct]]
+    csv_print("session_overhead", SESSION_COLUMNS, rows)
     return rows
 
 
 def _write_json(results: dict, path: str = JSON_PATH) -> None:
     write_bench_json(results, {
         "dyadic_update": DYADIC_COLUMNS,
+        "session_overhead": SESSION_COLUMNS,
         "fig8": FIG8_COLUMNS,
         "fig9": FIG9_COLUMNS,
         "fig10": FIG10_COLUMNS,
@@ -193,6 +243,8 @@ def run(smoke: bool = False, write_json: bool = True, **kw):
     if smoke:
         results = {
             "dyadic_update": run_dyadic(n_insert=1200, budget=256, block=512),
+            "session_overhead": run_session_overhead(
+                budget=256, block=512, n_blocks=2, runs=2),
             "fig8": run_fig8(n_insert=1000, runs=1),
             "fig9": run_fig9(n_total=1500, runs=1),
             "fig10": run_fig10(runs=1),
@@ -200,6 +252,7 @@ def run(smoke: bool = False, write_json: bool = True, **kw):
     else:
         results = {
             "dyadic_update": run_dyadic(),
+            "session_overhead": run_session_overhead(),
             "fig8": run_fig8(),
             "fig9": run_fig9(),
             "fig10": run_fig10(),

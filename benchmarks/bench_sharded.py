@@ -33,10 +33,10 @@ from benchmarks.common import (
     exact_freqs,
     min_time,
     recall_precision,
-    stream_blocks,
+    session_overhead,
     write_bench_json,
 )
-from repro.sketch import blocks, sharded as shd, state as st
+from repro.sketch import api, bank as bkmod, blocks, sharded as shd, state as st
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_sharded.json")
@@ -54,6 +54,8 @@ INGEST_COLUMNS = ["dist", "block", "budget", "shards", "ms_per_block",
                   "items_per_s", "speedup_vs_single", "bit_identical"]
 QUALITY_COLUMNS = ["dist", "alpha", "budget", "shards", "phi", "recall",
                    "precision", "max_err"]
+SESSION_COLUMNS = ["dist", "block", "budget", "shards", "ms_direct",
+                   "ms_session", "overhead_pct"]
 
 
 def _banks_equal(a, b) -> bool:
@@ -112,27 +114,22 @@ def bench_quality(n_insert: int = 20000, budget: int = BUDGET,
                               seed=3)),
         ("zipf_adversarial", adversarial_stream(n_insert, 0.5, seed=3)),
     )
+    from repro.sketch.session import StreamSession
+
     for dist, stream in cells:
         freqs = exact_freqs(stream)
-        items, weights, nb = stream_blocks(stream, block)
         cand = np.nonzero(freqs > 0)[0]
         q = jnp.asarray(cand, jnp.int32)
         for S in shard_counts:
-            if S == 1:
-                sk = st.init(budget)
-                for b in range(nb):
-                    sl = slice(b * block, (b + 1) * block)
-                    sk = blocks.block_update(
-                        sk, jnp.asarray(items[sl]), jnp.asarray(weights[sl]))
-                est = np.asarray(st.query_many(sk, q), np.int64)
-            else:
-                bank = shd.init(budget, S)
-                for b in range(nb):
-                    sl = slice(b * block, (b + 1) * block)
-                    bank = shd.update_block(
-                        bank, jnp.asarray(items[sl]), jnp.asarray(weights[sl]),
-                        universe_bits=UNIVERSE_BITS)
-                est = np.asarray(shd.query_many(bank, q), np.int64)
+            # single and sharded are the SAME session client: one spec
+            # field apart (the thin-consumer contract of DESIGN.md §11)
+            spec = api.SketchSpec(kind="frequency", k=budget,
+                                  shards=None if S == 1 else S,
+                                  bits=UNIVERSE_BITS, backend="bank")
+            sess = StreamSession(spec, block=block)
+            sess.extend(stream[:, 0].astype(np.int32),
+                        stream[:, 1].astype(np.int32))
+            est = np.asarray(sess.query_many(q), np.int64)
             max_err = int(np.abs(est - freqs[cand]).max())
             for phi in (0.005, 0.01):
                 recall, precision = recall_precision(None, freqs, phi,
@@ -143,9 +140,38 @@ def bench_quality(n_insert: int = 20000, budget: int = BUDGET,
     return rows
 
 
+def bench_session(budget: int = BUDGET, S: int = 4, block: int = 16384,
+                  n_blocks: int = 16, runs: int = 9):
+    """StreamSession dispatch overhead vs the raw fused engine call.
+
+    The DESIGN.md §11 acceptance cell: both sides run the SAME evolving
+    (zipf, B, S) block sequence — direct ``bank.update_block_fused``
+    with a pinned router vs the session's cached jitted ingest — so the
+    measured gap is pure session overhead (<5% required).
+    """
+    import jax
+
+    stream = dist_stream("zipf", (n_blocks + 1) * block, 0.0, seed=1)
+    spec = api.SketchSpec(kind="frequency", k=budget, shards=S,
+                          bits=UNIVERSE_BITS, backend="bank")
+    router = bkmod.HashShardRouter(S, UNIVERSE_BITS)
+    direct = jax.jit(lambda s_, i, w: shd.ShardedSketch(
+        bank=bkmod.update_block_fused(s_.bank, i, w, router,
+                                      spec.variant_id)))
+    warm = lambda i, w: shd.update_block(shd.init(budget, S), i, w,
+                                         universe_bits=UNIVERSE_BITS)
+    t_d, t_s, pct = session_overhead(spec, direct, warm, stream, block,
+                                     n_blocks, runs)
+    rows = [["zipf", block, budget, S, t_d / n_blocks * 1e3,
+             t_s / n_blocks * 1e3, pct]]
+    csv_print("session_overhead", SESSION_COLUMNS, rows)
+    return rows
+
+
 def _write_json(results: dict, path: str = JSON_PATH) -> None:
     write_bench_json(results,
-                     {"ingest": INGEST_COLUMNS, "quality": QUALITY_COLUMNS},
+                     {"ingest": INGEST_COLUMNS, "quality": QUALITY_COLUMNS,
+                      "session_overhead": SESSION_COLUMNS},
                      path)
 
 
@@ -157,11 +183,14 @@ def run(runs: int = 7, write_json: bool = True, smoke: bool = False, **kw):
                                    shard_counts=(1, 4)),
             "quality": bench_quality(n_insert=2000, budget=128,
                                      shard_counts=(1, 4), block=1024),
+            "session_overhead": bench_session(budget=128, block=1024,
+                                              n_blocks=2, runs=2),
         }
     else:
         results = {
             "ingest": bench_ingest(runs=runs),
             "quality": bench_quality(),
+            "session_overhead": bench_session(runs=runs),
         }
     if write_json and not smoke:
         _write_json(results)

@@ -160,6 +160,107 @@ def min_time(fn: Callable, runs: int) -> float:
     return best
 
 
+def run_spec(spec, stream: np.ndarray, block: int, *, runs: int = 3,
+             window=None):
+    """The one spec-driven bench driver: feed ``stream`` through a fresh
+    :class:`repro.sketch.StreamSession` per run, min-of-N seconds.
+
+    Replaces the per-script pad-and-feed loops: any (kind × shards ×
+    variant × backend) cell is one ``SketchSpec`` away.  Returns
+    ``(best_seconds, final_session)`` — callers query the session for
+    accuracy metrics so the timed path is exactly the production path.
+    """
+    from repro.sketch.session import StreamSession
+
+    items = np.ascontiguousarray(stream[:, 0], np.int32)
+    weights = np.ascontiguousarray(stream[:, 1], np.int32)
+
+    def one_pass():
+        s = StreamSession(spec, block=block, window=window)
+        s.extend(items, weights)
+        s.flush()
+        jax_block_until_ready(s.state)
+        return s
+
+    sess = one_pass()  # warmup: compile every (spec, block) shape
+    best = float("inf")
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        sess = one_pass()
+        best = min(best, time.perf_counter() - t0)
+    return best, sess
+
+
+def jax_block_until_ready(tree) -> None:
+    import jax
+
+    jax.tree.map(lambda x: x.block_until_ready(), tree)
+
+
+def session_overhead(spec, direct_fn, warm_fn, stream: np.ndarray,
+                     block: int, n_blocks: int, runs: int = 5):
+    """Race StreamSession.ingest_block against the direct engine call on
+    the SAME evolving state sequence (bit-identical work), min-of-N.
+
+    ``direct_fn(state, items, weights) -> state`` is the raw jitted
+    spelling (e.g. ``bank.update_block_fused`` with a pinned router);
+    ``warm_fn(items, weights) -> state`` builds the warm start from the
+    stream's first block; the session runs its cached jitted ingest for
+    the same spec.  Because both loops visit identical states, the
+    difference is pure session dispatch/buffer overhead — the <5%
+    acceptance number of DESIGN.md §11 (the shared scaffolding of both
+    session-overhead bench cells).  Returns
+    (sec_direct, sec_session, overhead_pct), both times over the whole
+    ``n_blocks`` sequence.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sketch.session import StreamSession
+
+    def cut(col, b):
+        return jnp.asarray(stream[b * block:(b + 1) * block, col], jnp.int32)
+
+    warm_state = warm_fn(cut(0, 0), cut(1, 0))
+    blocks_i = [cut(0, b) for b in range(1, n_blocks + 1)]
+    blocks_w = [cut(1, b) for b in range(1, n_blocks + 1)]
+
+    def fresh_state():
+        # per-pass buffer copy: the session's compiled ingest donates its
+        # state on accelerators, so reusing warm_state across passes would
+        # hit deleted buffers there; copy on both sides for symmetry.
+        return jax.tree.map(lambda x: x.copy(), warm_state)
+
+    def run_direct():
+        st = fresh_state()
+        for i, w in zip(blocks_i, blocks_w):
+            st = direct_fn(st, i, w)
+        jax_block_until_ready(st)
+        return st
+
+    def run_session():
+        s = StreamSession(spec, block=block, state=fresh_state())
+        for i, w in zip(blocks_i, blocks_w):
+            s.ingest_block(i, w)
+        jax_block_until_ready(s.state)
+        return s.state
+
+    # interleave the trials: contended CPUs drift over a bench process's
+    # lifetime, and back-to-back min_time blocks would charge that drift
+    # entirely to whichever side runs second.
+    run_direct()                             # compile both sides first
+    run_session()
+    t_direct = t_session = float("inf")
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        run_direct()
+        t_direct = min(t_direct, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_session()
+        t_session = min(t_session, time.perf_counter() - t0)
+    return t_direct, t_session, 100.0 * (t_session - t_direct) / t_direct
+
+
 def _json_default(obj):
     """np scalars -> python; anything else is a bug, not a bool."""
     if isinstance(obj, np.generic):

@@ -89,9 +89,19 @@ def main() -> int:
                 print(out.stderr[-1500:])
                 failed.append(name)
         else:
-            mod = __import__(mod_name, fromlist=["run"])
-            mod.run(**(SMOKE_KW[name] if args.smoke else {}))
-        print(f"== {name} done in {time.time()-t0:.1f}s", flush=True)
+            # one failing bench must neither abort the remaining benches
+            # nor let the manifest loop exit 0 — record it and keep going
+            # (the subprocess test in tests/test_bench_run.py pins this).
+            try:
+                mod = __import__(mod_name, fromlist=["run"])
+                mod.run(**(SMOKE_KW[name] if args.smoke else {}))
+            except Exception:
+                import traceback
+
+                traceback.print_exc()
+                failed.append(name)
+        status = "FAILED" if name in failed else "done"
+        print(f"== {name} {status} in {time.time()-t0:.1f}s", flush=True)
     _roofline_summary()
     if failed:
         print(f"\nFAILED benches: {', '.join(failed)} "

@@ -1,24 +1,24 @@
 """Dyadic SpaceSaving± as a training-telemetry quantile monitor.
 
-Tracks the distribution of per-step gradient norms with the JAX-native
-dyadic sketch bank (`repro.sketch.dyadic`) over a sliding window
-(bounded deletions): the trainer asks "what is the p95 gradient norm
-over the last W steps?" to drive adaptive clipping — a deterministic
-answer with the paper's rank-error guarantee.
+Tracks the distribution of per-step gradient norms over a sliding
+window (bounded deletions) with ONE :class:`repro.sketch.StreamSession`
+over a ``SketchSpec(kind='quantile', ...)``: the trainer asks "what is
+the p95 gradient norm over the last W steps?" to drive adaptive
+clipping — a deterministic answer with the paper's rank-error
+guarantee.
 
-Updates are buffered host-side and flushed as fixed-size blocks, so the
-whole window maintenance costs ONE fused bank-engine launch per flush
-(inserts of new steps and deletions of expired ones net out inside the
-block; `dyadic.update_block` defaults to the engine's `path='bank'` —
-DESIGN.md §10), and quantile queries are one jit'd binary search. State
-is three dense arrays + a scalar — checkpointable like every other
-sketch here.
+Everything this example used to hand-roll — the host-side update
+buffer, fixed-size zero-weight-padded flushes, the expiry FIFO feeding
+deletions back into the stream — is the session's windowed ``observe``
+path now (DESIGN.md §11): one fused bank-engine launch per flushed
+block, one jitted binary search per quantile query.  State stays three
+dense arrays + a scalar — checkpointable like every other sketch here.
 
-``--shards S`` runs the same monitor on the mesh-distributed bank
-(`repro.sketch.dyadic_sharded`): (level, node) summaries hash-partition
-over S shards (shard_map over the mesh "shards" axis on real meshes),
-queries read owner shards only, and `consolidate()` folds back to a
-single-host DyadicState for checkpoints.
+``--shards S`` is one spec field: the same session runs on the
+mesh-distributed shard × level bank (`repro.sketch.dyadic_sharded`;
+shard_map over the mesh "shards" axis on real meshes), queries read
+owner shards only, and ``consolidated()`` folds back to a single-host
+DyadicState for checkpoints.
 
     PYTHONPATH=src python examples/quantile_monitor.py [--shards 4]
 """
@@ -27,9 +27,7 @@ import collections
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.sketch import dyadic, dyadic_sharded
+from repro.sketch import SketchSpec, StreamSession, dyadic
 
 BITS = 12           # quantize gradient norms into 2^12 buckets
 SCALE = 100.0       # norm 0..40.95 -> bucket id
@@ -43,52 +41,30 @@ def to_bucket(x: float) -> int:
 
 
 class WindowedQuantileMonitor:
-    """Sliding-window quantiles via one dyadic bank + an update buffer.
+    """Sliding-window quantiles = one windowed StreamSession.
 
     ``shards=S`` swaps the single-host bank for the mesh-distributed
     shard × level bank — same observe/quantile API, same guarantees.
     """
 
     def __init__(self, window: int = WINDOW, shards: int = 0):
-        self._mod = dyadic_sharded if shards else dyadic
-        self.state = (dyadic_sharded.init(BITS, shards,
-                                          total_counters=BUDGET)
-                      if shards else dyadic.init(BITS,
-                                                 total_counters=BUDGET))
-        self.fifo = collections.deque()
-        self.window = window
-        self._pending_items = []
-        self._pending_weights = []
+        spec = SketchSpec(kind="quantile", bits=BITS, k=BUDGET,
+                          shards=shards or None)
+        # donate=False: .state below is public, so ingest must not
+        # consume buffers a caller may still hold (accelerator donation)
+        self.session = StreamSession(spec, block=BLOCK, window=window,
+                                     donate=False)
 
     def observe(self, bucket: int) -> None:
-        self._pending_items.append(bucket)
-        self._pending_weights.append(1)
-        self.fifo.append(bucket)
-        if len(self.fifo) > self.window:
-            self._pending_items.append(self.fifo.popleft())
-            self._pending_weights.append(-1)  # bounded deletion (expiry)
-        # one observe() can append two entries (insert + expiry), so
-        # trigger a flush one short of the block capacity
-        if len(self._pending_items) >= BLOCK - 1:
-            self.flush()
-
-    def flush(self) -> None:
-        if not self._pending_items:
-            return
-        items = np.zeros(BLOCK, np.int32)
-        weights = np.zeros(BLOCK, np.int32)  # zero-weight tail = padding
-        n = len(self._pending_items)
-        assert n <= BLOCK
-        items[:n] = self._pending_items
-        weights[:n] = self._pending_weights
-        self.state = self._mod.update_block(
-            self.state, jnp.asarray(items), jnp.asarray(weights))
-        self._pending_items.clear()
-        self._pending_weights.clear()
+        self.session.observe(bucket)  # insert + scheduled expiry deletion
 
     def quantile(self, q: float) -> float:
-        self.flush()
-        return self._mod.quantile(self.state, q) / SCALE
+        return self.session.quantile(q) / SCALE
+
+    @property
+    def state(self):
+        self.session.flush()
+        return self.session.state
 
 
 def main():
@@ -120,7 +96,7 @@ def main():
           f"(|F|1 = {int(mon.state.mass)} = window size).")
     if args.shards:
         # checkpoint compaction: fold shards back to one DyadicState
-        cons = dyadic_sharded.consolidate(mon.state)
+        cons = mon.session.consolidated()
         p95c = dyadic.quantile(cons, 0.95) / SCALE
         print(f"consolidated ({args.shards} shards -> 1 bank): "
               f"p95 {p95c:.2f}")

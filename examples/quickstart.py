@@ -3,16 +3,18 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers: the exact reference sketches (paper Algs 1-4 on the two-heap
-structure), the TPU-adapted JAX sketch (dense counter store), bounded-
-deletion accounting, mergeability, and the quantile sketch (DSS±).
+structure), the spec-driven JAX surface (`repro.sketch.api`: one
+SketchSpec for frequencies AND quantiles, single-host or hash-sharded),
+the stateful StreamSession (buffering + windowed bounded deletions),
+mergeability, and checkpoint round trips.
 """
+import dataclasses
+
 import numpy as np
 
-import jax.numpy as jnp
-
 # --- 1. the paper's reference implementation (two heaps + dict) ----------
-from repro.core import SpaceSavingPM, LazySpaceSavingPM, capacity_for
-from repro.core.streams import bounded_stream, exact_stats
+from repro.core import SpaceSavingPM, capacity_for
+from repro.core.streams import bounded_stream
 
 eps, alpha = 0.01, 2.0           # accuracy 1%, at most half the stream deleted
 sketch = SpaceSavingPM(capacity_for(eps, alpha))        # 2*alpha/eps counters
@@ -31,31 +33,41 @@ bound = eps * (I - D)
 errs = [abs(sketch.query(int(i)) - int(f[i])) for i in top_true]
 print(f"errors {errs} all <= eps*(I-D) = {bound:.0f}:", all(e <= bound for e in errs))
 
-# --- 2. the TPU-adapted JAX sketch (vectorized dense store) ---------------
-from repro.sketch import init, block_update, topk, merge
+# --- 2. the spec-driven JAX surface: one spec, every backend --------------
+from repro.sketch import SketchSpec, StreamSession, api
 
-state = init(capacity_for(eps, alpha))
-items = jnp.asarray(stream[:, 0], jnp.int32)
-weights = jnp.asarray(stream[:, 1], jnp.int32)
+spec = SketchSpec(kind="frequency", eps=eps, alpha=alpha,  # Thm-4 sizing
+                  bits=16)                                 # universe [0, 2^16)
+state = api.make(spec)
 for s in range(0, len(stream) - 8192 + 1, 8192):
-    state = block_update(state, items[s:s + 8192], weights[s:s + 8192])
-ids, counts = topk(state, 5)
+    state = api.update(spec, state, stream[s:s + 8192, 0],
+                       stream[s:s + 8192, 1])
+ids, counts = api.topk(spec, state, 5)
 print("jax sketch top-5:", list(zip(np.asarray(ids).tolist(),
                                     np.asarray(counts).tolist())))
 
+# the same spec hash-sharded over 4 banks: one field, same surface
+sh_spec = dataclasses.replace(spec, k=512, eps=None, shards=4)
+sh = StreamSession(sh_spec, block=8192)       # buffering + padding built in
+sh.extend(stream[:, 0], stream[:, 1])
+print("sharded top-3 :", np.asarray(sh.topk(3)[0]).tolist())
+
 # --- 3. mergeability (the distributed-reduce property) --------------------
 half = len(stream) // 2
-a, b = init(512), init(512)
-a = block_update(a, items[:half], weights[:half])
-b = block_update(b, items[half:], weights[half:])
-merged = merge(a, b)
-print("merged top-3:", np.asarray(topk(merged, 3)[0]).tolist())
+m_spec = dataclasses.replace(spec, k=512, eps=None)
+a = api.update(m_spec, api.make(m_spec), stream[:half, 0], stream[:half, 1])
+b = api.update(m_spec, api.make(m_spec), stream[half:, 0], stream[half:, 1])
+merged = api.merge(m_spec, a, b)
+print("merged top-3:", np.asarray(api.topk(m_spec, merged, 3)[0]).tolist())
+
+# ... and checkpointing: a tagged numpy dict, restored bit-identically
+restored = api.restore(m_spec, api.save(m_spec, merged))
+assert np.array_equal(np.asarray(restored.ids), np.asarray(merged.ids))
 
 # --- 4. quantiles in the bounded-deletion model (DSS±) --------------------
-from repro.core.quantiles import make_dss_pm
-
-q = make_dss_pm(bits=16, eps=0.05, alpha=2.0)
-q.process(stream)
-print("median estimate:", q.quantile(0.5),
-      "| p99 estimate:", q.quantile(0.99))
+q_spec = SketchSpec(kind="quantile", bits=16, eps=0.05, alpha=alpha)
+qs = StreamSession(q_spec, block=8192)
+qs.extend(stream[:, 0], stream[:, 1])
+print("median estimate:", qs.quantile(0.5),
+      "| p99 estimate:", qs.quantile(0.99))
 print("done.")

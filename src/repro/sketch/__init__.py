@@ -25,8 +25,16 @@ Layered package (DESIGN.md §9-§10):
     global queries (DESIGN.md §9);
   * ``dyadic_sharded`` — the composition: mesh-distributed Dyadic
     SpaceSaving± (shard × level rows, owner-shard rank/quantile);
-  * ``jax_sketch`` — backward-compat shim re-exporting every historical
-    name from the layer modules.
+  * ``api``     — the spec-driven public surface (DESIGN.md §11): one
+    frozen :class:`SketchSpec` (kind × sizing × variant × shards ×
+    backend) resolved through an adapter registry to every layout
+    above, with uniform update/query/topk/rank/merge/save/restore;
+  * ``session`` — :class:`StreamSession`, the stateful companion:
+    host-side block buffering and padding, cached jitted ingest per
+    (spec, block), windowed bounded-deletion scheduling;
+  * ``jax_sketch`` — DEPRECATED backward-compat shim re-exporting every
+    historical name from the layer modules (imported lazily; importing
+    it warns).
 
 All ops are pure functions, jit/vmap/scan-compatible.
 """
@@ -35,11 +43,13 @@ from . import (
     blocks,
     dyadic,
     dyadic_sharded,
-    jax_sketch,
     phases,
     sharded,
     state,
 )
+from . import api, session
+from .api import SketchSpec
+from .session import StreamSession
 from .blocks import (
     apply_update,
     block_partition_stats,
@@ -72,7 +82,23 @@ from .state import (
     topk,
 )
 
+
+def __getattr__(name):
+    # the jax_sketch shim imports lazily so that `import repro.sketch`
+    # stays warning-free; touching the shim itself fires its
+    # DeprecationWarning exactly once (module import is cached).
+    if name == "jax_sketch":
+        import importlib
+
+        return importlib.import_module(f"{__name__}.jax_sketch")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "api",
+    "session",
+    "SketchSpec",
+    "StreamSession",
     "bank",
     "blocks",
     "dyadic",

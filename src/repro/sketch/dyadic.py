@@ -57,6 +57,7 @@ from repro.core.quantiles import dyadic_layer_capacities
 from . import bank as bk
 from .blocks import block_update_batched, block_update_serial
 from .state import VARIANT_SSPM, SketchState, query_many
+from .state import merge as state_merge
 
 
 class DyadicState(NamedTuple):
@@ -281,3 +282,36 @@ def quantile_many(state: DyadicState, qs: jax.Array) -> jax.Array:
 
 def quantile(state: DyadicState, q: float) -> int:
     return int(quantile_many(state, jnp.asarray([q], jnp.float32))[0])
+
+
+def __getattr__(name):
+    # the pre-redesign client-specific spelling: resolves to the same
+    # update_block, warns (once) toward the spec-driven surface.
+    if name == "ingest":
+        from .api import deprecated_alias
+
+        globals()["ingest"] = deprecated_alias(
+            "repro.sketch.dyadic.ingest",
+            "repro.sketch.api.update(SketchSpec(kind='quantile', ...), ...)",
+            update_block)
+        return globals()["ingest"]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Merge: layer-wise mergeable-summaries reduction
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def merge(a: DyadicState, b: DyadicState) -> DyadicState:
+    """Layer-wise merge of two same-shape dyadic banks; masses add.
+
+    Layer l of either bank monitored the same ``x >> l`` node stream, so
+    the pairing is exact (``state.merge`` per layer, BLOCKED-aware —
+    merged rows relax to full capacity k, never less accuracy) and the
+    rank guarantee degrades only by the standard merged-summary bounds.
+    """
+    return DyadicState(
+        bank=jax.vmap(state_merge)(a.bank, b.bank),
+        mass=a.mass + b.mass,
+    )

@@ -15,9 +15,18 @@ Every historical ``repro.sketch.jax_sketch`` name (public and the
 underscore-prefixed internals other modules grew to depend on) resolves
 here to the *same object* as in its new home module — pinned by
 tests/test_sketch_package.py. New code should import from the layer
-modules (or ``repro.sketch``) directly.
+modules (or ``repro.sketch``) directly; importing this shim emits a
+DeprecationWarning (once per process — module imports are cached).
 """
 from __future__ import annotations
+
+import warnings
+
+warnings.warn(
+    "repro.sketch.jax_sketch is a deprecated backward-compat shim; import "
+    "from the layer modules (repro.sketch.state/phases/blocks) or use the "
+    "spec-driven surface (repro.sketch.api / StreamSession)",
+    DeprecationWarning, stacklevel=2)
 
 from .blocks import (
     BlockPartition,

@@ -1,0 +1,358 @@
+"""StreamSession: the stateful host-side companion of the sketch API.
+
+Every consumer of the sketch package used to hand-roll the same glue:
+``stats._SketchBank`` chunked-and-padded batches to a fixed block,
+``examples/quantile_monitor.py`` buffered observations and scheduled
+sliding-window expiry deletions, and the benches re-spelled the
+pad-and-feed loop per script.  :class:`StreamSession` owns that
+machinery once, on top of the functional ``repro.sketch.api`` surface:
+
+  * **block buffering** — ``observe``/``extend`` accumulate updates
+    host-side (numpy, no per-item python lists for array input) and
+    flush full fixed-size blocks, zero-weight padding the tail, so the
+    jitted ingest traces ONE (spec, block) shape;
+  * **cached jitted ingest** — one compiled update per (spec, block),
+    shared across sessions via a process-lifetime cache keyed on the
+    hashable spec (intentionally unbounded: evicting would silently
+    retrace live sessions); state buffers are donated on accelerators
+    (the CPU backend cannot reuse donated buffers, so donation is
+    skipped there to avoid the per-call warning);
+  * **windowed deletion scheduling** — the paper's bounded-deletion
+    regime by construction: ``push`` expires whole batches after
+    ``window`` pushes (the stats trackers), ``observe`` expires
+    individual items after ``window`` observations (the quantile
+    monitor); expiries re-ingest with negated weights and the
+    insertion/deletion totals track the empirical alpha;
+  * **queries / merge / checkpointing** — thin delegations to the api
+    (each flushes pending updates first), with ``save``/``load``
+    speaking the tagged checkpoint dicts *and* the pre-redesign stats
+    layouts (``api.infer_spec`` adapts kind/shards to what the dict
+    actually holds).
+
+Ingest through a session is bit-identical to calling ``api.update``
+(and therefore the direct engine/client spellings) on the same padded
+blocks — the session adds scheduling, never semantics.  Measured
+overhead at the headline bench cells is <5% vs the raw fused engine
+call (BENCH_sharded.json / BENCH_quantiles.json ``session_overhead``).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from . import api
+from .api import SketchSpec
+
+
+@functools.lru_cache(maxsize=None)
+def _ingest_fn(spec: SketchSpec, block: int, donate: bool = True):
+    """The compiled (state, items, weights) -> state ingest for one
+    (spec, block, donate) cell — cached for the process lifetime so
+    every session (and bench) of that cell shares one trace (unbounded
+    on purpose: an eviction would silently retrace a live session).
+
+    ``donate=True`` donates the state buffers on accelerators (the CPU
+    backend cannot reuse donated buffers, so donation is skipped there):
+    ingest then consumes the previous state, and any reference a caller
+    captured before the update dies with it.  Callers that EXPOSE their
+    state to consumers (the stats trackers' public ``.state``) pass
+    ``donate=False`` to keep captured references valid, matching the
+    pre-redesign behavior."""
+
+    def ingest(state, items, weights):
+        return api.adapter_for(spec).update(spec, state, items, weights)
+
+    donate_args = (0,) if donate and jax.default_backend() != "cpu" else ()
+    return jax.jit(ingest, donate_argnums=donate_args)
+
+
+class StreamSession:
+    """Stateful streaming front-end over one :class:`SketchSpec`.
+
+    ``block``: fixed ingest block length (one compilation per spec).
+    ``window``: optional bounded-deletion horizon — in *pushes* for the
+    batch path (``push``), in *observations* for the item path
+    (``observe``).  ``state``: resume from an existing backend state
+    (e.g. a restored checkpoint) instead of an empty one.
+    """
+
+    def __init__(self, spec: SketchSpec, block: int = 8192,
+                 window: Optional[int] = None, state=None,
+                 donate: bool = True):
+        if block < 2:
+            raise ValueError(f"block must be >= 2, got {block}")
+        self.spec = spec
+        self.block = int(block)
+        self.window = window
+        self.donate = donate
+        self.state = state if state is not None else api.make(spec)
+        # resolve the cached compiled ingest ONCE — ingest_block stays a
+        # plain dispatch (the <5% overhead budget of DESIGN.md §11)
+        self._compiled = _ingest_fn(spec, self.block, donate)
+        self.insertions = 0
+        self.deletions = 0
+        # buffered (items, weights) fragments awaiting a flush
+        self._buf_i: List[np.ndarray] = []
+        self._buf_w: List[np.ndarray] = []
+        self._buf_n = 0
+        # windowed-deletion queues (batch- and item-granularity)
+        self._batch_fifo: Deque[Tuple[np.ndarray, np.ndarray]] = (
+            collections.deque())
+        self._item_fifo: Deque[Tuple[int, int]] = collections.deque()
+
+    # -- low-level ingest --------------------------------------------------
+
+    def ingest_block(self, items, weights) -> None:
+        """Feed ONE exactly block-sized, already-padded block (hot path).
+
+        No buffering, no conversions — jit canonicalizes numpy/jax
+        array operands itself (a host ``jnp.asarray`` here costs ~30µs
+        per operand for nothing). This is the call the session-overhead
+        bench races against the raw engine launch.
+        """
+        self.state = self._compiled(self.state, items, weights)
+
+    def ingest(self, items, weights) -> None:
+        """Validate, chunk to the session block, pad, and ingest now.
+
+        Validation runs on the RAW arrays (casting first would wrap
+        64-bit ids / truncate floats silently, defeating the checks);
+        the int32 cast happens after it proves lossless.
+        """
+        items = np.asarray(items).ravel()
+        weights = np.asarray(weights).ravel()
+        api.validate_block(self.spec, items, weights)
+        items = items.astype(np.int32)
+        weights = weights.astype(np.int32)
+        for s in range(0, len(items), self.block):
+            ci = items[s:s + self.block]
+            cw = weights[s:s + self.block]
+            pad = self.block - len(ci)
+            if pad:
+                ci = np.pad(ci, (0, pad))  # weight-0 tail = padding
+                cw = np.pad(cw, (0, pad))
+            self.ingest_block(ci, cw)
+
+    # -- buffered streaming ------------------------------------------------
+
+    def extend(self, items, weights=None) -> None:
+        """Buffer a fragment of signed weighted updates; auto-flush full
+        blocks. ``weights=None`` = unit inserts.
+
+        As in ``ingest``: validate raw, cast after (a pre-cast would
+        silently wrap 64-bit ids and truncate float weights).
+        """
+        items = np.asarray(items).ravel()
+        if weights is None:
+            weights = np.ones(len(items), np.int32)
+        else:
+            weights = np.asarray(weights).ravel()
+        api.validate_block(self.spec, items, weights)
+        self._append(items.astype(np.int32), weights.astype(np.int32))
+
+    def _append(self, items: np.ndarray, weights: np.ndarray) -> None:
+        """Pre-validated int32 fragments -> buffer, auto-flushing."""
+        self._buf_i.append(items)
+        self._buf_w.append(weights)
+        self._buf_n += len(items)
+        if self._buf_n >= self.block:
+            self._drain(keep_partial=True)
+
+    def observe(self, item: int, weight: int = 1) -> None:
+        """One observation; with ``window`` set, expire the observation
+        that falls off the horizon (bounded deletion).
+
+        Validates the scalar inline (the full ``validate_block`` per
+        single item would dominate this path) and BEFORE touching any
+        session state, so a rejected observation never poisons the
+        expiry FIFO or the insertion totals.
+        """
+        item = int(item)
+        weight = int(weight)
+        if item < 0:
+            raise ValueError(
+                f"negative item id {item}: ids must be >= 0 (negative ids "
+                f"are the EMPTY/BLOCKED sentinels)")
+        if self.spec.kind == "quantile" and item >= (1 << self.spec.bits):
+            raise ValueError(
+                f"item {item} is outside the dyadic universe "
+                f"[0, 2^{self.spec.bits}); raise SketchSpec.bits or bucket "
+                f"ids before ingest")
+        expire = (self.window is not None
+                  and len(self._item_fifo) >= self.window)
+        if expire:
+            old_i, old_w = self._item_fifo[0]
+            frag_i = np.asarray([item, old_i], np.int32)
+            frag_w = np.asarray([weight, -old_w], np.int32)
+        else:
+            frag_i = np.asarray([item], np.int32)
+            frag_w = np.asarray([weight], np.int32)
+        self._append(frag_i, frag_w)
+        self.insertions += weight
+        if self.window is not None:
+            self._item_fifo.append((item, weight))
+            if expire:
+                self._item_fifo.popleft()
+                self.deletions += old_w
+
+    def flush(self) -> None:
+        """Ingest everything buffered (padding the final partial block)."""
+        self._drain(keep_partial=False)
+
+    def _drain(self, keep_partial: bool) -> None:
+        if not self._buf_n:
+            return
+        items = np.concatenate(self._buf_i) if len(self._buf_i) > 1 \
+            else self._buf_i[0]
+        weights = np.concatenate(self._buf_w) if len(self._buf_w) > 1 \
+            else self._buf_w[0]
+        n_full = (len(items) // self.block) * self.block
+        for s in range(0, n_full, self.block):
+            self.ingest_block(items[s:s + self.block],
+                              weights[s:s + self.block])
+        tail = len(items) - n_full
+        if not keep_partial and tail:
+            pad = self.block - tail
+            self.ingest_block(np.pad(items[n_full:], (0, pad)),
+                              np.pad(weights[n_full:], (0, pad)))
+        keep_tail = keep_partial and tail
+        rest_i = items[n_full:] if keep_tail else items[:0]
+        rest_w = weights[n_full:] if keep_tail else weights[:0]
+        self._buf_i = [rest_i] if len(rest_i) else []
+        self._buf_w = [rest_w] if len(rest_w) else []
+        self._buf_n = len(rest_i)
+
+    # -- windowed batch scheduling (the stats trackers' machinery) ---------
+
+    def push(self, items, weights) -> None:
+        """Ingest one aggregated batch NOW and schedule its expiry.
+
+        After ``window`` further pushes the batch re-ingests with
+        negated weights — at most 1/window of the live mass deleted per
+        step, the exact alpha <= 2 regime Thm 4 sizes capacity for.
+        Immediate ingest keeps the block sequence — and therefore the
+        sketch state — bit-identical to the pre-session stats trackers;
+        anything still buffered from ``extend``/``observe`` flushes
+        FIRST so a mixed-use session never reorders a push's deletions
+        ahead of buffered insertions.  (Counters track pushed batches
+        only: ``extend`` is raw streaming, outside the window
+        accounting.)
+        """
+        self.flush()
+        items = np.asarray(items).ravel()
+        weights = np.asarray(weights).ravel()
+        self.ingest(items, weights)  # validates raw, casts internally
+        items = items.astype(np.int32)
+        weights = weights.astype(np.int32)
+        self.insertions += int(weights.sum())
+        if self.window is None:
+            return
+        self._batch_fifo.append((items, weights))
+        while len(self._batch_fifo) > self.window:
+            di, dw = self._batch_fifo.popleft()
+            self.ingest(di, -dw)
+            self.deletions += int(dw.sum())
+
+    @property
+    def batch_fifo(self) -> Deque[Tuple[np.ndarray, np.ndarray]]:
+        """Live (items, weights) batches awaiting expiry (checkpointed by
+        the stats trackers)."""
+        return self._batch_fifo
+
+    @property
+    def alpha_bound(self) -> float:
+        """Empirical alpha = I / (I - D) (paper Table 2)."""
+        live = max(self.insertions - self.deletions, 1)
+        return self.insertions / live
+
+    # -- queries (flush first: a query sees every prior update) ------------
+
+    def query_many(self, items) -> jax.Array:
+        self.flush()
+        return api.query_many(self.spec, self.state, items)
+
+    def query(self, item) -> jax.Array:
+        self.flush()
+        return api.query(self.spec, self.state, item)
+
+    def topk(self, m: int) -> Tuple[jax.Array, jax.Array]:
+        self.flush()
+        return api.topk(self.spec, self.state, m)
+
+    def rank_many(self, xs) -> jax.Array:
+        self.flush()
+        return api.rank_many(self.spec, self.state, xs)
+
+    def rank(self, x) -> int:
+        self.flush()
+        return api.rank(self.spec, self.state, x)
+
+    def quantile_many(self, qs) -> jax.Array:
+        self.flush()
+        return api.quantile_many(self.spec, self.state, qs)
+
+    def quantile(self, q: float) -> int:
+        self.flush()
+        return api.quantile(self.spec, self.state, q)
+
+    # -- merge / consolidation / checkpointing -----------------------------
+
+    def merge_from(self, other: "StreamSession") -> None:
+        """Cross-host reduction (mergeable summaries); counters add.
+
+        Specs must agree on everything but ``backend`` (an execution
+        path, not a layout): merging different k/variant/bits/shards
+        would either break the guarantees silently (variant) or die in
+        a shape error deep inside ``state.merge`` (k).
+        """
+        import dataclasses
+
+        if dataclasses.replace(self.spec, backend="bank") != \
+                dataclasses.replace(other.spec, backend="bank"):
+            raise ValueError(
+                f"cannot merge sessions of different layouts: "
+                f"{self.spec} vs {other.spec} (only `backend` may differ)")
+        self.flush()
+        other.flush()
+        self.state = api.merge(self.spec, self.state, other.state)
+        self.insertions += other.insertions
+        self.deletions += other.deletions
+
+    def consolidated(self):
+        """Single-host summary (identity when unsharded)."""
+        self.flush()
+        return api.consolidate(self.spec, self.state)
+
+    def save(self) -> dict:
+        """Tagged checkpoint dict of the sketch state (scheduling state —
+        fifos, counters — is the caller's to persist; the stats trackers
+        do)."""
+        self.flush()
+        return api.save(self.spec, self.state)
+
+    def load(self, d: dict) -> None:
+        """Restore from a ``save`` dict or a pre-redesign stats layout,
+        adapting the spec's kind/shards to what the dict holds.
+
+        ALL scheduling state resets together — buffers, expiry FIFOs and
+        the insertion/deletion totals — so the session is never half-old
+        (counters describing batches whose expiries were dropped).
+        Callers that persist scheduling state alongside the sketch (the
+        stats trackers) restore the counters and FIFO after this call.
+        """
+        self._buf_i, self._buf_w, self._buf_n = [], [], 0
+        self._batch_fifo.clear()
+        self._item_fifo.clear()
+        self.insertions = 0
+        self.deletions = 0
+        self.spec = api.infer_spec(self.spec, d)
+        self.state = api.restore(self.spec, d)
+        self._compiled = _ingest_fn(self.spec, self.block, self.donate)
+
+
+__all__ = ["StreamSession", "_ingest_fn"]

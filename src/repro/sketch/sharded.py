@@ -374,6 +374,20 @@ def to_dict(state: ShardedSketch) -> dict:
     return out
 
 
+def __getattr__(name):
+    # the pre-redesign client-specific spelling: resolves to the same
+    # update_block, warns (once) toward the spec-driven surface.
+    if name == "ingest":
+        from .api import deprecated_alias
+
+        globals()["ingest"] = deprecated_alias(
+            "repro.sketch.sharded.ingest",
+            "repro.sketch.api.update(SketchSpec(kind='frequency', "
+            "shards=S, ...), ...)", update_block)
+        return globals()["ingest"]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "ShardedSketch",
     "init",

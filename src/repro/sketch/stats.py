@@ -1,43 +1,47 @@
 """Framework integrations of the SS± sketch: token statistics and MoE
 expert-load tracking over sliding windows (bounded deletions by design).
 
-Both classes follow the same pattern:
-  - insertions: each new batch's items are block-ingested (weighted);
-  - deletions: when a batch falls out of the ``window`` horizon, its
-    (aggregated) items are re-ingested with negated weights.
-Per window step at most 1/window of the live mass is deleted, so the
-stream is bounded-deletion with alpha = window/(window-1) per step and
-alpha <= 2 cumulatively for window >= 2 — the exact regime the paper's
-Thm 4 sizes capacity for (2*alpha/eps counters).
-
-The sketch state is pure JAX (repro.sketch.state / blocks) and is part
-of the training checkpoint; sketches merge across data-parallel hosts
-with the mergeable-summaries merge (state.merge), giving the global view
-the paper's distributed-setting footnote describes.
+Both trackers are now thin clients of the spec-driven sketch API: each
+owns one :class:`repro.sketch.session.StreamSession` built from a
+:class:`repro.sketch.api.SketchSpec` and delegates every mechanism the
+session provides — fixed-block chunk-and-pad ingest, the cached jitted
+update per (spec, block), windowed expiry scheduling (each push expires
+after ``window`` further pushes, re-ingested with negated weights:
+at most 1/window of the live mass deleted per step, so alpha <= 2
+cumulatively for window >= 2 — the exact regime Thm 4 sizes capacity
+for), insertion/deletion accounting, merging and consolidation.  What
+remains here is purely domain glue: numpy batch aggregation, the
+report dataclass, and the historical checkpoint layouts.
 
 ``shards=S`` switches either tracker onto the hash-partitioned
-``repro.sketch.sharded`` bank at the same total counter budget: blocks
-route shard-by-hash in one launch (shard_map over the mesh "data" axis
-on real meshes), queries stay merge-error-free, and ``merge_from``
-reduces shard-wise. The default (``shards=None``) keeps the single
-(k,) sketch and its exact checkpoint layout.
+``repro.sketch.sharded`` bank at the same total counter budget (one
+spec field, not a second code path): blocks route shard-by-hash in one
+launch (shard_map over the mesh "data" axis on real meshes), queries
+stay merge-error-free, and ``merge_from`` reduces shard-wise.  The
+default (``shards=None``) keeps the single (k,) sketch and its exact
+checkpoint layout — ``state_dict``/``load_state_dict`` speak the same
+dicts as before the API redesign (plus an inert integer ``layout``
+tag), so old checkpoints load as-is.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Deque, List, Optional, Tuple
+from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.sketch import bank as bk, sharded as shd, state as st
+from . import api
+from . import state as st
+from .session import StreamSession
 
 
 def _aggregate_np(tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     uids, counts = np.unique(np.asarray(tokens).ravel(), return_counts=True)
     return uids.astype(np.int32), counts.astype(np.int32)
+
+
+def _variant_name(variant: int) -> str:
+    return "lazy" if variant == st.VARIANT_LAZY else "sspm"
 
 
 @dataclasses.dataclass
@@ -54,98 +58,107 @@ class StatsReport:
         return self.insertions / live
 
 
-class _SketchBank:
-    """Single-sketch vs hash-sharded backend behind one tiny facade.
+class _WindowedTracker:
+    """Shared session plumbing of TokenStats / ExpertLoadStats.
 
-    Keeps TokenStats/ExpertLoadStats free of per-call branching: both
-    talk to ``update/topk/query_many/merge_from/state_dict``. Either
-    mode now ingests through the SAME unified bank engine
-    (``repro.sketch.bank``): shards=None runs the fused core on a
-    one-row view of the flat (k,) sketch (``bank.update_single``,
-    bit-identical to ``blocks.block_update``), shards=S routes through
-    the hash-sharded client (``repro.sketch.sharded``) at the same
-    total budget — one hot path to optimize, two layouts.
+    One StreamSession (frequency spec, windowed push scheduling) plus
+    the historical attribute surface: settable ``state`` /
+    ``insertions`` / ``deletions`` (the trainer restores them directly)
+    and the pre-redesign ``state_dict`` layout.
     """
 
-    def __init__(self, capacity: int, variant: int,
-                 shards: Optional[int] = None,
-                 universe_bits: Optional[int] = None):
+    def __init__(self, capacity: int, window: int, variant: int, block: int,
+                 shards: Optional[int], universe_bits: Optional[int]):
         self.capacity = capacity
+        self.window = window
         self.variant = variant
-        self.shards = shards
-        self.universe_bits = universe_bits
-        if shards:
-            self.sharded = shd.init(capacity, shards)
-            self.state = None
-        else:
-            self.sharded = None
-            self.state = st.init(capacity)
+        self.block = block
+        spec = api.SketchSpec(
+            kind="frequency", k=capacity, variant=_variant_name(variant),
+            shards=shards or None, bits=universe_bits, backend="bank")
+        # donate=False: the trackers EXPOSE .state publicly (the trainer
+        # captures and re-assigns it), so ingest must not consume the
+        # buffers a consumer may still hold — the pre-redesign behavior.
+        self.bank = StreamSession(spec, block=block, window=window,
+                                  donate=False)
 
-    def update(self, items: jax.Array, weights: jax.Array) -> None:
-        if self.shards:
-            self.sharded = shd.update_block(
-                self.sharded, items, weights, self.variant,
-                universe_bits=self.universe_bits)
-        else:
-            self.state = bk.update_single(self.state, items, weights,
-                                          self.variant, self.universe_bits)
+    # -- historical attribute surface --------------------------------------
 
-    def topk(self, m: int):
-        if self.shards:
-            return shd.topk(self.sharded, m)
-        return st.topk(self.state, m)
+    @property
+    def shards(self) -> Optional[int]:
+        return self.bank.spec.shards
 
-    def query_many(self, items: jax.Array) -> jax.Array:
-        if self.shards:
-            return shd.query_many(self.sharded, items)
-        return st.query_many(self.state, items)
+    @property
+    def state(self):
+        """The underlying (k,) SketchState (single-sketch mode only)."""
+        return None if self.bank.spec.shards else self.bank.state
 
-    def merge_from(self, other: "_SketchBank") -> None:
+    @state.setter
+    def state(self, value) -> None:
+        if self.bank.spec.shards:
+            raise ValueError(
+                f"{type(self).__name__}(shards=S) has no single (k,) state "
+                f"to assign; restore via load_state_dict (bank layout: "
+                f"(S, k) arrays + 'shards')")
+        self.bank.state = value
+
+    @property
+    def insertions(self) -> int:
+        return self.bank.insertions
+
+    @insertions.setter
+    def insertions(self, value: int) -> None:
+        self.bank.insertions = int(value)
+
+    @property
+    def deletions(self) -> int:
+        return self.bank.deletions
+
+    @deletions.setter
+    def deletions(self, value: int) -> None:
+        self.bank.deletions = int(value)
+
+    def query(self, items) -> np.ndarray:
+        return np.asarray(self.bank.query_many(np.asarray(items, np.int32)))
+
+    def merge_from(self, other) -> None:
+        """Cross-host reduction (mergeable summaries; shard-wise when
+        sharded)."""
+        # the session would also reject these, but with its own wording;
+        # these two messages are the tracker's historical error contract
         if bool(self.shards) != bool(other.shards):
             raise ValueError("cannot merge sharded and unsharded trackers")
-        if self.shards:
-            if self.shards != other.shards:
-                raise ValueError(
-                    f"shard count mismatch: {self.shards} != {other.shards}")
-            self.sharded = shd.merge(self.sharded, other.sharded)
-        else:
-            self.state = st.merge(self.state, other.state)
+        if self.shards and self.shards != other.shards:
+            raise ValueError(
+                f"shard count mismatch: {self.shards} != {other.shards}")
+        self.bank.merge_from(other.bank)
 
-    def consolidated(self) -> st.SketchState:
-        """One (k,)-counter summary (checkpoint compaction for sharded)."""
-        if self.shards:
-            return shd.consolidate(self.sharded)
-        return self.state
+    # -- checkpointing: the pre-redesign layouts, verbatim ------------------
 
-    # checkpointing — the unsharded layout is unchanged from before the
-    # sharded tier existed, so old checkpoints load as-is.
     def state_dict(self) -> dict:
-        s = self.sharded.bank if self.shards else self.state
-        d = {
-            "ids": np.asarray(s.ids),
-            "counts": np.asarray(s.counts),
-            "errors": np.asarray(s.errors),
-        }
-        if self.shards:
-            d["shards"] = self.shards
+        d = self.bank.save()
+        d.update(
+            insertions=self.bank.insertions,
+            deletions=self.bank.deletions,
+            fifo_u=[u for u, _ in self.bank.batch_fifo],
+            fifo_c=[c for _, c in self.bank.batch_fifo],
+        )
         return d
 
     def load_state_dict(self, d: dict) -> None:
-        fields = st.SketchState(
-            ids=jnp.asarray(d["ids"]), counts=jnp.asarray(d["counts"]),
-            errors=jnp.asarray(d["errors"]),
-        )
-        if d.get("shards"):
-            self.shards = int(d["shards"])
-            self.sharded = shd.ShardedSketch(bank=fields)
-            self.state = None
-        else:
-            self.shards = None
-            self.sharded = None
-            self.state = fields
+        # hard-index the scheduling keys (as the pre-redesign code did):
+        # a bare api.save() dict lacks them, and silently zeroing the
+        # window accounting would corrupt alpha_bound / hot-set reports
+        self.bank.load(d)  # adapts spec shards to the stored layout
+        self.bank.insertions = int(d["insertions"])
+        self.bank.deletions = int(d["deletions"])
+        fifo = self.bank.batch_fifo
+        fifo.clear()
+        fifo.extend((np.asarray(u), np.asarray(c))
+                    for u, c in zip(d["fifo_u"], d["fifo_c"]))
 
 
-class TokenStats:
+class TokenStats(_WindowedTracker):
     """SS± heavy-token tracking over a sliding window of batches."""
 
     def __init__(
@@ -157,54 +170,12 @@ class TokenStats:
         shards: Optional[int] = None,
         universe_bits: Optional[int] = None,
     ):
-        self.capacity = capacity
-        self.window = window
-        self.variant = variant
-        self.block = block
-        self.bank = _SketchBank(capacity, variant, shards, universe_bits)
-        self._fifo: Deque[Tuple[np.ndarray, np.ndarray]] = collections.deque()
-        self.insertions = 0
-        self.deletions = 0
-
-    @property
-    def state(self):
-        """The underlying (k,) SketchState (single-sketch mode only)."""
-        return self.bank.state
-
-    @state.setter
-    def state(self, value) -> None:
-        if self.bank.shards:
-            raise ValueError(
-                "TokenStats(shards=S) has no single (k,) state to assign; "
-                "restore via load_state_dict (bank layout: (S, k) arrays + "
-                "'shards')")
-        self.bank.state = value
-
-    @property
-    def shards(self) -> Optional[int]:
-        return self.bank.shards
-
-    def _ingest(self, uids: np.ndarray, weights: np.ndarray) -> None:
-        # pad to the fixed block length so the jitted update never retraces
-        n = len(uids)
-        for s in range(0, n, self.block):
-            chunk_u = uids[s : s + self.block]
-            chunk_w = weights[s : s + self.block]
-            pad = self.block - len(chunk_u)
-            if pad:
-                chunk_u = np.pad(chunk_u, (0, pad), constant_values=0)
-                chunk_w = np.pad(chunk_w, (0, pad), constant_values=0)
-            self.bank.update(jnp.asarray(chunk_u), jnp.asarray(chunk_w))
+        super().__init__(capacity, window, variant, block, shards,
+                         universe_bits)
 
     def update(self, tokens) -> None:
         uids, counts = _aggregate_np(np.asarray(tokens))
-        self._ingest(uids, counts)
-        self.insertions += int(counts.sum())
-        self._fifo.append((uids, counts))
-        while len(self._fifo) > self.window:
-            du, dc = self._fifo.popleft()
-            self._ingest(du, -dc)
-            self.deletions += int(dc.sum())
+        self.bank.push(uids, counts)
 
     def topk(self, m: int = 16) -> StatsReport:
         ids, counts = self.bank.topk(min(m, self.capacity))
@@ -213,38 +184,8 @@ class TokenStats:
             insertions=self.insertions, deletions=self.deletions,
         )
 
-    def query(self, items) -> np.ndarray:
-        return np.asarray(
-            self.bank.query_many(jnp.asarray(items, jnp.int32)))
 
-    def merge_from(self, other: "TokenStats") -> None:
-        """Cross-host reduction (mergeable summaries; shard-wise when
-        sharded)."""
-        self.bank.merge_from(other.bank)
-        self.insertions += other.insertions
-        self.deletions += other.deletions
-
-    # checkpointing
-    def state_dict(self) -> dict:
-        d = self.bank.state_dict()
-        d.update(
-            insertions=self.insertions,
-            deletions=self.deletions,
-            fifo_u=[u for u, _ in self._fifo],
-            fifo_c=[c for _, c in self._fifo],
-        )
-        return d
-
-    def load_state_dict(self, d: dict) -> None:
-        self.bank.load_state_dict(d)
-        self.insertions = int(d["insertions"])
-        self.deletions = int(d["deletions"])
-        self._fifo = collections.deque(
-            (np.asarray(u), np.asarray(c)) for u, c in zip(d["fifo_u"], d["fifo_c"])
-        )
-
-
-class ExpertLoadStats:
+class ExpertLoadStats(_WindowedTracker):
     """SS± over the (expert-id) stream of a MoE model.
 
     Ingests the per-step ``expert_counts`` aux ((E,) int32 routed-token
@@ -257,34 +198,14 @@ class ExpertLoadStats:
                  window: int = 128, variant: int = st.VARIANT_SSPM,
                  shards: Optional[int] = None):
         self.E = num_experts
-        self.capacity = capacity or max(8, num_experts // 2)
-        self.window = window
-        self.variant = variant
-        self.bank = _SketchBank(
-            self.capacity, variant, shards,
+        super().__init__(
+            capacity or max(8, num_experts // 2), window, variant,
+            block=max(num_experts, 2), shards=shards,
             universe_bits=max(int(num_experts - 1).bit_length(), 1))
-        self._fifo: Deque[np.ndarray] = collections.deque()
-        self._ids = jnp.arange(num_experts, dtype=jnp.int32)
-        self.insertions = 0
-        self.deletions = 0
-
-    @property
-    def state(self):
-        return self.bank.state
-
-    @property
-    def shards(self) -> Optional[int]:
-        return self.bank.shards
+        self._ids = np.arange(num_experts, dtype=np.int32)
 
     def update(self, expert_counts) -> None:
-        w = jnp.asarray(expert_counts, jnp.int32)
-        self.bank.update(self._ids, w)
-        self.insertions += int(np.asarray(expert_counts).sum())
-        self._fifo.append(np.asarray(expert_counts))
-        while len(self._fifo) > self.window:
-            old = self._fifo.popleft()
-            self.bank.update(self._ids, -jnp.asarray(old, jnp.int32))
-            self.deletions += int(old.sum())
+        self.bank.push(self._ids, np.asarray(expert_counts, np.int32))
 
     def hot_experts(self, phi: float = 0.125) -> StatsReport:
         """Experts with windowed load >= phi * live mass (paper's phi-HH)."""

@@ -1,0 +1,440 @@
+"""Unit tests of the spec-driven sketch API surface itself.
+
+Parity with the direct spellings lives in tests/test_api_parity.py;
+this file covers the contract around it: spec validation, the
+``validate_block`` error paths (one test per actionable message), the
+deprecation shims (jax_sketch import, client ``ingest`` aliases, the
+``path=`` spelling), checkpoint round-trips through ``api.save`` /
+``restore`` for every layout — through ``train/checkpoint.py`` npz
+round-trips included — plus loading of the pre-redesign stats layouts,
+and the StreamSession scheduling semantics (windowed bounded-deletion
+accounting).
+"""
+import dataclasses
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch import api, dyadic, dyadic_sharded as dysh, \
+    sharded as shd, state as st
+from repro.sketch.session import StreamSession
+
+BITS = 8
+
+
+def _freq_spec(**kw):
+    kw.setdefault("kind", "frequency")
+    kw.setdefault("k", 64)
+    kw.setdefault("bits", BITS)
+    return api.SketchSpec(**kw)
+
+
+def _all_specs():
+    for kind in api.KINDS:
+        for shards in (None, 4):
+            for variant in api.VARIANTS:
+                yield api.SketchSpec(
+                    kind=kind, k=64 if kind == "frequency" else 256,
+                    variant=variant, shards=shards, bits=BITS)
+
+
+def _fed_state(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    items = rng.integers(0, 1 << BITS, 256).astype(np.int32)
+    state = api.make(spec)
+    return api.update(spec, state, items, np.ones(256, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# SketchSpec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_kind_variant_backend():
+    with pytest.raises(ValueError, match="kind must be one of"):
+        api.SketchSpec(kind="histogram", k=8)
+    with pytest.raises(ValueError, match="variant must be one of"):
+        api.SketchSpec(k=8, variant="sspm2")
+    with pytest.raises(ValueError, match="backend must be one of"):
+        api.SketchSpec(k=8, backend="tpu")
+
+
+def test_spec_requires_exactly_one_sizing():
+    with pytest.raises(ValueError, match="exactly one of k"):
+        api.SketchSpec(k=8, eps=0.1)
+    with pytest.raises(ValueError, match="exactly one of k"):
+        api.SketchSpec()
+
+
+def test_spec_quantile_needs_bits_and_limits_backends():
+    with pytest.raises(ValueError, match="needs bits"):
+        api.SketchSpec(kind="quantile", k=64)
+    with pytest.raises(ValueError, match="not supported"):
+        api.SketchSpec(kind="quantile", k=64, bits=8, shards=4,
+                       backend="kernel")
+
+
+def test_spec_eps_sizing_matches_paper_helpers():
+    from repro.core.spacesaving import capacity_for
+
+    assert _freq_spec(k=None, eps=0.01, alpha=2.0).capacity == \
+        capacity_for(0.01, 2.0, "ss_pm")
+    assert _freq_spec(k=None, eps=0.01, alpha=2.0,
+                      variant="lazy").capacity == \
+        capacity_for(0.01, 2.0, "lazy")
+    from repro.core.quantiles import dyadic_layer_capacities
+
+    q = api.SketchSpec(kind="quantile", bits=BITS, eps=0.1, alpha=2.0)
+    assert q.layer_capacities() == dyadic_layer_capacities(BITS, eps=0.1,
+                                                           alpha=2.0)
+
+
+# ---------------------------------------------------------------------------
+# validate_block: one actionable error per convention
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_negative_ids():
+    spec = _freq_spec()
+    with pytest.raises(ValueError, match="negative item id -3"):
+        api.validate_block(spec, np.asarray([1, -3, 2]),
+                           np.asarray([1, 1, 1]))
+
+
+def test_validate_allows_negative_ids_as_zero_weight_padding():
+    # the documented padding convention: weight 0 ignores the id's value
+    spec = _freq_spec()
+    api.validate_block(spec, np.asarray([1, 7, 2]), np.asarray([1, 0, 1]))
+
+
+def test_validate_rejects_shape_mismatch_and_non_1d():
+    spec = _freq_spec()
+    with pytest.raises(ValueError, match="length mismatch"):
+        api.validate_block(spec, np.arange(4), np.ones(3, np.int32))
+    with pytest.raises(ValueError, match="must be 1-D"):
+        api.validate_block(spec, np.ones((2, 2), np.int32),
+                           np.ones((2, 2), np.int32))
+
+
+def test_validate_rejects_float_dtypes():
+    spec = _freq_spec()
+    with pytest.raises(ValueError, match="integer arrays"):
+        api.validate_block(spec, np.asarray([1.5, 2.0]),
+                           np.asarray([1, 1]))
+
+
+def test_validate_rejects_out_of_universe_for_quantile():
+    spec = api.SketchSpec(kind="quantile", k=64, bits=4)
+    with pytest.raises(ValueError, match=r"outside the dyadic universe"):
+        api.validate_block(spec, np.asarray([3, 16]), np.asarray([1, 1]))
+    # frequency kinds have no universe cap (bits only tunes the sort)
+    api.validate_block(_freq_spec(bits=4), np.asarray([3, 16]),
+                       np.asarray([1, 1]))
+
+
+def test_validate_skips_traced_values_but_checks_shapes():
+    spec = _freq_spec()
+
+    @jax.jit
+    def f(i, w):
+        api.validate_block(spec, i, w)  # value checks skip under trace
+        return i
+
+    f(jnp.asarray([-5], jnp.int32), jnp.asarray([1], jnp.int32))
+
+    @jax.jit
+    def g(i, w):
+        api.validate_block(spec, i, w)  # shape checks still fire
+        return i
+
+    with pytest.raises(ValueError, match="length mismatch"):
+        g(jnp.arange(4), jnp.ones(3, jnp.int32))
+
+
+def test_validate_rejects_ids_and_weights_beyond_int32():
+    """64-bit inputs must error, not wrap C-style into the int32 store."""
+    spec = _freq_spec()
+    with pytest.raises(ValueError, match="exceeds int32"):
+        api.validate_block(spec, np.asarray([2**32 + 5], np.int64),
+                           np.asarray([1], np.int64))
+    with pytest.raises(ValueError, match="fit int32"):
+        api.validate_block(spec, np.asarray([1], np.int64),
+                           np.asarray([2**40], np.int64))
+    # the session and api.update validate BEFORE casting, so the same
+    # inputs raise instead of silently counting toward id 5
+    with pytest.raises(ValueError, match="exceeds int32"):
+        StreamSession(spec, block=8).extend(
+            np.asarray([2**32 + 5], np.int64), np.asarray([1], np.int64))
+    with pytest.raises(ValueError, match="exceeds int32"):
+        api.update(spec, api.make(spec), np.asarray([2**32 + 5], np.int64),
+                   np.asarray([1], np.int64))
+
+
+def test_observe_invalid_item_does_not_poison_session():
+    """A rejected observation must leave counters, FIFO and buffer
+    untouched — later observes keep working and the window stays exact."""
+    spec = api.SketchSpec(kind="quantile", k=256, bits=4)
+    sess = StreamSession(spec, block=8, window=2)
+    for v in (1, 2):
+        sess.observe(v)
+    with pytest.raises(ValueError, match="outside the dyadic universe"):
+        sess.observe(99)
+    with pytest.raises(ValueError, match="negative item id"):
+        sess.observe(-1)
+    assert sess.insertions == 2 and sess.deletions == 0
+    for v in (3, 4):
+        sess.observe(v)  # window expiries proceed normally
+    assert sess.insertions == 4 and sess.deletions == 2
+    assert int(sess.consolidated().mass) == 2
+
+
+def test_session_extend_validates():
+    sess = StreamSession(api.SketchSpec(kind="quantile", k=64, bits=4),
+                         block=8)
+    with pytest.raises(ValueError, match="outside the dyadic universe"):
+        sess.extend(np.asarray([99]), np.asarray([1]))
+
+
+# ---------------------------------------------------------------------------
+# Clear errors for kind-mismatched queries
+# ---------------------------------------------------------------------------
+
+def test_rank_on_frequency_kind_raises_actionable_error():
+    spec = _freq_spec()
+    state = api.make(spec)
+    with pytest.raises(ValueError, match="kind='quantile'"):
+        api.rank_many(spec, state, np.asarray([1]))
+    with pytest.raises(ValueError, match="kind='quantile'"):
+        api.quantile_many(spec, state, np.asarray([0.5]))
+    spec_sh = _freq_spec(shards=4)
+    with pytest.raises(ValueError, match="kind='quantile'"):
+        api.rank(spec_sh, api.make(spec_sh), 1)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_jax_sketch_import_warns_once_and_names_resolve():
+    from repro.sketch import blocks, phases, state as st_mod
+
+    sys.modules.pop("repro.sketch.jax_sketch", None)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        js = importlib.import_module("repro.sketch.jax_sketch")
+        # second import: cached module, no second warning
+        importlib.import_module("repro.sketch.jax_sketch")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "jax_sketch" in str(w.message)]
+    assert len(dep) == 1
+    # the shim still resolves every name to the layer-module object
+    assert js.block_update is blocks.block_update
+    assert js.SketchState is st_mod.SketchState
+    assert js.residual_phase is phases.residual_phase
+
+
+@pytest.mark.parametrize("mod,target", [
+    (shd, "update_block"),
+    (dyadic, "update_block"),
+    (dysh, "update_block"),
+])
+def test_client_ingest_alias_warns_once_and_is_same_object(mod, target):
+    fn = mod.ingest
+    assert fn.__wrapped__ is getattr(mod, target)
+    if mod is shd:
+        state = shd.init(16, 2)
+    elif mod is dyadic:
+        state = dyadic.init(BITS, total_counters=64)
+    else:
+        state = dysh.init(BITS, 2, total_counters=64)
+    i = jnp.arange(8, dtype=jnp.int32)
+    w = jnp.ones(8, jnp.int32)
+    fn.__wrapped__(state, i, w)  # direct call never warns
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fn(state, i, w)
+        fn(state, i, w)
+    dep = [x for x in rec if issubclass(x.category, DeprecationWarning)]
+    # fires at most once per process (first call may predate this test)
+    assert len(dep) <= 1
+    for x in dep:
+        assert "api.update" in str(x.message)
+
+
+def test_api_update_path_kwarg_warns_and_maps_to_backend():
+    spec = _freq_spec()
+    items = np.arange(8, dtype=np.int32)
+    w = np.ones(8, np.int32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = api.update(spec, api.make(spec), items, w, path="block")
+    assert any(issubclass(x.category, DeprecationWarning) for x in rec)
+    want = api.update(dataclasses.replace(spec, backend="block"),
+                      api.make(spec), items, w)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trips: every layout, plus pre-redesign dicts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", list(_all_specs()),
+                         ids=lambda s: f"{s.kind}-sh{s.shards}-{s.variant}")
+def test_save_restore_roundtrip_every_spec(spec, tmp_path):
+    """api.save -> train/checkpoint.py npz round-trip -> api.restore is
+    lossless for every (kind × shards × variant) layout."""
+    from repro.train import checkpoint as ckpt
+
+    state = _fed_state(spec)
+    d = api.save(spec, state)
+    ckpt.save(tmp_path, 1, {"sketch": d})
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape,
+                                       np.asarray(x).dtype), {"sketch": d})
+    restored, _ = ckpt.restore(tmp_path, like)
+    got = api.restore(spec, jax.tree.map(np.asarray, restored["sketch"]))
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and the restored state keeps answering queries identically
+    probe = np.arange(1 << BITS, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(api.query_many(spec, got, probe)),
+        np.asarray(api.query_many(spec, state, probe)))
+
+
+def test_restore_accepts_pre_redesign_stats_layouts():
+    """Untagged {ids,counts,errors[,shards]} dicts (the old _SketchBank
+    state_dict) restore through infer_spec + restore."""
+    spec = _freq_spec()
+    state = _fed_state(spec)
+    legacy = {  # exactly the pre-redesign unsharded layout: no tag
+        "ids": np.asarray(state.ids),
+        "counts": np.asarray(state.counts),
+        "errors": np.asarray(state.errors),
+    }
+    got = api.restore(api.infer_spec(spec, legacy), legacy)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(state.ids))
+
+    sh_spec = _freq_spec(shards=4)
+    sh_state = _fed_state(sh_spec)
+    legacy_sh = {
+        "ids": np.asarray(sh_state.bank.ids),
+        "counts": np.asarray(sh_state.bank.counts),
+        "errors": np.asarray(sh_state.bank.errors),
+        "shards": 4,
+    }
+    # an unsharded spec adapts to the sharded dict through infer_spec
+    spec2 = api.infer_spec(spec, legacy_sh)
+    assert spec2.shards == 4
+    got = api.restore(spec2, legacy_sh)
+    np.testing.assert_array_equal(np.asarray(got.bank.ids),
+                                  np.asarray(sh_state.bank.ids))
+    # ... but restoring against the mismatched spec is an error, not junk
+    with pytest.raises(ValueError, match="infer_spec"):
+        api.restore(spec, legacy_sh)
+
+
+def test_restore_rejects_shard_count_mismatch():
+    sh_spec = _freq_spec(shards=4)
+    d = api.save(sh_spec, _fed_state(sh_spec))
+    d["shards"] = np.int32(2)  # lie about the layout
+    with pytest.raises(ValueError, match="shards"):
+        api.restore(dataclasses.replace(sh_spec, shards=2), d)
+
+
+def test_session_load_adapts_spec():
+    sh_spec = _freq_spec(shards=4)
+    sess = StreamSession(sh_spec, block=64)
+    sess.extend(np.arange(64, dtype=np.int32))
+    d = sess.save()
+    fresh = StreamSession(_freq_spec(), block=64)  # unsharded spec
+    fresh.load(d)
+    assert fresh.spec.shards == 4
+    np.testing.assert_array_equal(
+        np.asarray(fresh.query_many(np.arange(8))),
+        np.asarray(sess.query_many(np.arange(8))))
+
+
+# ---------------------------------------------------------------------------
+# StreamSession scheduling semantics
+# ---------------------------------------------------------------------------
+
+def test_session_windowed_push_accounting():
+    spec = _freq_spec(k=256)
+    sess = StreamSession(spec, block=64, window=2)
+    for step in range(5):
+        sess.push(np.arange(32, dtype=np.int32),
+                  np.full(32, step + 1, np.int32))
+    # pushes 0..2 expired (window 2 of 5): I = 32*(1+2+3+4+5), D = 32*(1+2+3)
+    assert sess.insertions == 32 * 15
+    assert sess.deletions == 32 * 6
+    assert sess.alpha_bound == pytest.approx(15 / 9)
+    # live mass = windows 4 and 5 exactly (capacity >= universe: exact)
+    np.testing.assert_array_equal(np.asarray(sess.query_many(np.arange(32))),
+                                  np.full(32, 9))
+
+
+def test_session_observe_window_matches_exact_tail():
+    spec = api.SketchSpec(kind="quantile", k=512, bits=BITS)
+    sess = StreamSession(spec, block=32, window=50)
+    vals = (np.arange(300) * 7) % (1 << BITS)
+    for v in vals:
+        sess.observe(int(v))
+    assert int(sess.consolidated().mass) == 50
+    tail = np.sort(vals[-50:])
+    got = sess.quantile(0.5)
+    want = tail[int(np.ceil(0.5 * 50)) - 1]
+    # capacity >> live mass: the sketch is exact; ranks agree exactly
+    assert got == want, (got, want)
+
+
+def test_dyadic_merge_exact_at_full_capacity():
+    """dyadic.merge (new): with capacity >= universe every layer is
+    exact, so the merged bank's ranks equal the exact ranks of the
+    concatenated streams and masses add."""
+    rng = np.random.default_rng(7)
+    xa = rng.integers(0, 1 << BITS, 300).astype(np.int32)
+    xb = rng.integers(0, 1 << BITS, 200).astype(np.int32)
+    cap = BITS * (1 << BITS)  # >= 2^(bits-l) per layer: exact everywhere
+    a = dyadic.update_block(dyadic.init(BITS, total_counters=cap),
+                            jnp.asarray(xa), jnp.ones(300, jnp.int32))
+    b = dyadic.update_block(dyadic.init(BITS, total_counters=cap),
+                            jnp.asarray(xb), jnp.ones(200, jnp.int32))
+    m = dyadic.merge(a, b)
+    assert int(m.mass) == 500
+    both = np.concatenate([xa, xb])
+    probe = jnp.arange(1 << BITS, dtype=jnp.int32)
+    exact = np.searchsorted(np.sort(both), np.arange(1 << BITS), "right")
+    np.testing.assert_array_equal(
+        np.asarray(dyadic.rank_many(m, probe)), exact)
+
+
+def test_push_flushes_buffered_extend_first():
+    """A mixed-use session must not reorder a push's deletions ahead of
+    insertions still sitting in the extend buffer."""
+    spec = _freq_spec(k=256)
+    sess = StreamSession(spec, block=64)
+    sess.extend(np.full(3, 7, np.int32))           # buffered, partial block
+    sess.push(np.asarray([7], np.int32),
+              np.asarray([-2], np.int32))          # delete must come AFTER
+    assert int(sess.query(7)) == 1                 # 3 inserts - 2 deletes
+    assert sess._buf_n == 0                        # buffer drained by push
+
+
+def test_session_merge_from_rejects_layout_mismatch():
+    a = StreamSession(_freq_spec(), block=32)
+    b = StreamSession(_freq_spec(shards=4), block=32)
+    with pytest.raises(ValueError, match="different layouts"):
+        a.merge_from(b)
+    # k / variant mismatches must error too (a lazy bank merged into an
+    # sspm session would silently void the variant's guarantees)
+    with pytest.raises(ValueError, match="different layouts"):
+        a.merge_from(StreamSession(_freq_spec(k=32), block=32))
+    with pytest.raises(ValueError, match="different layouts"):
+        a.merge_from(StreamSession(_freq_spec(variant="lazy"), block=32))
+    # backend is an execution path, not a layout: merge allowed
+    a.merge_from(StreamSession(_freq_spec(backend="block"), block=32))

@@ -1,0 +1,77 @@
+"""benchmarks.run must propagate bench failures as a non-zero exit.
+
+Before the fix a bench that raised after the manifest loop's subprocess
+special-case could abort the remaining benches without being recorded;
+now every bench body is try/except'd, the failure is recorded, the rest
+of the manifest still runs, and main() returns 1.  Pinned end-to-end in
+a subprocess (the CI invocation path) with stub bench modules so the
+test costs milliseconds, not a bench run.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_with_benches(benches_py: str):
+    """Run benchmarks.run --smoke with BENCHES monkeypatched to stubs."""
+    code = f"""
+import sys, types
+import benchmarks.run as r
+
+{benches_py}
+
+sys.argv = ["run", "--smoke"]
+sys.exit(r.main())
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, "-c", code], cwd=REPO, env=env,
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_failing_bench_exits_nonzero_and_runs_the_rest():
+    out = _run_with_benches("""
+boom = types.ModuleType("benchmarks._boom")
+def _raise(**kw): raise RuntimeError("bench exploded")
+boom.run = _raise
+sys.modules["benchmarks._boom"] = boom
+ok = types.ModuleType("benchmarks._ok")
+ok.run = lambda **kw: print("OK_BENCH_RAN")
+sys.modules["benchmarks._ok"] = ok
+r.BENCHES = {"boom": ("benchmarks._boom", "always raises"),
+             "ok": ("benchmarks._ok", "runs fine")}
+r.SMOKE_KW = {"boom": {}, "ok": {}}
+""")
+    assert out.returncode != 0, out.stdout + out.stderr
+    # the failure is reported AND the remaining bench still ran
+    assert "FAILED benches: boom" in out.stdout, out.stdout
+    assert "OK_BENCH_RAN" in out.stdout, out.stdout
+    assert "bench exploded" in out.stdout + out.stderr
+    # the per-bench log line says FAILED, not 'done' (scannable CI logs)
+    assert "== boom FAILED in" in out.stdout, out.stdout
+    assert "== ok done in" in out.stdout, out.stdout
+
+
+def test_import_error_also_exits_nonzero():
+    out = _run_with_benches("""
+r.BENCHES = {"ghost": ("benchmarks._no_such_module", "missing module")}
+r.SMOKE_KW = {"ghost": {}}
+""")
+    assert out.returncode != 0, out.stdout + out.stderr
+    assert "FAILED benches: ghost" in out.stdout, out.stdout
+
+
+def test_all_passing_exits_zero():
+    out = _run_with_benches("""
+ok = types.ModuleType("benchmarks._ok")
+ok.run = lambda **kw: None
+sys.modules["benchmarks._ok"] = ok
+r.BENCHES = {"ok": ("benchmarks._ok", "runs fine")}
+r.SMOKE_KW = {"ok": {}}
+""")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "all benchmarks done" in out.stdout
