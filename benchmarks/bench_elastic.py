@@ -1,0 +1,171 @@
+"""Elastic + fault-tolerance benchmarks: live resize, shard-loss
+recovery, and quality across a fault.
+
+Three tables, all written to ``BENCH_elastic.json`` at the repo root:
+
+  * **resize** — wall time of the consolidate-free S -> S' re-route
+    (``elastic.reshard`` / ``reshard_dyadic``) on a warm state, plus the
+    counters moved/dropped, the tracked ``error_slack``, and
+    phi-heavy-hitter recall/precision before vs after the resize (the
+    acceptance framing: estimates stay within the summed bound, so
+    recall must not regress beyond slack).
+  * **recovery** — a seeded fault plan (corrupt + drop + duplicate)
+    hits a live session; the table records recall/precision of the
+    faulted state, then the checkpoint+replay rebuild time
+    (``elastic.recover_session``), the blocks replayed, whether the
+    recovered state is bit-identical to a never-failed twin, and the
+    restored recall/precision.
+
+Both tables run the frequency AND quantile (dyadic) kinds.  Wall-times
+are 2-core CPU numbers — relative trends only (DESIGN.md §12);
+bit-exactness and recall are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import (
+    csv_print,
+    dist_stream,
+    exact_freqs,
+    recall_precision,
+    stream_blocks,
+    write_bench_json,
+)
+from repro.sketch import api, elastic, faults
+from repro.sketch.session import StreamSession
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_elastic.json")
+
+PHI = 0.005
+RESIZE_COLUMNS = ["kind", "dist", "alpha", "ktot", "old_shards",
+                  "new_shards", "ms_resize", "moved", "dropped",
+                  "error_slack", "recall_before", "recall_after",
+                  "precision_before", "precision_after"]
+RECOVERY_COLUMNS = ["kind", "shards", "n_blocks", "block", "faults",
+                    "ms_recover", "replayed_blocks", "bit_exact",
+                    "recall_faulted", "recall_recovered",
+                    "precision_faulted", "precision_recovered"]
+
+
+def _kind_cells(ktot_freq: int, ktot_quant: int):
+    """(kind, spec kwargs, stream universe) for both backends."""
+    return (
+        ("frequency", dict(kind="frequency", k=ktot_freq), 1 << 16),
+        ("quantile", dict(kind="quantile", k=ktot_quant, bits=8), 1 << 8),
+    )
+
+
+def _rp(spec, state, freqs):
+    cand = np.nonzero(freqs > 0)[0]
+    est = np.asarray(jax.device_get(api.query_many(spec, state, cand)),
+                     np.float64)
+    return recall_precision(None, freqs, PHI, est=est)
+
+
+def bench_resize(n_insert: int = 20000, old_shards: int = 4,
+                 new_counts=(1, 2, 8), runs: int = 5,
+                 ktot_freq: int = 1024, ktot_quant: int = 2048):
+    rows = []
+    alpha = 2.0
+    for kind, spec_kw, universe in _kind_cells(ktot_freq, ktot_quant):
+        stream = dist_stream("zipf", n_insert, 0.5, order="interleaved",
+                             seed=11, universe=universe)
+        freqs = exact_freqs(stream, universe)
+        spec = api.SketchSpec(shards=old_shards, **spec_kw)
+        sess = StreamSession(spec, block=4096)
+        sess.extend(stream[:, 0].astype(np.int32),
+                    stream[:, 1].astype(np.int32))
+        sess.flush()
+        rec_b, prec_b = _rp(spec, sess.state, freqs)
+        fn = elastic.reshard if kind == "frequency" else elastic.reshard_dyadic
+        for new_s in new_counts:
+            best = float("inf")
+            for _ in range(max(runs, 1)):
+                t0 = time.perf_counter()
+                new_state, report = fn(sess.state, new_s)
+                best = min(best, time.perf_counter() - t0)
+            spec2 = dataclasses.replace(spec, shards=new_s)
+            rec_a, prec_a = _rp(spec2, new_state, freqs)
+            rows.append([kind, "zipf", alpha, spec.k, old_shards, new_s,
+                         best * 1e3, report.moved, report.dropped,
+                         report.error_slack, rec_b, rec_a, prec_b, prec_a])
+    csv_print("elastic_resize", RESIZE_COLUMNS, rows)
+    return rows
+
+
+def bench_recovery(n_blocks: int = 24, block: int = 512,
+                   shards: int = 4, ktot_freq: int = 1024,
+                   ktot_quant: int = 2048):
+    """Fault a live session mid-stream, then rebuild every row from the
+    checkpoint + replay log and verify the never-failed twin bit-for-bit
+    (the exactly-once guarantee of DESIGN.md §12)."""
+    rows = []
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=n_blocks // 3, row=2, kind="drop"),
+        faults.FaultEvent(step=n_blocks // 2, row=1, kind="corrupt"),
+        faults.FaultEvent(step=2 * n_blocks // 3, row=0, kind="duplicate"),
+    ))
+    for kind, spec_kw, universe in _kind_cells(ktot_freq, ktot_quant):
+        stream = dist_stream("zipf", n_blocks * block, 0.0, seed=13,
+                             universe=universe)
+        items, weights, nb = stream_blocks(stream, block)
+        freqs = exact_freqs(stream, universe)
+        spec = api.SketchSpec(shards=shards, **spec_kw)
+        sess = StreamSession(spec, block=block, replay=2 * n_blocks,
+                             fault_plan=plan)
+        ref = StreamSession(spec, block=block)
+        ckpt = sess.save(include_schedule=True)
+        for b in range(nb):
+            sl = slice(b * block, (b + 1) * block)
+            sess.ingest_block(items[sl], weights[sl])
+            ref.ingest_block(items[sl], weights[sl])
+        rec_f, prec_f = _rp(spec, sess.state, freqs)
+        report = elastic.recover_session(sess, ckpt, rows=range(shards))
+        bit_exact = all(
+            np.array_equal(np.asarray(jax.device_get(x)),
+                           np.asarray(jax.device_get(y)))
+            for x, y in zip(jax.tree.leaves(sess.state),
+                            jax.tree.leaves(ref.state)))
+        rec_r, prec_r = _rp(spec, sess.state, freqs)
+        rows.append([kind, shards, nb, block, len(plan.events),
+                     report.seconds * 1e3, report.replayed_blocks,
+                     bit_exact, rec_f, rec_r, prec_f, prec_r])
+    csv_print("elastic_recovery", RECOVERY_COLUMNS, rows)
+    return rows
+
+
+def _write_json(results: dict, path: str = JSON_PATH) -> None:
+    write_bench_json(results,
+                     {"resize": RESIZE_COLUMNS,
+                      "recovery": RECOVERY_COLUMNS},
+                     path)
+
+
+def run(runs: int = 5, write_json: bool = True, smoke: bool = False, **kw):
+    if smoke:
+        results = {
+            "resize": bench_resize(n_insert=2000, new_counts=(2,), runs=1,
+                                   ktot_freq=256, ktot_quant=512),
+            "recovery": bench_recovery(n_blocks=6, block=128,
+                                       ktot_freq=256, ktot_quant=512),
+        }
+    else:
+        results = {
+            "resize": bench_resize(runs=runs),
+            "recovery": bench_recovery(),
+        }
+    if write_json and not smoke:
+        _write_json(results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -37,6 +37,8 @@ BENCHES = {
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/time"),
     "sharded": ("benchmarks.bench_sharded",
                 "hash-sharded bank vs single sketch (BENCH_sharded.json)"),
+    "elastic": ("benchmarks.bench_elastic",
+                "live resize + fault recovery (BENCH_elastic.json)"),
     "compression": ("benchmarks.bench_compression", "grad compression bytes"),
     "h2o": ("benchmarks.bench_h2o_quality", "SS± KV-cache retention quality"),
 }
@@ -54,6 +56,7 @@ SMOKE_KW = {
     "quantiles": dict(smoke=True, write_json=False),
     "kernels": dict(smoke=True, write_json=False),
     "sharded": dict(smoke=True, write_json=False),
+    "elastic": dict(smoke=True, write_json=False),
     "compression": {},
     "h2o": {},
 }

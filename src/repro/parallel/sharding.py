@@ -199,6 +199,25 @@ def mesh_axis(name: str, table: str = "act") -> Optional[Tuple[str, ...]]:
     return flat or None
 
 
+def mesh_resize(name: str, new_size: int, table: str = "act") -> Optional[Tuple[str, ...]]:
+    """Mesh axes a logical dim keeps after resizing to ``new_size``.
+
+    The elastic layer (``repro.sketch.elastic.reshard_session``) resizes
+    the shard dim S -> S' at runtime; whether the resized dim can stay
+    bound to its mesh axes is the same divisibility rule ``_resolve``
+    applies at trace time. Returns the bound axes tuple when ``new_size``
+    still divides the axes' total extent (the shard_map/data-parallel
+    path survives the resize), or None when no mesh is active, nothing
+    binds, or divisibility breaks (the caller falls back to the
+    replicated path).
+    """
+    axes = mesh_axis(name, table)
+    mesh = current_mesh()
+    if axes is None or mesh is None:
+        return None
+    return axes if new_size % _axis_size(mesh, axes) == 0 else None
+
+
 def parse_axes(names_str: str):
     """'period,embed,ff' -> ('period', 'embed', 'ff'); '' dims -> None."""
     return tuple(n if n else None for n in names_str.split(",")) if names_str else ()

@@ -31,7 +31,14 @@ Layered package (DESIGN.md §9-§10):
     above, with uniform update/query/topk/rank/merge/save/restore;
   * ``session`` — :class:`StreamSession`, the stateful companion:
     host-side block buffering and padding, cached jitted ingest per
-    (spec, block), windowed bounded-deletion scheduling;
+    (spec, block), windowed bounded-deletion scheduling, block replay
+    log and fault/straggler hooks;
+  * ``elastic`` — live S → S' resize (consolidate-free merge/re-route
+    with honest ``error_slack`` accounting), shard-loss detection +
+    degraded serving, and checkpoint + replay recovery (DESIGN.md §12);
+  * ``faults``  — the deterministic fault-injection harness
+    (:class:`FaultPlan`: drop/duplicate/corrupt/delay a shard's block
+    at step t) behind the chaos suite and BENCH_elastic;
   * ``jax_sketch`` — DEPRECATED backward-compat shim re-exporting every
     historical name from the layer modules (imported lazily; importing
     it warns).
@@ -47,8 +54,9 @@ from . import (
     sharded,
     state,
 )
-from . import api, session
+from . import api, elastic, faults, session
 from .api import SketchSpec
+from .faults import FaultEvent, FaultPlan
 from .session import StreamSession
 from .blocks import (
     apply_update,
@@ -97,8 +105,12 @@ def __getattr__(name):
 __all__ = [
     "api",
     "session",
+    "elastic",
+    "faults",
     "SketchSpec",
     "StreamSession",
+    "FaultEvent",
+    "FaultPlan",
     "bank",
     "blocks",
     "dyadic",

@@ -583,6 +583,11 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
     ``_SketchBank.load_state_dict`` applied.
     """
     tag = int(np.asarray(d["layout"])) if "layout" in d else None
+    if tag is not None and tag not in (LAYOUT_FREQUENCY, LAYOUT_QUANTILE):
+        raise ValueError(
+            f"unknown checkpoint layout tag {tag} (known: "
+            f"{LAYOUT_FREQUENCY}=frequency, {LAYOUT_QUANTILE}=quantile); "
+            f"the dict is corrupted or written by a newer layout")
     kind = ("quantile" if tag == LAYOUT_QUANTILE or
             (tag is None and "mass" in d) else "frequency")
     raw_shards = d.get("shards")
@@ -603,12 +608,56 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
     return dataclasses.replace(spec, **changes) if changes else spec
 
 
+def _validate_checkpoint(spec: SketchSpec, d: Dict[str, Any]) -> None:
+    """Reject truncated/corrupted checkpoint dicts BEFORE any state is
+    built — ``restore`` either returns a complete state or raises, never
+    a half-loaded one.
+
+    Checks: required keys present (``mass`` included for quantile
+    kinds), counter fields integer-typed (a float dtype means the dict
+    was corrupted or written by something else — casting would silently
+    truncate, and NaN poisoning only exists in float arrays), and the
+    three counter fields shape-consistent.
+    """
+    required = ["ids", "counts", "errors"]
+    if spec.kind == "quantile":
+        required.append("mass")
+    missing = [k for k in required if k not in d]
+    if missing:
+        raise ValueError(
+            f"checkpoint dict is missing key(s) {missing} (truncated "
+            f"write?); a {spec.kind!r} checkpoint needs {required}")
+    shapes = {}
+    for key in ("ids", "counts", "errors"):
+        arr = np.asarray(d[key])
+        if arr.dtype.kind not in "iu":
+            raise ValueError(
+                f"checkpoint field {key!r} has dtype {arr.dtype}; sketch "
+                f"counters are integer arrays — refusing to cast a "
+                f"float/object dtype silently (corrupted or foreign "
+                f"checkpoint)")
+        shapes[key] = arr.shape
+    if len(set(shapes.values())) != 1:
+        raise ValueError(
+            f"checkpoint counter fields disagree in shape: {shapes}; the "
+            f"dict is truncated or mixes two checkpoints")
+    if spec.kind == "quantile":
+        mass = np.asarray(d["mass"])
+        if mass.dtype.kind not in "iu" or mass.size != 1:
+            raise ValueError(
+                f"checkpoint field 'mass' must be an integer scalar "
+                f"(|F|₁), got dtype {mass.dtype}, shape {mass.shape}")
+
+
 def restore(spec: SketchSpec, d: Dict[str, Any]):
     """State from a ``save`` dict — or a pre-redesign stats layout.
 
     The spec must match the dict's layout; use ``infer_spec`` first when
     restoring checkpoints whose shard count / kind may have drifted from
     the configured spec (that is what ``StreamSession.load`` does).
+    Truncated or corrupted dicts (missing keys, float dtypes, mismatched
+    shapes, unknown layout tags) raise ``ValueError`` before any state
+    is constructed — never a half-loaded state.
     """
     inferred = infer_spec(spec, d)
     if (inferred.kind, inferred.shards) != (spec.kind, spec.shards):
@@ -617,6 +666,7 @@ def restore(spec: SketchSpec, d: Dict[str, Any]):
             f"shards={inferred.shards}, but the spec says "
             f"kind={spec.kind!r}, shards={spec.shards}; restore through "
             f"infer_spec(spec, d) (StreamSession.load does)")
+    _validate_checkpoint(spec, d)
     return adapter_for(spec).restore(spec, d)
 
 

@@ -1,0 +1,527 @@
+"""Elastic, fault-tolerant operation over the SpaceSaving± banks.
+
+The paper's summaries are mergeable with *summed* error bounds (Thm 4;
+the SpaceSaving± Family follow-up makes mergeability the organizing
+property of the whole family).  That means a distributed sketch can
+survive topology changes and partial failures WITHOUT re-reading the
+stream — this module is that observation turned into the three
+operations a production mesh needs:
+
+  * **live resize** — ``reshard`` (hash-sharded frequency bank) and
+    ``reshard_dyadic`` (shard × level quantile bank) re-route every live
+    counter of an S-row bank to its new owner row under
+    ``shard_of(id, S')``.  Because a hash partition assigns each id to
+    exactly ONE old row and ONE new row, the counters co-landing in a
+    new row have disjoint ids: their "merge" is the exact union (no
+    cross terms — precisely the non-full case of ``state.merge``, which
+    ``_reshard_merge_reference`` spells out and the property suite pins
+    the fast path against).  Only when more counters land in a new row
+    than its capacity does anything lossy happen: the row keeps its
+    top-k' by count and the largest dropped count is recorded as that
+    row's ``error_slack`` — the honest widening of post-resize query
+    bounds (an unmonitored id may now carry up to slack extra mass).
+    ``S' = 1`` with the budget-preserving default capacity holds every
+    counter, i.e. resize-to-one is a lossless consolidate.
+
+  * **shard-loss detection + degraded serving** — ``scan_rows`` checks
+    the structural invariants every healthy row satisfies (no id below
+    BLOCKED, EMPTY slots carry zero counts/errors, BLOCKED slots carry
+    INT_MAX counts, no negative counters, no duplicate live ids);
+    ``mask_rows`` resets dead rows so the bank keeps serving, and
+    ``query_many_degraded`` answers every query from the surviving rows
+    with a per-query ``reliable`` mask (an id owned by a dead row has an
+    unbounded error until recovery — the caller sees that, instead of a
+    silently wrong 0).
+
+  * **recovery** — ``recover_session`` rebuilds lost rows from the last
+    ``save(include_schedule=True)`` checkpoint plus the session's block
+    replay log (every block ingested after the checkpoint, including
+    windowed-expiry deletions, replayed in order), then splices ONLY the
+    dead rows back into the live bank.  Healthy rows keep their live
+    state; the rebuilt rows are bit-identical to a never-failed run —
+    exactly-once ingest across the fault (tests/test_elastic.py).
+
+Faults themselves are injected by ``repro.sketch.faults`` (FaultPlan);
+DESIGN.md §12 documents the fault model and the bound accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import bank as bk
+from . import state as st
+from .dyadic_sharded import DyadicShardedState
+from .sharded import ShardedSketch
+from .state import BLOCKED, EMPTY, SketchState, _INT_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeReport:
+    """What a resize did to the bank — and to the error bounds.
+
+    ``row_slack[s']`` is the largest counter dropped from new row s'
+    (0 when everything fit): after the resize, an id owned by s' that is
+    NOT monitored may carry up to ``row_slack[s']`` mass the bank no
+    longer sees, so every per-query bound widens by that row's slack.
+    ``error_slack`` is the bank-wide max — the one scalar a session
+    carries forward (post-resize bound = pre-resize bound + slack).
+    """
+
+    old_rows: int
+    new_rows: int
+    moved: int              # live counters re-routed
+    dropped: int            # counters that did not fit their new row
+    dropped_mass: int       # summed count of dropped entries
+    row_slack: np.ndarray   # (new_rows,) max dropped count per new row
+
+    @property
+    def error_slack(self) -> int:
+        """Bank-wide additive bound widening (max over rows)."""
+        return int(self.row_slack.max(initial=0))
+
+
+def _reroute(
+    ids: np.ndarray,
+    counts: np.ndarray,
+    errors: np.ndarray,
+    owner: np.ndarray,
+    caps_new: Sequence[int],
+) -> Tuple[SketchState, np.ndarray, int, int]:
+    """Place live (id, count, error) entries into their new owner rows.
+
+    ``owner[i]`` is entry i's new row; ``caps_new`` the per-new-row live
+    capacities.  Entries are placed per row in descending-count order
+    (slot order carries no semantics) and a row over capacity keeps its
+    top-cap by count — the dropped remainder is tallied into the
+    returned ``(row_slack, dropped, dropped_mass)``.  Pure numpy: resize
+    is a rare control-plane operation, and host code keeps the slack
+    accounting exact and auditable.
+    """
+    caps = np.asarray([int(c) for c in caps_new], np.int64)
+    R = len(caps)
+    k = int(caps.max()) if R else 0
+    # stable sort by (owner, -count): per-row descending-count runs
+    order = np.lexsort((-counts, owner))
+    ow = owner[order]
+    ids_s, cnt_s, err_s = ids[order], counts[order], errors[order]
+    n = len(ow)
+    idx = np.arange(n)
+    if n:
+        starts = np.r_[0, np.flatnonzero(np.diff(ow)) + 1]
+        run_len = np.diff(np.r_[starts, n])
+        rank = idx - np.repeat(starts, run_len)
+    else:
+        rank = idx
+    keep = rank < caps[ow]
+    # dropped accounting: within a row the first dropped entry (rank ==
+    # cap) has the largest dropped count — that IS the row's slack
+    row_slack = np.zeros(R, np.int64)
+    first_drop = ~keep & (rank == caps[ow])
+    row_slack[ow[first_drop]] = cnt_s[first_drop]
+    dropped = int((~keep).sum())
+    dropped_mass = int(cnt_s[~keep].sum())
+    # assemble the new bank with the BLOCKED capacity-padding pattern
+    lane = np.arange(k)[None, :]
+    real = lane < caps[:, None]
+    new_ids = np.where(real, int(EMPTY), int(BLOCKED)).astype(np.int64)
+    new_cnt = np.where(real, 0, int(_INT_MAX)).astype(np.int64)
+    new_err = np.zeros((R, k), np.int64)
+    new_ids[ow[keep], rank[keep]] = ids_s[keep]
+    new_cnt[ow[keep], rank[keep]] = cnt_s[keep]
+    new_err[ow[keep], rank[keep]] = err_s[keep]
+    bank = SketchState(
+        ids=jnp.asarray(new_ids, jnp.int32),
+        counts=jnp.asarray(new_cnt, jnp.int32),
+        errors=jnp.asarray(new_err, jnp.int32),
+    )
+    return bank, row_slack, dropped, dropped_mass
+
+
+def _live_entries(bank: SketchState):
+    """Flat (ids, counts, errors) of every live counter in the bank."""
+    ids = np.asarray(jax.device_get(bank.ids), np.int64).reshape(-1)
+    cnt = np.asarray(jax.device_get(bank.counts), np.int64).reshape(-1)
+    err = np.asarray(jax.device_get(bank.errors), np.int64).reshape(-1)
+    live = ids >= 0
+    return ids[live], cnt[live], err[live]
+
+
+def reshard(
+    state: ShardedSketch,
+    new_shards: int,
+    *,
+    per_shard_capacity: Optional[int] = None,
+) -> Tuple[ShardedSketch, ResizeReport]:
+    """Live S → S' resize of a hash-sharded frequency bank.
+
+    Every live counter moves to ``shard_of(id, S')`` — a consolidate-free
+    merge/re-route: co-landing counters have disjoint ids (each id has
+    one owner under either hash), so the union is exact and counts AND
+    errors survive verbatim.  The default ``per_shard_capacity`` keeps
+    the total budget (ceil(S·k / S')); with ``new_shards=1`` that holds
+    every counter, making resize-to-one a lossless consolidate.  A row
+    receiving more counters than its capacity keeps its top-k' by count
+    and reports the overflow through the :class:`ResizeReport` slack.
+    """
+    if new_shards < 1:
+        raise ValueError(f"new_shards must be >= 1, got {new_shards}")
+    S, k = state.bank.ids.shape
+    total = S * k
+    k_new = per_shard_capacity or -(-total // new_shards)
+    ids, cnt, err = _live_entries(state.bank)
+    owner = np.asarray(
+        jax.device_get(bk.shard_of(jnp.asarray(ids, jnp.int32), new_shards)),
+        np.int64)
+    bank, slack, dropped, dmass = _reroute(
+        ids, cnt, err, owner, [k_new] * new_shards)
+    report = ResizeReport(
+        old_rows=S, new_rows=new_shards, moved=len(ids) - dropped,
+        dropped=dropped, dropped_mass=dmass, row_slack=slack)
+    return ShardedSketch(bank=bank), report
+
+
+def reshard_dyadic(
+    state: DyadicShardedState,
+    new_shards: int,
+) -> Tuple[DyadicShardedState, ResizeReport]:
+    """Live S → S' resize of the shard × level quantile bank.
+
+    Per level l, the level-l node counters re-route to row
+    ``(shard_of(node, S'), l)``.  Per-(shard, level) capacities stay the
+    FULL single-host layer sizing (the ``dyadic_sharded`` invariant: a
+    node's whole mass lands on one shard, so a shard must meet the
+    paper's per-level bound on its own substream), so growth never drops
+    counters and shrink only does when > cap_l nodes of one level
+    co-land.  ``mass`` (exact |F|₁) is topology-independent and carries
+    over unchanged.
+    """
+    if new_shards < 1:
+        raise ValueError(f"new_shards must be >= 1, got {new_shards}")
+    S, bits, k = state.bank.ids.shape
+    caps = bk.row_capacities(jax.tree.map(lambda x: x[0], state.bank))
+    flat = state.flat_bank
+    ids = np.asarray(jax.device_get(flat.ids), np.int64)      # (S*bits, k)
+    cnt = np.asarray(jax.device_get(flat.counts), np.int64)
+    err = np.asarray(jax.device_get(flat.errors), np.int64)
+    level = np.broadcast_to(
+        np.arange(bits, dtype=np.int64)[None, :, None], (S, bits, k)
+    ).reshape(S * bits, k)
+    live = ids >= 0
+    ids_l, cnt_l, err_l = ids[live], cnt[live], err[live]
+    lvl_l = level[live]
+    shard_new = np.asarray(
+        jax.device_get(
+            bk.shard_of(jnp.asarray(ids_l, jnp.int32), new_shards)),
+        np.int64)
+    owner = shard_new * bits + lvl_l
+    bank, slack, dropped, dmass = _reroute(
+        ids_l, cnt_l, err_l, owner, list(caps) * new_shards)
+    k_new = bank.ids.shape[1]
+    report = ResizeReport(
+        old_rows=S * bits, new_rows=new_shards * bits,
+        moved=len(ids_l) - dropped, dropped=dropped, dropped_mass=dmass,
+        row_slack=slack)
+    return DyadicShardedState(
+        bank=jax.tree.map(
+            lambda x: x.reshape(new_shards, bits, k_new), bank),
+        mass=state.mass,
+    ), report
+
+
+def _reshard_merge_reference(
+    state: ShardedSketch, new_shards: int
+) -> SketchState:
+    """Row-wise ``state.merge`` spelling of ``reshard`` (the oracle).
+
+    New row s' is the tree-merge of every old row masked to the ids s'
+    now owns.  Masked views are never full (EMPTY-padded), so
+    ``state.merge`` applies no cross terms and the result is the exact
+    union — the width is padded to hold every possible co-landing
+    counter, so nothing is dropped and the fast path's kept entries must
+    match this reference exactly (tests/test_elastic.py pins it).
+    """
+    S, k = state.bank.ids.shape
+    W = S * k  # wide enough for any co-landing pattern
+    rows = []
+    ids_all = np.asarray(jax.device_get(state.bank.ids), np.int64)
+    cnt_all = np.asarray(jax.device_get(state.bank.counts), np.int64)
+    err_all = np.asarray(jax.device_get(state.bank.errors), np.int64)
+    for s_new in range(new_shards):
+        masked = []
+        for r in range(S):
+            ids_r = ids_all[r]
+            live = ids_r >= 0
+            own = np.zeros(k, bool)
+            if live.any():
+                own[live] = np.asarray(jax.device_get(bk.shard_of(
+                    jnp.asarray(ids_r[live], jnp.int32), new_shards))
+                ) == s_new
+            view = SketchState(
+                ids=jnp.asarray(
+                    np.pad(np.where(own, ids_r, int(EMPTY)), (0, W - k),
+                           constant_values=int(EMPTY)), jnp.int32),
+                counts=jnp.asarray(
+                    np.pad(np.where(own, cnt_all[r], 0), (0, W - k)),
+                    jnp.int32),
+                errors=jnp.asarray(
+                    np.pad(np.where(own, err_all[r], 0), (0, W - k)),
+                    jnp.int32),
+            )
+            masked.append(view)
+        acc = masked[0]
+        for view in masked[1:]:
+            acc = st.merge(acc, view)
+        rows.append(acc)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
+# ---------------------------------------------------------------------------
+# Shard-loss detection + degraded serving
+# ---------------------------------------------------------------------------
+
+def scan_rows(bank: SketchState) -> np.ndarray:
+    """Per-row health scan: True marks a dead/corrupt row.
+
+    Checks the structural invariants every healthy row satisfies (no
+    healthy code path can break them, any bit-flip / sentinel poisoning
+    / torn write almost surely does):
+
+      * ids >= BLOCKED (POISON and below are fault markers);
+      * EMPTY slots carry count == 0 and error == 0;
+      * BLOCKED slots carry count == INT_MAX and error == 0;
+      * live slots carry count >= 0 and error >= 0;
+      * no duplicate live ids within a row.
+    """
+    ids = np.asarray(jax.device_get(bank.ids), np.int64)
+    cnt = np.asarray(jax.device_get(bank.counts), np.int64)
+    err = np.asarray(jax.device_get(bank.errors), np.int64)
+    if ids.ndim == 1:
+        ids, cnt, err = ids[None], cnt[None], err[None]
+    empty = ids == int(EMPTY)
+    blocked = ids == int(BLOCKED)
+    live = ids >= 0
+    bad = (ids < int(BLOCKED)).any(axis=1)
+    bad |= (empty & ((cnt != 0) | (err != 0))).any(axis=1)
+    bad |= (blocked & ((cnt != int(_INT_MAX)) | (err != 0))).any(axis=1)
+    bad |= (live & ((cnt < 0) | (err < 0))).any(axis=1)
+    for r in range(ids.shape[0]):
+        row_live = ids[r][live[r]]
+        if len(np.unique(row_live)) != len(row_live):
+            bad[r] = True
+    return bad
+
+
+def mask_rows(bank: SketchState, dead: np.ndarray,
+              caps: Optional[Sequence[int]] = None) -> SketchState:
+    """Reset dead rows to pristine empties so the bank keeps serving.
+
+    ``caps`` restores each row's BLOCKED capacity pattern (needed when
+    the poisoning destroyed it — e.g. the dyadic bank's per-level caps);
+    default is full capacity, correct for the equal-cap frequency bank.
+    """
+    R, k = bank.ids.shape
+    caps = [k] * R if caps is None else [int(c) for c in caps]
+    fresh = bk.init(caps)
+    if fresh.ids.shape[1] != k:
+        raise ValueError(f"caps imply width {fresh.ids.shape[1]}, bank "
+                         f"has {k}")
+    dead_col = jnp.asarray(np.asarray(dead, bool))[:, None]
+    return SketchState(
+        ids=jnp.where(dead_col, fresh.ids, bank.ids),
+        counts=jnp.where(dead_col, fresh.counts, bank.counts),
+        errors=jnp.where(dead_col, fresh.errors, bank.errors),
+    )
+
+
+def query_many_degraded(
+    state: ShardedSketch, items, dead: np.ndarray
+) -> Tuple[jax.Array, np.ndarray]:
+    """Owner-shard estimates plus a per-query reliability mask.
+
+    An id owned by a dead row answers 0 with ``reliable=False`` — its
+    true frequency is unbounded by the surviving rows (the widened
+    degraded-mode bound), so the caller must treat it as unknown, not as
+    absent.  Dead rows are masked out before the read so poisoned
+    counters can never leak into an estimate.
+    """
+    items = jnp.asarray(items, jnp.int32)
+    dead = np.asarray(dead, bool)
+    safe = ShardedSketch(bank=mask_rows(state.bank, dead))
+    owner = np.asarray(jax.device_get(
+        bk.shard_of(items, state.num_shards)))
+    est = bk.query_rows(safe.bank, jnp.asarray(owner, jnp.int32), items)
+    return est, ~dead[owner]
+
+
+# ---------------------------------------------------------------------------
+# Recovery: checkpoint + replay-log rebuild, dead rows spliced back
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    rows: Tuple[int, ...]       # rows rebuilt (empty = whole state)
+    replayed_blocks: int        # blocks re-ingested after the checkpoint
+    seconds: float
+
+
+def _splice_rows(live, rebuilt, rows: Sequence[int]):
+    """Replace ``rows`` of the live state with the rebuilt rows.
+
+    Leading-axis row splice on every array leaf — works for the (S, k)
+    frequency bank and the (S, bits, k) dyadic bank alike (a dyadic
+    "row" is one shard, i.e. all of its levels).  Scalar leaves (the
+    dyadic ``mass``) adopt the REBUILT value: mass is global, not
+    per-row, and the rebuild — checkpoint plus intended-block replay —
+    is the fault-free truth, whereas the live scalar reflects whatever
+    the fault dropped or duplicated.
+    """
+    idx = jnp.asarray(list(rows), jnp.int32)
+
+    def one(lv, rb):
+        if getattr(lv, "ndim", 0) == 0:
+            return rb
+        return lv.at[idx].set(rb[idx])
+
+    return jax.tree.map(one, live, rebuilt)
+
+
+def dead_shards(spec, state) -> np.ndarray:
+    """(S,) mask of dead/corrupt shards of a session state, by kind.
+
+    Frequency banks scan per shard row; dyadic banks scan every
+    (shard, level) row and flag a shard if ANY of its levels is corrupt
+    (the shard is one failure domain — its host died whole).
+    """
+    bank = state.bank
+    if bank.ids.ndim == 3:
+        S, bits, k = bank.ids.shape
+        per_level = scan_rows(
+            jax.tree.map(lambda x: x.reshape(S * bits, k), bank))
+        return per_level.reshape(S, bits).any(axis=1)
+    return scan_rows(bank)
+
+
+def recover_session(session, saved: dict,
+                    rows: Optional[Sequence[int]] = None) -> RecoveryReport:
+    """Rebuild lost shard rows from checkpoint + replay, exactly once.
+
+    ``saved`` must be a ``session.save(include_schedule=True)`` dict (it
+    carries the block sequence number the replay log is keyed on).  The
+    rebuild restores the checkpointed state and re-ingests, in order,
+    every block the session ingested after the checkpoint — insertions
+    AND windowed-expiry deletions, each exactly once — producing the
+    state a never-failed run would hold.  ``rows`` (default: the shards
+    ``dead_shards`` flags) are then spliced from the rebuild into the
+    live state; healthy rows keep their live state untouched.  On an
+    unsharded spec the whole state is replaced (crash recovery).
+
+    Raises when the replay log no longer covers the checkpoint (size the
+    session's ``replay=`` to at least the checkpoint cadence in blocks).
+    """
+    from . import api
+
+    t0 = time.perf_counter()
+    if "sched_seq" not in saved:
+        raise ValueError(
+            "recovery needs a save(include_schedule=True) checkpoint "
+            "(plain api.save dicts carry no replay cursor)")
+    saved_seq = int(np.asarray(saved["sched_seq"]))
+    log = list(session.replay_log)
+    if log and log[0][0] > saved_seq + 1:
+        raise ValueError(
+            f"replay log starts at block {log[0][0]} but the checkpoint "
+            f"was taken at block {saved_seq}; blocks "
+            f"{saved_seq + 1}..{log[0][0] - 1} are gone — raise "
+            f"StreamSession(replay=...) above the checkpoint cadence")
+    spec = api.infer_spec(session.spec, saved)
+    if (spec.kind, spec.shards) != (session.spec.kind, session.spec.shards):
+        raise ValueError(
+            f"checkpoint layout (kind={spec.kind!r}, shards={spec.shards}) "
+            f"does not match the live session "
+            f"(kind={session.spec.kind!r}, shards={session.spec.shards}); "
+            f"recover into a matching session, or load() it outright")
+    rebuilt = api.restore(spec, saved)
+    replayed = 0
+    for seq, items, weights in log:
+        if seq <= saved_seq:
+            continue
+        rebuilt = session._compiled(rebuilt, items, weights)
+        replayed += 1
+    if session.spec.shards is None:
+        session.state = rebuilt
+        rows = ()
+    else:
+        if rows is None:
+            rows = np.flatnonzero(dead_shards(session.spec, session.state))
+        rows = tuple(int(r) for r in rows)
+        if rows:
+            session.state = _splice_rows(session.state, rebuilt, rows)
+    return RecoveryReport(rows=rows, replayed_blocks=replayed,
+                          seconds=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Session-level resize: state + spec + bound accounting in one move
+# ---------------------------------------------------------------------------
+
+def reshard_session(session, new_shards: int) -> ResizeReport:
+    """Resize a live session's backend S → S' in place.
+
+    Flushes buffered updates, reshards the state (frequency or dyadic
+    bank by kind), swaps the spec's ``shards`` field, re-resolves the
+    compiled ingest for the new layout, and accumulates the resize's
+    ``error_slack`` into ``session.error_slack`` so post-resize bounds
+    stay honest.  When a mesh is active, the "shards" logical rule is
+    re-checked for the new count (``parallel.sharding.mesh_resize``);
+    falling off the shard_map path is allowed — ingest falls back to the
+    fused single-launch path — but recorded on the report via a warning.
+    """
+    import warnings
+
+    from repro.parallel import sharding as psh
+
+    from .session import _ingest_fn
+
+    if session.spec.shards is None:
+        raise ValueError(
+            "reshard_session needs a sharded spec (shards=S); an "
+            "unsharded summary has no shard axis to resize")
+    session.flush()
+    if session.spec.kind == "frequency":
+        new_state, report = reshard(session.state, new_shards)
+    else:
+        new_state, report = reshard_dyadic(session.state, new_shards)
+    old_axes = psh.mesh_resize("shards", session.spec.shards)
+    new_axes = psh.mesh_resize("shards", new_shards)
+    if old_axes and not new_axes:
+        warnings.warn(
+            f"resize {session.spec.shards}->{new_shards} leaves the mesh "
+            f"'shards' axes {old_axes} (not a divisor); ingest falls back "
+            f"to the fused single-launch path", stacklevel=2)
+    session.spec = dataclasses.replace(session.spec, shards=new_shards)
+    session.state = new_state
+    session._compiled = _ingest_fn(session.spec, session.block,
+                                   session.donate)
+    session.error_slack += report.error_slack
+    return report
+
+
+__all__ = [
+    "ResizeReport",
+    "RecoveryReport",
+    "reshard",
+    "reshard_dyadic",
+    "reshard_session",
+    "scan_rows",
+    "dead_shards",
+    "mask_rows",
+    "query_many_degraded",
+    "recover_session",
+]

@@ -1,0 +1,236 @@
+"""Deterministic fault injection for the sharded SpaceSaving± banks.
+
+Nothing in a sketch pipeline *proves* it survives a lost shard until
+something loses one on purpose.  This module is that something: a
+:class:`FaultPlan` describes, seeded and deterministic, which shard
+suffers which fault at which ingest step, and :class:`StreamSession`
+(``fault_plan=``) applies it on the block boundary — i.e. on the exact
+inputs/outputs of the ``bank.update_block_fused`` launch — so every
+chaos test and BENCH_elastic cell reproduces bit-for-bit from its seed.
+
+Fault model (DESIGN.md §12):
+
+  * ``drop``      — shard s's slice of the step-t block is lost in
+                    transit: its weights zero out before ingest (the
+                    rest of the block lands normally);
+  * ``duplicate`` — at-least-once delivery gone wrong: shard s's slice
+                    ingests twice;
+  * ``corrupt``   — shard s's rows are sentinel-poisoned after the
+                    ingest (ids → POISON, negative counters) — the
+                    torn-write / bad-host case ``elastic.scan_rows``
+                    must detect;
+  * ``delay``     — shard s's slice arrives ``delay_steps`` blocks late
+                    (ingested then, preserving exactly-once), and the
+                    shard's host reports an inflated flush time to the
+                    attached :class:`repro.train.straggler.
+                    StragglerMonitor` so a sustained delay walks the
+                    straggler → flag → recovery path.
+
+The session's replay log records the INTENDED block before injection:
+faults corrupt the live state, never the recovery truth — which is what
+lets ``elastic.recover_session`` prove recall returns to 1.0 after the
+fault (the acceptance property of tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import bank as bk
+from .state import POISON, SketchState
+
+KINDS = ("drop", "duplicate", "corrupt", "delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault: ``kind`` hits shard ``row`` at ingest block ``step``."""
+
+    step: int
+    row: int
+    kind: str
+    delay_steps: int = 1      # 'delay': blocks until the slice lands
+    delay_s: float = 0.0      # 'delay': synthetic flush-time inflation
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"FaultEvent.kind must be one of {KINDS}, got {self.kind!r}")
+        if self.kind == "delay" and self.delay_steps < 1:
+            raise ValueError(
+                f"delay_steps must be >= 1, got {self.delay_steps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of :class:`FaultEvent`.
+
+    Build explicitly (tests pin exact scenarios) or via :meth:`random`
+    (chaos suites sweep seeds; the same seed always yields the same
+    plan).  ``events_at(step)`` is what the session consults per block.
+    """
+
+    events: Tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def random(cls, seed: int, n_steps: int, rows: int, n_faults: int = 4,
+               kinds: Sequence[str] = KINDS) -> "FaultPlan":
+        """Seeded plan over steps 1..n_steps (session block seqs are
+        1-based: the first ingested block carries seq 1)."""
+        rng = np.random.default_rng(seed)
+        evs = []
+        for _ in range(n_faults):
+            evs.append(FaultEvent(
+                step=int(rng.integers(1, max(n_steps, 1) + 1)),
+                row=int(rng.integers(0, max(rows, 1))),
+                kind=str(rng.choice(list(kinds))),
+                delay_steps=int(rng.integers(1, 4)),
+                delay_s=float(rng.uniform(1.0, 5.0)),
+            ))
+        return cls(events=tuple(sorted(evs, key=lambda e: e.step)))
+
+    def events_at(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+    @property
+    def max_step(self) -> int:
+        return max((e.step for e in self.events), default=-1)
+
+
+@dataclasses.dataclass
+class FaultOutcome:
+    """What one block looks like after injection.
+
+    ``blocks``: the (items, weights) blocks to ingest NOW, in order
+    (the faulted block first, then any re-deliveries/duplicates);
+    ``deferred``: (due_step, items, weights) slices to ingest at a later
+    block; ``poison_rows``: rows to sentinel-poison AFTER the ingest;
+    ``delay_s``: per-row synthetic flush-time inflation to report to an
+    attached straggler monitor.
+    """
+
+    blocks: List[Tuple[np.ndarray, np.ndarray]]
+    deferred: List[Tuple[int, np.ndarray, np.ndarray]]
+    poison_rows: List[int]
+    delay_s: Dict[int, float]
+
+
+def shard_slice(items: np.ndarray, weights: np.ndarray, row: int,
+                num_shards: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(items, weights) with every weight NOT owned by ``row`` zeroed.
+
+    Shard granularity is ownership (``bank.shard_of``) — the same hash
+    every router and query path uses, so an injected fault hits exactly
+    the counters that shard monitors.
+    """
+    owner = np.asarray(jax.device_get(
+        bk.shard_of(jnp.asarray(items, jnp.int32), num_shards)))
+    w = np.where(owner == row, weights, 0).astype(weights.dtype)
+    return items, w
+
+
+def drop_shard(items: np.ndarray, weights: np.ndarray, row: int,
+               num_shards: int) -> np.ndarray:
+    """Weights with shard ``row``'s slice removed (its block was lost)."""
+    owner = np.asarray(jax.device_get(
+        bk.shard_of(jnp.asarray(items, jnp.int32), num_shards)))
+    return np.where(owner == row, 0, weights).astype(weights.dtype)
+
+
+def inject(plan: Optional[FaultPlan], step: int, num_shards: int,
+           items: np.ndarray, weights: np.ndarray) -> FaultOutcome:
+    """Apply every fault scheduled for ``step`` to one ingest block.
+
+    Deterministic and pure: the same (plan, step, block) always yields
+    the same outcome.  With no plan (or no events at this step) the
+    block passes through untouched.
+    """
+    items = np.asarray(items)
+    weights = np.asarray(weights)
+    out = FaultOutcome(blocks=[], deferred=[], poison_rows=[], delay_s={})
+    events = plan.events_at(step) if plan is not None else []
+    w = weights
+    extra: List[Tuple[np.ndarray, np.ndarray]] = []
+    for ev in events:
+        if ev.row >= num_shards:
+            continue  # plans survive a shrink; out-of-range rows no-op
+        if ev.kind == "drop":
+            w = drop_shard(items, w, ev.row, num_shards)
+        elif ev.kind == "duplicate":
+            extra.append(shard_slice(items, weights, ev.row, num_shards))
+        elif ev.kind == "delay":
+            si, sw = shard_slice(items, weights, ev.row, num_shards)
+            w = drop_shard(items, w, ev.row, num_shards)
+            out.deferred.append((step + ev.delay_steps, si, sw))
+            out.delay_s[ev.row] = max(
+                out.delay_s.get(ev.row, 0.0), ev.delay_s)
+        elif ev.kind == "corrupt":
+            out.poison_rows.append(ev.row)
+    out.blocks = [(items, w)] + extra
+    return out
+
+
+def poison_rows(state, rows: Sequence[int]):
+    """Sentinel-poison shard ``rows`` of a sharded state (in the image of
+    a torn write / dead host): ids → POISON, counts/errors → -1.
+
+    Works on :class:`repro.sketch.sharded.ShardedSketch` ((S, k) bank)
+    and :class:`repro.sketch.dyadic_sharded.DyadicShardedState`
+    ((S, bits, k) bank — the whole shard dies, every level).  The result
+    violates every invariant ``elastic.scan_rows`` checks, so detection
+    is guaranteed, and poisoned counters can never masquerade as live
+    ids (POISON < BLOCKED).
+    """
+    bank = state.bank
+    idx = jnp.asarray(list(rows), jnp.int32)
+    poisoned = SketchState(
+        ids=bank.ids.at[idx].set(POISON),
+        counts=bank.counts.at[idx].set(-1),
+        errors=bank.errors.at[idx].set(-1),
+    )
+    return state._replace(bank=poisoned)
+
+
+def faulty_update_block_fused(plan: Optional[FaultPlan], step: int,
+                              bank: SketchState, items, weights,
+                              router, variant: int = 2):
+    """Engine-level injection wrapper around ``bank.update_block_fused``.
+
+    For harnesses that drive the fused engine directly (no session):
+    applies the plan's step-``step`` events to the block, runs the same
+    fused launch(es) the healthy path would, poisons rows afterwards.
+    Deferred slices are returned for the CALLER to ingest at their due
+    step (the engine holds no state between launches).
+    """
+    out = inject(plan, step, router.num_rows, np.asarray(items),
+                 np.asarray(weights))
+    for bi, bw in out.blocks:
+        bank = bk.update_block_fused(
+            bank, jnp.asarray(bi, jnp.int32), jnp.asarray(bw, jnp.int32),
+            router, variant)
+    if out.poison_rows:
+        idx = jnp.asarray(out.poison_rows, jnp.int32)
+        bank = SketchState(
+            ids=bank.ids.at[idx].set(POISON),
+            counts=bank.counts.at[idx].set(-1),
+            errors=bank.errors.at[idx].set(-1),
+        )
+    return bank, out.deferred
+
+
+__all__ = [
+    "KINDS",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultOutcome",
+    "shard_slice",
+    "drop_shard",
+    "inject",
+    "poison_rows",
+    "faulty_update_block_fused",
+]

@@ -27,7 +27,20 @@ machinery once, on top of the functional ``repro.sketch.api`` surface:
     (each flushes pending updates first), with ``save``/``load``
     speaking the tagged checkpoint dicts *and* the pre-redesign stats
     layouts (``api.infer_spec`` adapts kind/shards to what the dict
-    actually holds).
+    actually holds); ``save(include_schedule=True)`` additionally
+    serializes the scheduling state (buffer, expiry FIFOs, counters,
+    block cursor) so a crash/resume round-trip loses and double-counts
+    nothing;
+  * **fault tolerance hooks** — an optional block ``replay`` log (the
+    last N ingested blocks, keyed by a monotone block sequence number)
+    feeds ``repro.sketch.elastic.recover_session``; an optional
+    ``fault_plan`` (``repro.sketch.faults.FaultPlan``) injects
+    drop/duplicate/corrupt/delay faults at the block boundary — the
+    replay log records the INTENDED block before injection, so recovery
+    restores the truth; an optional ``monitor``
+    (``repro.train.straggler.StragglerMonitor``) observes per-shard
+    flush timings (inflated by injected delays) so a slow shard walks
+    the straggler → flag → recovery path.
 
 Ingest through a session is bit-identical to calling ``api.update``
 (and therefore the direct engine/client spellings) on the same padded
@@ -39,6 +52,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import time
 from typing import Deque, List, Optional, Tuple
 
 import numpy as np
@@ -79,13 +93,24 @@ class StreamSession:
     batch path (``push``), in *observations* for the item path
     (``observe``).  ``state``: resume from an existing backend state
     (e.g. a restored checkpoint) instead of an empty one.
+    ``replay``: keep the last N ingested blocks (sequence-numbered, as
+    ingested — insertions AND expiry deletions) for
+    ``elastic.recover_session``; size it to at least the checkpoint
+    cadence in blocks.  ``fault_plan``: a ``faults.FaultPlan`` injected
+    at the block boundary (sharded specs only).  ``monitor``: a
+    ``StragglerMonitor`` observing per-shard flush timings.
     """
 
     def __init__(self, spec: SketchSpec, block: int = 8192,
                  window: Optional[int] = None, state=None,
-                 donate: bool = True):
+                 donate: bool = True, replay: int = 0,
+                 fault_plan=None, monitor=None):
         if block < 2:
             raise ValueError(f"block must be >= 2, got {block}")
+        if fault_plan is not None and spec.shards is None:
+            raise ValueError(
+                "fault_plan injects shard-granular faults; the spec must "
+                "be sharded (shards=S)")
         self.spec = spec
         self.block = int(block)
         self.window = window
@@ -96,6 +121,8 @@ class StreamSession:
         self._compiled = _ingest_fn(spec, self.block, donate)
         self.insertions = 0
         self.deletions = 0
+        # resize bound widening, accumulated by elastic.reshard_session
+        self.error_slack = 0
         # buffered (items, weights) fragments awaiting a flush
         self._buf_i: List[np.ndarray] = []
         self._buf_w: List[np.ndarray] = []
@@ -104,6 +131,21 @@ class StreamSession:
         self._batch_fifo: Deque[Tuple[np.ndarray, np.ndarray]] = (
             collections.deque())
         self._item_fifo: Deque[Tuple[int, int]] = collections.deque()
+        # fault-tolerance machinery (all inert by default; deque with
+        # maxlen=0 silently retains nothing, so the hot path below can
+        # append unconditionally only when replay > 0)
+        self.replay = int(replay)
+        self._seq = 0  # blocks ingested so far; block i carries seq i
+        self._replay: Deque[Tuple[int, np.ndarray, np.ndarray]] = (
+            collections.deque(maxlen=max(self.replay, 0)))
+        self.fault_plan = fault_plan
+        self.monitor = monitor
+        self._deferred = {}  # due seq -> [(items, weights)] delayed slices
+
+    @property
+    def replay_log(self) -> Tuple[Tuple[int, np.ndarray, np.ndarray], ...]:
+        """The retained (seq, items, weights) blocks, oldest first."""
+        return tuple(self._replay)
 
     # -- low-level ingest --------------------------------------------------
 
@@ -114,8 +156,65 @@ class StreamSession:
         array operands itself (a host ``jnp.asarray`` here costs ~30µs
         per operand for nothing). This is the call the session-overhead
         bench races against the raw engine launch.
+
+        The replay log records the block BEFORE fault injection: faults
+        corrupt the live state, never the recovery truth.
         """
+        self._seq += 1
+        if self.replay:
+            self._replay.append(
+                (self._seq, np.asarray(items), np.asarray(weights)))
+        if self.fault_plan is None and self.monitor is None:
+            self.state = self._compiled(self.state, items, weights)
+            return
+        self._ingest_faulty(self._seq, items, weights)
+
+    def _ingest_faulty(self, seq: int, items, weights) -> None:
+        """Fault-injected / monitored spelling of one block ingest.
+
+        Delay faults land their shard's slice at its due block, so even
+        a faulted run ingests every observation exactly once (only
+        drop/corrupt lose data — that is their point).
+        """
+        from . import faults as flt
+
+        shards = self.spec.shards or 1
+        # delayed slices that came due re-deliver BEFORE the new block
+        for due in sorted(k for k in self._deferred if k <= seq):
+            for di, dw in self._deferred.pop(due):
+                self.state = self._compiled(self.state, di, dw)
+        delay_s = {}
+        if self.fault_plan is not None:
+            out = flt.inject(self.fault_plan, seq, shards,
+                             np.asarray(items), np.asarray(weights))
+            delay_s = out.delay_s
+            primary, extra = out.blocks[0], out.blocks[1:]
+            dt = self._timed_ingest(*primary)
+            for bi, bw in extra:
+                self.state = self._compiled(self.state, bi, bw)
+            for due, di, dw in out.deferred:
+                self._deferred.setdefault(due, []).append((di, dw))
+            if out.poison_rows:
+                self.state = flt.poison_rows(self.state, out.poison_rows)
+        else:
+            dt = self._timed_ingest(items, weights)
+        if self.monitor is not None:
+            # per-shard timing: every host reports the primary block's
+            # wall time (injection overhead — re-deliveries, poisoning —
+            # is harness bookkeeping, not a host's step), and a delayed
+            # shard's host reports the injected slowdown on top
+            for r in range(shards):
+                self.monitor.observe(r, dt + delay_s.get(r, 0.0))
+
+    def _timed_ingest(self, items, weights) -> float:
+        """One compiled ingest, timed to completion when a monitor needs
+        the wall time (block_until_ready costs pipelining, so plain
+        fault-injected runs skip it)."""
+        t0 = time.perf_counter()
         self.state = self._compiled(self.state, items, weights)
+        if self.monitor is not None:
+            jax.block_until_ready(self.state)
+        return time.perf_counter() - t0
 
     def ingest(self, items, weights) -> None:
         """Validate, chunk to the session block, pad, and ingest now.
@@ -308,7 +407,14 @@ class StreamSession:
         Specs must agree on everything but ``backend`` (an execution
         path, not a layout): merging different k/variant/bits/shards
         would either break the guarantees silently (variant) or die in
-        a shape error deep inside ``state.merge`` (k).
+        a shape error deep inside ``state.merge`` (k).  Window schedules
+        must match too — merging a window=W session into a window=W'
+        one would mix expiry semantics: the merged state holds the other
+        session's live mass, but its pending expiries would fire on the
+        wrong horizon (or never), silently breaking the bounded-deletion
+        alpha the capacity was sized for.  Compatible windowed sessions
+        carry the other's pending expiry FIFOs over, so every scheduled
+        deletion still fires exactly once.
         """
         import dataclasses
 
@@ -317,23 +423,72 @@ class StreamSession:
             raise ValueError(
                 f"cannot merge sessions of different layouts: "
                 f"{self.spec} vs {other.spec} (only `backend` may differ)")
+        if self.window != other.window:
+            raise ValueError(
+                f"cannot merge sessions with mismatched window schedules "
+                f"(window={self.window} vs window={other.window}): the "
+                f"absorbed session's pending expiries would fire on the "
+                f"wrong horizon, silently mixing deletion semantics. "
+                f"Re-create both sessions with the same window, or flush "
+                f"the windows (push window more batches / observe window "
+                f"more items) before merging.")
         self.flush()
         other.flush()
         self.state = api.merge(self.spec, self.state, other.state)
         self.insertions += other.insertions
         self.deletions += other.deletions
+        self.error_slack += other.error_slack
+        # carry pending expiries: the merged state contains the other
+        # session's live mass, so its scheduled deletions must still fire
+        self._batch_fifo.extend(other._batch_fifo)
+        self._item_fifo.extend(other._item_fifo)
 
     def consolidated(self):
         """Single-host summary (identity when unsharded)."""
         self.flush()
         return api.consolidate(self.spec, self.state)
 
-    def save(self) -> dict:
-        """Tagged checkpoint dict of the sketch state (scheduling state —
-        fifos, counters — is the caller's to persist; the stats trackers
-        do)."""
-        self.flush()
-        return api.save(self.spec, self.state)
+    def save(self, include_schedule: bool = False) -> dict:
+        """Tagged checkpoint dict of the sketch state.
+
+        ``include_schedule=False`` (the legacy contract): flush pending
+        updates into the state, save the sketch only — scheduling state
+        (fifos, counters) is the caller's to persist; the stats trackers
+        do.
+
+        ``include_schedule=True``: do NOT flush — serialize the live
+        scheduling state alongside the sketch (``sched_*`` keys: the
+        unflushed buffer, both expiry FIFOs, the insertion/deletion
+        totals, the block-sequence cursor, the window and the resize
+        ``error_slack``) so a ``load`` of this dict resumes the session
+        mid-stream with no observation lost, double-counted, or expired
+        on the wrong horizon.  This is also the checkpoint
+        ``elastic.recover_session`` rebuilds from (``sched_seq`` keys
+        its replay).
+        """
+        if not include_schedule:
+            self.flush()
+            return api.save(self.spec, self.state)
+        d = api.save(self.spec, self.state)
+        cat = lambda frags: (np.concatenate(frags) if len(frags) > 1
+                             else frags[0] if frags
+                             else np.zeros(0, np.int32))
+        d["sched_buf_items"] = cat(self._buf_i)
+        d["sched_buf_weights"] = cat(self._buf_w)
+        d["sched_item_fifo_items"] = np.asarray(
+            [i for i, _ in self._item_fifo], np.int32)
+        d["sched_item_fifo_weights"] = np.asarray(
+            [w for _, w in self._item_fifo], np.int32)
+        d["sched_batch_items"] = cat([b for b, _ in self._batch_fifo])
+        d["sched_batch_weights"] = cat([w for _, w in self._batch_fifo])
+        d["sched_batch_lens"] = np.asarray(
+            [len(b) for b, _ in self._batch_fifo], np.int64)
+        d["sched_insertions"] = self.insertions
+        d["sched_deletions"] = self.deletions
+        d["sched_seq"] = self._seq
+        d["sched_window"] = -1 if self.window is None else int(self.window)
+        d["sched_error_slack"] = self.error_slack
+        return d
 
     def load(self, d: dict) -> None:
         """Restore from a ``save`` dict or a pre-redesign stats layout,
@@ -342,17 +497,57 @@ class StreamSession:
         ALL scheduling state resets together — buffers, expiry FIFOs and
         the insertion/deletion totals — so the session is never half-old
         (counters describing batches whose expiries were dropped).
-        Callers that persist scheduling state alongside the sketch (the
-        stats trackers) restore the counters and FIFO after this call.
+        A ``save(include_schedule=True)`` dict then restores the full
+        scheduling state on top (crash/resume resumes mid-stream);
+        callers that persist scheduling state out-of-band (the stats
+        trackers) restore their counters and FIFO after this call.
         """
         self._buf_i, self._buf_w, self._buf_n = [], [], 0
         self._batch_fifo.clear()
         self._item_fifo.clear()
         self.insertions = 0
         self.deletions = 0
+        self.error_slack = 0
+        self._seq = 0
+        self._replay.clear()
+        self._deferred = {}
         self.spec = api.infer_spec(self.spec, d)
         self.state = api.restore(self.spec, d)
         self._compiled = _ingest_fn(self.spec, self.block, self.donate)
+        if "sched_seq" in d:
+            self._restore_schedule(d)
+
+    def _restore_schedule(self, d: dict) -> None:
+        saved_w = int(np.asarray(d["sched_window"]))
+        saved_window = None if saved_w < 0 else saved_w
+        if self.window != saved_window:
+            raise ValueError(
+                f"checkpoint carries window={saved_window} but this "
+                f"session was built with window={self.window}; resuming "
+                f"would re-schedule its pending expiries on the wrong "
+                f"horizon. Construct the session with "
+                f"window={saved_window} to resume this checkpoint.")
+        bi = np.asarray(d["sched_buf_items"], np.int32)
+        bw = np.asarray(d["sched_buf_weights"], np.int32)
+        self._buf_i = [bi] if len(bi) else []
+        self._buf_w = [bw] if len(bw) else []
+        self._buf_n = len(bi)
+        self._item_fifo = collections.deque(
+            (int(i), int(w)) for i, w in zip(
+                np.asarray(d["sched_item_fifo_items"]),
+                np.asarray(d["sched_item_fifo_weights"])))
+        cat_i = np.asarray(d["sched_batch_items"], np.int32)
+        cat_w = np.asarray(d["sched_batch_weights"], np.int32)
+        self._batch_fifo = collections.deque()
+        s = 0
+        for n in np.asarray(d["sched_batch_lens"], np.int64):
+            n = int(n)
+            self._batch_fifo.append((cat_i[s:s + n], cat_w[s:s + n]))
+            s += n
+        self.insertions = int(np.asarray(d["sched_insertions"]))
+        self.deletions = int(np.asarray(d["sched_deletions"]))
+        self._seq = int(np.asarray(d["sched_seq"]))
+        self.error_slack = int(np.asarray(d["sched_error_slack"]))
 
 
 __all__ = ["StreamSession", "_ingest_fn"]

@@ -33,6 +33,11 @@ _INT_MAX = jnp.int32(2**31 - 1)
 # empty, never min-count, never max-error).
 LANES = 128
 BLOCKED = jnp.int32(-2)
+# POISON marks a shard row as dead/corrupt (the fault-injection harness
+# writes it; ``repro.sketch.elastic.scan_rows`` detects any id below
+# BLOCKED as a structural-invariant violation). No healthy code path ever
+# writes an id < BLOCKED.
+POISON = jnp.int32(-3)
 
 
 class SketchState(NamedTuple):
@@ -146,6 +151,7 @@ def to_dict(state: SketchState) -> dict:
 __all__ = [
     "EMPTY",
     "BLOCKED",
+    "POISON",
     "LANES",
     "VARIANT_LAZY",
     "VARIANT_SSPM",

@@ -438,3 +438,107 @@ def test_session_merge_from_rejects_layout_mismatch():
         a.merge_from(StreamSession(_freq_spec(variant="lazy"), block=32))
     # backend is an execution path, not a layout: merge allowed
     a.merge_from(StreamSession(_freq_spec(backend="block"), block=32))
+
+
+# ---------------------------------------------------------------------------
+# Corrupted/truncated checkpoints: restore must raise, never half-load
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_missing_keys():
+    spec = _freq_spec()
+    d = api.save(spec, _fed_state(spec))
+    for key in ("ids", "counts", "errors"):
+        broken = {k: v for k, v in d.items() if k != key}
+        with pytest.raises(ValueError, match="missing key"):
+            api.restore(spec, broken)
+
+
+def test_restore_rejects_missing_mass_for_quantile():
+    spec = api.SketchSpec(kind="quantile", k=256, bits=BITS)
+    d = api.save(spec, _fed_state(spec))
+    del d["mass"]
+    with pytest.raises(ValueError, match="mass"):
+        api.restore(spec, d)
+
+
+def test_restore_rejects_float_dtypes():
+    """A float counter field means corruption (NaN poisoning only exists
+    in float arrays) — refuse instead of silently truncating."""
+    spec = _freq_spec()
+    d = api.save(spec, _fed_state(spec))
+    d["counts"] = d["counts"].astype(np.float32)
+    d["counts"][0] = np.nan
+    with pytest.raises(ValueError, match="dtype"):
+        api.restore(spec, d)
+
+
+def test_restore_rejects_shape_mismatch():
+    spec = _freq_spec()
+    d = api.save(spec, _fed_state(spec))
+    d["errors"] = d["errors"][:-3]  # truncated write
+    with pytest.raises(ValueError, match="shape"):
+        api.restore(spec, d)
+
+
+def test_restore_rejects_unknown_layout_tag():
+    spec = _freq_spec()
+    d = api.save(spec, _fed_state(spec))
+    d["layout"] = np.int32(7)
+    with pytest.raises(ValueError, match="layout tag"):
+        api.restore(spec, d)
+    with pytest.raises(ValueError, match="layout tag"):
+        api.infer_spec(spec, d)
+
+
+def test_session_load_rejects_corrupt_dict_without_side_effects():
+    """A failed load must not leave the session half-loaded: the old
+    state keeps serving."""
+    spec = _freq_spec(k=256)
+    sess = StreamSession(spec, block=64)
+    sess.extend(np.full(5, 3, np.int32))
+    before = int(sess.query(3))
+    d = sess.save()
+    del d["counts"]
+    with pytest.raises(ValueError, match="missing key"):
+        sess.load(d)
+    assert int(api.query(sess.spec, sess.state, 3)) == before
+
+
+# ---------------------------------------------------------------------------
+# merge_from window-schedule compatibility (satellite)
+# ---------------------------------------------------------------------------
+
+def test_merge_from_rejects_window_mismatch_both_directions():
+    qspec = api.SketchSpec(kind="quantile", k=512, bits=BITS)
+    a = StreamSession(qspec, block=32, window=10)
+    b = StreamSession(qspec, block=32, window=20)
+    with pytest.raises(ValueError, match="window"):
+        a.merge_from(b)
+    with pytest.raises(ValueError, match="window"):
+        b.merge_from(a)
+    # windowed vs unwindowed is a mismatch too
+    c = StreamSession(qspec, block=32)
+    with pytest.raises(ValueError, match="window"):
+        a.merge_from(c)
+    with pytest.raises(ValueError, match="window"):
+        c.merge_from(a)
+
+
+def test_merge_from_carries_pending_expiries():
+    """Compatible windowed sessions merge and the absorbed session's
+    scheduled deletions still fire — mass converges to the union of both
+    windows, not window + leaked-forever mass."""
+    spec = _freq_spec(k=256)
+    a = StreamSession(spec, block=64, window=2)
+    b = StreamSession(spec, block=64, window=2)
+    for step in range(3):
+        a.push(np.full(4, 10 + step, np.int32), np.ones(4, np.int32))
+        b.push(np.full(4, 20 + step, np.int32), np.ones(4, np.int32))
+    a.merge_from(b)
+    assert len(a.batch_fifo) == 4  # both live windows carried over
+    # four more pushes expire every carried batch exactly once
+    for step in range(4):
+        a.push(np.full(4, 30 + step, np.int32), np.ones(4, np.int32))
+    for item in (11, 12, 21, 22):  # pre-merge live batches: expired now
+        assert int(a.query(item)) == 0, item
+    assert a.deletions == 4 * (a.insertions // 4 - 2)  # all but last window

@@ -30,6 +30,39 @@ def test_straggler_detection_injected_delays():
     assert fired and fired[0][0] == 1
 
 
+def test_straggler_hysteresis_unflags_after_transient_slowdown():
+    """A host that straggles transiently flags, then un-flags after
+    sustained healthy timings — with the on_recovered hook fired once.
+    A single lucky step must NOT clear the flag (recover_sustained)."""
+    flagged_events, recovered_events = [], []
+    mon = StragglerMonitor(
+        StragglerConfig(min_steps=4, z_threshold=3.0, sustained=2,
+                        recover_z=2.0, recover_sustained=3),
+        on_straggler=lambda h, t, z: flagged_events.append(h),
+        on_recovered=lambda h, t: recovered_events.append(h),
+    )
+    for i in range(40):
+        slow = 5.0 if 20 <= i < 24 else 0.0  # 4-step transient
+        mon.observe(0, 1.0 + 0.01 * (i % 3) + slow)
+    assert 0 in flagged_events           # the transient did flag
+    assert 0 not in mon.flagged          # ...and recovery un-flagged
+    assert recovered_events == [0]       # exactly one recovery event
+    assert mon._recover_run.get(0, 0) == 0
+
+
+def test_straggler_recovery_needs_sustained_health():
+    """One healthy step between outliers must not un-flag."""
+    mon = StragglerMonitor(
+        StragglerConfig(min_steps=4, z_threshold=3.0, sustained=1,
+                        recover_z=2.0, recover_sustained=3))
+    for i in range(16):
+        mon.observe(1, 1.0 + 0.01 * (i % 3))
+    # alternate outlier / healthy: recover run never reaches 3
+    for i in range(10):
+        mon.observe(1, 6.0 if i % 2 == 0 else 1.0)
+    assert 1 in mon.flagged
+
+
 def test_straggler_no_false_positive_on_noise():
     mon = StragglerMonitor(StragglerConfig(min_steps=4))
     rng = np.random.default_rng(0)

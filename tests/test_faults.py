@@ -1,0 +1,207 @@
+"""Fault-injection harness tests (repro.sketch.faults) + the chaos suite.
+
+The unmarked tests pin the harness mechanics: plans are deterministic
+per seed, injection partitions blocks exactly along shard ownership,
+and the engine-level wrapper equals the healthy launch modulo the
+injected fault.
+
+The ``chaos``-marked tests drive full sessions through seeded random
+fault plans (drop/duplicate/corrupt/delay) and assert the recovery
+invariant that makes the whole subsystem trustworthy: restoring the
+pre-fault checkpoint and replaying the intended-block log reproduces
+the never-failed twin bit-for-bit, whatever the plan did to the live
+state.  CI runs them as ``pytest -m chaos`` over a fixed seed matrix;
+``CHAOS_SEED`` selects one seed locally.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch import api, bank as bk, elastic, faults, sharded as shd
+from repro.sketch.session import StreamSession
+from repro.train.straggler import StragglerConfig, StragglerMonitor
+
+S = 4
+CHAOS_SEEDS = ([int(os.environ["CHAOS_SEED"])]
+               if os.environ.get("CHAOS_SEED") else [0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Harness mechanics (deterministic, always on)
+# ---------------------------------------------------------------------------
+
+def test_plan_is_deterministic_per_seed():
+    a = faults.FaultPlan.random(seed=7, n_steps=50, rows=S)
+    b = faults.FaultPlan.random(seed=7, n_steps=50, rows=S)
+    c = faults.FaultPlan.random(seed=8, n_steps=50, rows=S)
+    assert a == b
+    assert a != c
+    assert all(1 <= e.step <= 50 and 0 <= e.row < S for e in a.events)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultEvent(step=1, row=0, kind="explode")
+    with pytest.raises(ValueError, match="delay_steps"):
+        faults.FaultEvent(step=1, row=0, kind="delay", delay_steps=0)
+
+
+def test_shard_slices_partition_the_block():
+    """The per-shard slices are a partition of the block's weight mass —
+    injection can never invent or lose mass by mis-slicing."""
+    rng = np.random.default_rng(0)
+    items = rng.integers(0, 1000, 256).astype(np.int32)
+    weights = rng.integers(-3, 7, 256).astype(np.int32)
+    total = np.zeros_like(weights)
+    for r in range(S):
+        _, w = faults.shard_slice(items, weights, r, S)
+        total += w
+    np.testing.assert_array_equal(total, weights)
+
+
+def test_drop_removes_exactly_the_owned_slice():
+    rng = np.random.default_rng(1)
+    items = rng.integers(0, 1000, 128).astype(np.int32)
+    weights = np.ones(128, np.int32)
+    w = faults.drop_shard(items, weights, 2, S)
+    owner = np.asarray(jax.device_get(
+        bk.shard_of(jnp.asarray(items), S)))
+    assert (w[owner == 2] == 0).all()
+    assert (w[owner != 2] == 1).all()
+
+
+def test_inject_no_plan_is_identity():
+    items = np.arange(64, dtype=np.int32)
+    weights = np.ones(64, np.int32)
+    out = faults.inject(None, 3, S, items, weights)
+    assert len(out.blocks) == 1
+    np.testing.assert_array_equal(out.blocks[0][1], weights)
+    assert not out.deferred and not out.poison_rows and not out.delay_s
+
+
+def test_faulty_engine_wrapper_matches_predropped_ingest():
+    """Engine-level drop == the healthy fused launch on the pre-dropped
+    weights (the wrapper adds faults, never semantics)."""
+    rng = np.random.default_rng(2)
+    items = jnp.asarray(rng.integers(0, 500, 256), jnp.int32)
+    weights = jnp.ones(256, jnp.int32)
+    router = bk.HashShardRouter(S)
+    b0 = shd.init(256, S).bank
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=1, row=1, kind="drop"),))
+    got, deferred = faults.faulty_update_block_fused(
+        plan, 1, b0, items, weights, router)
+    assert not deferred
+    w_ref = jnp.asarray(faults.drop_shard(
+        np.asarray(items), np.asarray(weights), 1, S))
+    want = bk.update_block_fused(b0, items, w_ref, router, 2)
+    for x, y in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_delay_defers_and_redelivers_exactly_once():
+    """A delayed slice lands at its due block: the final state equals
+    the fault-free run (capacity >= universe, so order cannot matter)."""
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=2, row=0, kind="delay", delay_steps=2),))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    ref = StreamSession(spec, block=64)
+    rng = np.random.default_rng(3)
+    for _ in range(6):                       # due step 4 < 6: it lands
+        blk = rng.integers(0, 128, 64)
+        sess.ingest(blk, np.ones(64, np.int64))
+        ref.ingest(blk, np.ones(64, np.int64))
+    probe = np.arange(128)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(sess.query_many(probe))),
+        np.asarray(jax.device_get(ref.query_many(probe))))
+
+
+def test_delay_fault_walks_the_straggler_path():
+    """Two sustained delay events on one shard flag exactly that shard
+    host on the session-attached monitor."""
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    flagged = []
+    mon = StragglerMonitor(
+        StragglerConfig(min_steps=4, sustained=2, z_threshold=3.0),
+        on_straggler=lambda h, t, z: flagged.append(h))
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=10, row=1, kind="delay", delay_s=5.0),
+        faults.FaultEvent(step=11, row=1, kind="delay", delay_s=5.0),
+    ))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    rng = np.random.default_rng(4)
+    # warm the compiled ingest BEFORE attaching the monitor: the first
+    # block carries jit compile time, which would poison the timing
+    # baseline the z-score is measured against
+    sess.ingest(rng.integers(0, 128, 64), np.ones(64, np.int64))
+    sess.monitor = mon
+    for _ in range(13):
+        sess.ingest(rng.integers(0, 128, 64), np.ones(64, np.int64))
+    assert 1 in mon.flagged
+    assert all(h == 1 for h in flagged)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: seeded random plans, recovery must always reproduce the twin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+@pytest.mark.parametrize("kind_kw", [
+    dict(kind="frequency", k=512),
+    dict(kind="quantile", k=2048, bits=8),
+])
+def test_chaos_recovery_reproduces_never_failed_twin(seed, kind_kw):
+    """Whatever a random plan drops/duplicates/corrupts/delays, restoring
+    the checkpoint and replaying the intended-block log rebuilds the
+    exact state of a never-failed twin — the exactly-once guarantee."""
+    universe = 1 << 8
+    n_blocks = 24
+    spec = api.SketchSpec(shards=S, **kind_kw)
+    plan = faults.FaultPlan.random(seed=seed, n_steps=n_blocks, rows=S,
+                                   n_faults=6)
+    sess = StreamSession(spec, block=64, replay=2 * n_blocks,
+                         fault_plan=plan)
+    ref = StreamSession(spec, block=64)
+    rng = np.random.default_rng(seed + 100)
+    ckpt = sess.save(include_schedule=True)
+    for _ in range(n_blocks):
+        blk = rng.integers(0, universe, 64)
+        sess.ingest(blk, np.ones(64, np.int64))
+        ref.ingest(blk, np.ones(64, np.int64))
+    # full rebuild: splice every row from the checkpoint+replay rebuild
+    report = elastic.recover_session(sess, ckpt, rows=range(S))
+    assert report.replayed_blocks >= n_blocks
+    for lx, ly in zip(jax.tree.leaves(sess.state),
+                      jax.tree.leaves(ref.state)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(lx)), np.asarray(jax.device_get(ly)))
+    # and the acceptance framing: top-k recall is back to 1.0
+    ids_r, _ = api.topk(spec, ref.state, 16)
+    ids_s, _ = api.topk(spec, sess.state, 16)
+    want = {int(i) for i in np.asarray(jax.device_get(ids_r)) if i >= 0}
+    got = {int(i) for i in np.asarray(jax.device_get(ids_s)) if i >= 0}
+    assert want <= got
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_corruption_always_detected(seed):
+    """Every corrupt event leaves a row scan_rows flags; rows without
+    one scan clean (no false negatives on the fault model)."""
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    plan = faults.FaultPlan.random(seed=seed, n_steps=16, rows=S,
+                                   n_faults=5, kinds=("corrupt", "drop"))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    rng = np.random.default_rng(seed)
+    for _ in range(16):
+        sess.ingest(rng.integers(0, 256, 64), np.ones(64, np.int64))
+    corrupted = {e.row for e in plan.events if e.kind == "corrupt"}
+    dead = elastic.dead_shards(spec, sess.state)
+    assert set(np.flatnonzero(dead)) == corrupted

@@ -56,7 +56,8 @@ def test_package_root_reexports_match_layers():
     for name in pkg.__all__:
         obj = getattr(pkg, name)
         if name in ("bank", "blocks", "dyadic", "dyadic_sharded", "phases",
-                    "sharded", "state", "jax_sketch", "api", "session"):
+                    "sharded", "state", "jax_sketch", "api", "session",
+                    "elastic", "faults"):
             continue
         if name in ("SketchSpec", "StreamSession"):
             # the spec-driven surface lives in its own layer modules
@@ -64,6 +65,12 @@ def test_package_root_reexports_match_layers():
 
             assert obj is getattr(api_mod, name, None) or \
                 obj is getattr(sess_mod, name, None), name
+            continue
+        if name in ("FaultEvent", "FaultPlan"):
+            # the fault-injection surface lives in sketch.faults
+            from repro.sketch import faults as faults_mod
+
+            assert obj is getattr(faults_mod, name, None), name
             continue
         home = next(m for m in (state, phases, blocks)
                     if hasattr(m, name))
