@@ -41,6 +41,9 @@ BENCHES = {
                 "live resize + fault recovery (BENCH_elastic.json)"),
     "compression": ("benchmarks.bench_compression", "grad compression bytes"),
     "h2o": ("benchmarks.bench_h2o_quality", "SS± KV-cache retention quality"),
+    "family": ("benchmarks.bench_family",
+               "SS± family frontier: double/unbiased/crprecis "
+               "(BENCH_family.json)"),
 }
 
 # --smoke shape overrides: every bench still executes end to end (import,
@@ -59,6 +62,7 @@ SMOKE_KW = {
     "elastic": dict(smoke=True, write_json=False),
     "compression": {},
     "h2o": {},
+    "family": dict(smoke=True, write_json=False),
 }
 
 

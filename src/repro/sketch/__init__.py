@@ -29,6 +29,10 @@ Layered package (DESIGN.md §9-§10):
     frozen :class:`SketchSpec` (kind × sizing × variant × shards ×
     backend) resolved through an adapter registry to every layout
     above, with uniform update/query/topk/rank/merge/save/restore;
+  * ``family``  — the SpaceSaving± family beyond the core store:
+    Double SpaceSaving± and unbiased SpaceSaving± (coupled two-bank
+    layouts over the engine) plus the CR-precis deterministic linear
+    baseline, each a registered spec-reachable adapter (DESIGN.md §13);
   * ``session`` — :class:`StreamSession`, the stateful companion:
     host-side block buffering and padding, cached jitted ingest per
     (spec, block), windowed bounded-deletion scheduling, block replay
@@ -54,7 +58,7 @@ from . import (
     sharded,
     state,
 )
-from . import api, elastic, faults, session
+from . import api, elastic, family, faults, session
 from .api import SketchSpec
 from .faults import FaultEvent, FaultPlan
 from .session import StreamSession
@@ -106,6 +110,7 @@ __all__ = [
     "api",
     "session",
     "elastic",
+    "family",
     "faults",
     "SketchSpec",
     "StreamSession",

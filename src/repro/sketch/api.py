@@ -64,13 +64,22 @@ from . import state as st
 from .state import VARIANT_LAZY, VARIANT_SSPM, SketchState
 
 KINDS = ("frequency", "quantile")
-VARIANTS = {"sspm": VARIANT_SSPM, "lazy": VARIANT_LAZY}
+# variant name -> engine-layer integer. The family variants ('double',
+# 'unbiased') map to VARIANT_SSPM because their underlying banks run
+# plain SpaceSaving updates on insert-only streams (deletions feed the
+# second bank as insertions — repro.sketch.family); the spec-level name
+# still selects the family adapter via the registry axis.
+VARIANTS = {"sspm": VARIANT_SSPM, "lazy": VARIANT_LAZY,
+            "double": VARIANT_SSPM, "unbiased": VARIANT_SSPM}
+FAMILY_VARIANTS = ("double", "unbiased")
 BACKENDS = ("bank", "block", "kernel", "serial")
 
 # integer layout tags (strings would not survive the np.savez round trip
 # of train/checkpoint.py); absence of the tag marks a pre-redesign dict.
 LAYOUT_FREQUENCY = 1
 LAYOUT_QUANTILE = 2
+LAYOUT_DOUBLE = 3     # two coupled banks (Double / unbiased SpaceSaving±)
+LAYOUT_CRPRECIS = 4   # CR-precis prime-modulus counter array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,10 +124,10 @@ class SketchSpec:
                 f"SketchSpec.variant must be one of {tuple(VARIANTS)}, got "
                 f"{self.variant!r} (the integer VARIANT_* constants belong "
                 f"to the engine layer; the spec speaks names)")
-        if self.backend not in BACKENDS:
+        if self.backend not in BACKENDS + ("crprecis",):
             raise ValueError(
-                f"SketchSpec.backend must be one of {BACKENDS}, got "
-                f"{self.backend!r}")
+                f"SketchSpec.backend must be one of "
+                f"{BACKENDS + ('crprecis',)}, got {self.backend!r}")
         if (self.k is None) == (self.eps is None):
             raise ValueError(
                 "size the spec with exactly one of k (total counters) or "
@@ -130,11 +139,18 @@ class SketchSpec:
                 "[0, 2^bits) fixes the layer count)")
         if self.shards is not None and self.shards < 1:
             raise ValueError(f"shards must be >= 1 or None, got {self.shards}")
-        if self.backend not in backends_for(self.kind, self.shards):
+        if self.variant in FAMILY_VARIANTS and self.kind != "frequency":
+            raise ValueError(
+                f"variant={self.variant!r} (the Double/unbiased "
+                f"SpaceSaving± family) is a frequency-kind layout; "
+                f"kind={self.kind!r} does not support it")
+        if self.backend not in backends_for(self.kind, self.shards,
+                                            self.variant):
             raise ValueError(
                 f"backend {self.backend!r} is not supported for "
-                f"kind={self.kind!r}, shards={self.shards}; supported: "
-                f"{backends_for(self.kind, self.shards)}")
+                f"kind={self.kind!r}, shards={self.shards}, "
+                f"variant={self.variant!r}; supported: "
+                f"{backends_for(self.kind, self.shards, self.variant)}")
 
     @property
     def variant_id(self) -> int:
@@ -161,13 +177,34 @@ class SketchSpec:
             self.bits, total_counters=self.k, eps=self.eps, alpha=self.alpha)
 
 
-def backends_for(kind: str, shards: Optional[int]) -> Tuple[str, ...]:
-    """Execution paths a (kind, sharded?) combination supports."""
+def backends_for(kind: str, shards: Optional[int],
+                 variant: str = "sspm") -> Tuple[str, ...]:
+    """Execution paths a (kind, sharded?, variant) combination supports.
+
+    The family variants run only through the fused bank engine (their
+    coupled banks are engine banks by construction); the deterministic
+    CR-precis layout is reachable as ``backend='crprecis'`` on unsharded
+    sspm frequency specs (it is a different summary, not an execution
+    path of the SpaceSaving± store — sharding it would break its linear
+    row arithmetic for no space gain).
+    """
+    if variant in FAMILY_VARIANTS:
+        return ("bank",) if kind == "frequency" else ()
     if kind == "quantile" and shards:
         # the composed shard × level bank only runs the fused engine
         # (its shard_map path is selected automatically under a mesh)
         return ("bank",)
+    if kind == "frequency" and not shards:
+        # crprecis has no lazy/sspm distinction; it hangs off the sspm
+        # default so the grid carries exactly one cell for it
+        extra = ("crprecis",) if variant == "sspm" else ()
+        return BACKENDS + extra
     return BACKENDS
+
+
+def variants_for(kind: str) -> Tuple[str, ...]:
+    """Variant names a kind supports (the family is frequency-only)."""
+    return tuple(VARIANTS) if kind == "frequency" else ("sspm", "lazy")
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +262,17 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
     if np.abs(w.astype(np.int64)).max(initial=0) > int32_max:
         raise ValueError(
             "weights must fit int32 (the device-side count dtype)")
+    wsum = int(np.abs(w.astype(np.int64)).sum())
+    if wsum > int32_max:
+        # a single block whose weight magnitudes sum past int32 could
+        # push a counter through _INT_MAX mid-aggregation; the fused
+        # cores saturate rather than wrap, but saturation loses mass —
+        # reject at the host boundary where the caller can still split.
+        raise ValueError(
+            f"block weight magnitudes sum to {wsum} > int32 max "
+            f"({int32_max}): a single block this heavy could overflow "
+            f"the int32 counters (adds saturate, losing mass). Split "
+            f"the block or rescale the weights.")
     if spec.kind == "quantile":
         hi = 1 << spec.bits
         if (i[real] >= hi).any():
@@ -454,29 +502,59 @@ def _sketch_fields(d) -> SketchState:
     )
 
 
-# registry key: (kind, sharded?) — new layouts register here instead of
-# teaching every consumer a fifth client module.
-_REGISTRY: Dict[Tuple[str, bool], Any] = {}
+# registry key: (kind, sharded?, axis) — new layouts register here
+# instead of teaching every consumer a fifth client module. The third
+# axis discriminates same-kind layout families: 'base' is the plain
+# SpaceSaving± store, 'double'/'unbiased' the coupled two-bank family
+# layouts, 'crprecis' the deterministic linear-counter baseline.
+_REGISTRY: Dict[Tuple[str, bool, str], Any] = {}
 
 
-def register_adapter(kind: str, sharded: bool, adapter) -> None:
+def spec_axis(spec: SketchSpec) -> str:
+    """The registry's layout-family axis of a spec."""
+    if spec.backend == "crprecis":
+        return "crprecis"
+    if spec.variant in FAMILY_VARIANTS:
+        return spec.variant
+    return "base"
+
+
+def register_adapter(kind: str, sharded: bool, adapter,
+                     axis: str = "base") -> None:
     """Plug a new backend layout into the spec-driven surface."""
-    _REGISTRY[(kind, sharded)] = adapter
+    _REGISTRY[(kind, sharded, axis)] = adapter
 
 
 def adapter_for(spec: SketchSpec):
     try:
-        return _REGISTRY[(spec.kind, spec.shards is not None)]
+        return _REGISTRY[(spec.kind, spec.shards is not None,
+                          spec_axis(spec))]
     except KeyError:
         raise ValueError(
             f"no adapter registered for kind={spec.kind!r}, "
-            f"sharded={spec.shards is not None}") from None
+            f"sharded={spec.shards is not None}, "
+            f"axis={spec_axis(spec)!r}") from None
 
 
 register_adapter("frequency", False, _FrequencyAdapter())
 register_adapter("frequency", True, _ShardedFrequencyAdapter())
 register_adapter("quantile", False, _DyadicAdapter())
 register_adapter("quantile", True, _DyadicShardedAdapter())
+
+# the SpaceSaving± family layouts (Double / unbiased SS± + CR-precis)
+# live in family.py and register on their own registry axes — imported
+# after the registry exists (family.py never imports api at module
+# scope, so this is acyclic).
+from . import family as _family  # noqa: E402
+
+register_adapter("frequency", False, _family.DoubleAdapter(), axis="double")
+register_adapter("frequency", True, _family.DoubleAdapter(), axis="double")
+register_adapter("frequency", False, _family.DoubleAdapter(unbiased=True),
+                 axis="unbiased")
+register_adapter("frequency", True, _family.DoubleAdapter(unbiased=True),
+                 axis="unbiased")
+register_adapter("frequency", False, _family.CRPrecisAdapter(),
+                 axis="crprecis")
 
 
 # ---------------------------------------------------------------------------
@@ -582,11 +660,14 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
     ``shards`` key — exactly the discrimination the old
     ``_SketchBank.load_state_dict`` applied.
     """
+    known = {LAYOUT_FREQUENCY: "frequency", LAYOUT_QUANTILE: "quantile",
+             LAYOUT_DOUBLE: "double/unbiased family",
+             LAYOUT_CRPRECIS: "crprecis"}
     tag = int(np.asarray(d["layout"])) if "layout" in d else None
-    if tag is not None and tag not in (LAYOUT_FREQUENCY, LAYOUT_QUANTILE):
+    if tag is not None and tag not in known:
         raise ValueError(
             f"unknown checkpoint layout tag {tag} (known: "
-            f"{LAYOUT_FREQUENCY}=frequency, {LAYOUT_QUANTILE}=quantile); "
+            f"{ {t: n for t, n in known.items()} }); "
             f"the dict is corrupted or written by a newer layout")
     kind = ("quantile" if tag == LAYOUT_QUANTILE or
             (tag is None and "mass" in d) else "frequency")
@@ -600,10 +681,30 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
             changes["bits"] = int(np.asarray(d["ids"]).shape[-2])
     if shards != spec.shards:
         changes["shards"] = shards
+    # layout-family axes: the family tag carries which variant wrote it
+    # (1 = double, 2 = unbiased); the crprecis tag forces its backend.
+    if tag == LAYOUT_DOUBLE:
+        want = "unbiased" if int(np.asarray(d.get("family", 1))) == 2 \
+            else "double"
+        if spec.variant != want:
+            changes["variant"] = want
+        if spec.backend != "bank":
+            changes["backend"] = "bank"
+    elif tag == LAYOUT_CRPRECIS:
+        if spec.backend != "crprecis":
+            changes["backend"] = "crprecis"
+        if spec.variant != "sspm":
+            changes["variant"] = "sspm"
+    else:
+        if spec.variant in FAMILY_VARIANTS:
+            changes["variant"] = "sspm"
+        if spec.backend == "crprecis":
+            changes["backend"] = "bank"
     if changes and "backend" not in changes:
         # the stored layout may not support the spec's backend
         probe = dataclasses.replace(spec, **changes, backend="bank")
-        if spec.backend not in backends_for(probe.kind, probe.shards):
+        if spec.backend not in backends_for(probe.kind, probe.shards,
+                                            probe.variant):
             changes["backend"] = "bank"
     return dataclasses.replace(spec, **changes) if changes else spec
 
@@ -619,28 +720,48 @@ def _validate_checkpoint(spec: SketchSpec, d: Dict[str, Any]) -> None:
     truncate, and NaN poisoning only exists in float arrays), and the
     three counter fields shape-consistent.
     """
+    axis = spec_axis(spec)
+    if axis == "crprecis":
+        # linear counter array: no ids/errors, just counters + moduli
+        for key in ("counts", "primes"):
+            if key not in d:
+                raise ValueError(
+                    f"checkpoint dict is missing key {key!r} (truncated "
+                    f"write?); a crprecis checkpoint needs counts + primes")
+            if np.asarray(d[key]).dtype.kind not in "iu":
+                raise ValueError(
+                    f"checkpoint field {key!r} has dtype "
+                    f"{np.asarray(d[key]).dtype}; crprecis counters and "
+                    f"moduli are integer arrays")
+        return
     required = ["ids", "counts", "errors"]
     if spec.kind == "quantile":
         required.append("mass")
+    triples = [("ids", "counts", "errors")]
+    if axis in FAMILY_VARIANTS:
+        # the delete-side bank rides along under _del suffixes
+        required += ["ids_del", "counts_del", "errors_del"]
+        triples.append(("ids_del", "counts_del", "errors_del"))
     missing = [k for k in required if k not in d]
     if missing:
         raise ValueError(
             f"checkpoint dict is missing key(s) {missing} (truncated "
             f"write?); a {spec.kind!r} checkpoint needs {required}")
-    shapes = {}
-    for key in ("ids", "counts", "errors"):
-        arr = np.asarray(d[key])
-        if arr.dtype.kind not in "iu":
+    for keys in triples:
+        shapes = {}
+        for key in keys:
+            arr = np.asarray(d[key])
+            if arr.dtype.kind not in "iu":
+                raise ValueError(
+                    f"checkpoint field {key!r} has dtype {arr.dtype}; sketch "
+                    f"counters are integer arrays — refusing to cast a "
+                    f"float/object dtype silently (corrupted or foreign "
+                    f"checkpoint)")
+            shapes[key] = arr.shape
+        if len(set(shapes.values())) != 1:
             raise ValueError(
-                f"checkpoint field {key!r} has dtype {arr.dtype}; sketch "
-                f"counters are integer arrays — refusing to cast a "
-                f"float/object dtype silently (corrupted or foreign "
-                f"checkpoint)")
-        shapes[key] = arr.shape
-    if len(set(shapes.values())) != 1:
-        raise ValueError(
-            f"checkpoint counter fields disagree in shape: {shapes}; the "
-            f"dict is truncated or mixes two checkpoints")
+                f"checkpoint counter fields disagree in shape: {shapes}; the "
+                f"dict is truncated or mixes two checkpoints")
     if spec.kind == "quantile":
         mass = np.asarray(d["mass"])
         if mass.dtype.kind not in "iu" or mass.size != 1:
@@ -660,11 +781,13 @@ def restore(spec: SketchSpec, d: Dict[str, Any]):
     is constructed — never a half-loaded state.
     """
     inferred = infer_spec(spec, d)
-    if (inferred.kind, inferred.shards) != (spec.kind, spec.shards):
+    if (inferred.kind, inferred.shards, spec_axis(inferred)) != \
+            (spec.kind, spec.shards, spec_axis(spec)):
         raise ValueError(
             f"checkpoint layout is kind={inferred.kind!r}, "
-            f"shards={inferred.shards}, but the spec says "
-            f"kind={spec.kind!r}, shards={spec.shards}; restore through "
+            f"shards={inferred.shards}, axis={spec_axis(inferred)!r}, but "
+            f"the spec says kind={spec.kind!r}, shards={spec.shards}, "
+            f"axis={spec_axis(spec)!r}; restore through "
             f"infer_spec(spec, d) (StreamSession.load does)")
     _validate_checkpoint(spec, d)
     return adapter_for(spec).restore(spec, d)
@@ -699,11 +822,16 @@ def deprecated_alias(old: str, new: str, fn):
 __all__ = [
     "KINDS",
     "VARIANTS",
+    "FAMILY_VARIANTS",
     "BACKENDS",
     "LAYOUT_FREQUENCY",
     "LAYOUT_QUANTILE",
+    "LAYOUT_DOUBLE",
+    "LAYOUT_CRPRECIS",
     "SketchSpec",
     "backends_for",
+    "variants_for",
+    "spec_axis",
     "validate_block",
     "register_adapter",
     "adapter_for",

@@ -68,7 +68,8 @@ from .phases import (
     segment_nets,
     waterfill_unit_inserts,
 )
-from .state import BLOCKED, EMPTY, VARIANT_LAZY, SketchState, _INT_MAX
+from .state import (BLOCKED, EMPTY, VARIANT_LAZY, SketchState, _INT_MAX,
+                    sat_add)
 
 
 def init(capacities: Union[int, Sequence[int]],
@@ -298,7 +299,7 @@ def residual_phase_banked(ids2, cnt2, err2, h_uids, h_net, uoff, start,
         return (
             i + active.astype(jnp.int32),
             jnp.where(hot, uid[:, None], ids2),
-            jnp.where(hot, (mc + w)[:, None], cnt2),
+            jnp.where(hot, sat_add(mc, w)[:, None], cnt2),
             jnp.where(hot, mc[:, None], err2),
         )
 
@@ -381,8 +382,8 @@ def phase1_dense(bank: SketchState, row_items: jax.Array,
     pos = jnp.clip(jax.vmap(jnp.searchsorted)(row_items, bank.ids), 0, B - 1)
     match = (jnp.take_along_axis(row_items, pos, axis=1) == bank.ids) \
         & (bank.ids >= 0)
-    counts1 = bank.counts + jnp.where(
-        match, jnp.take_along_axis(net, pos, axis=1), 0)
+    counts1 = sat_add(bank.counts, jnp.where(
+        match, jnp.take_along_axis(net, pos, axis=1), 0))
     rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, k))
     monitored = (
         jnp.zeros((R, B), bool)
@@ -512,7 +513,7 @@ def _fused_partition(bank: SketchState, items: jax.Array, weights: jax.Array,
     flat_ids = bank.ids.reshape(-1)
     pos = jnp.clip(jnp.searchsorted(uids, flat_ids), 0, B - 1)
     match = (uids[pos] == flat_ids) & (flat_ids >= 0)
-    counts1 = bank.counts + jnp.where(match, net[pos], 0).reshape(S, k)
+    counts1 = sat_add(bank.counts, jnp.where(match, net[pos], 0).reshape(S, k))
     monitored = (
         jnp.zeros((B,), bool)
         .at[jnp.where(match, pos, B)]
@@ -628,7 +629,9 @@ def query_rows(bank: SketchState, rows: jax.Array,
     """
     ids_r = bank.ids[rows]                       # (n, k) row gather
     cnt_r = bank.counts[rows]
-    eq = ids_r == items.astype(jnp.int32)[:, None]
+    # sentinel slots (EMPTY/BLOCKED/POISON) are masked out so querying a
+    # negative id returns 0 instead of the padding slots' garbage counts
+    eq = (ids_r == items.astype(jnp.int32)[:, None]) & (ids_r >= 0)
     return jnp.where(eq, cnt_r, 0).sum(axis=1) * eq.any(axis=1)
 
 
@@ -679,6 +682,43 @@ def consolidate(bank: SketchState, merge_fn=st.merge) -> SketchState:
     return rows[0]
 
 
+# ---------------------------------------------------------------------------
+# Second-bank coupling: the Double SpaceSaving± hooks
+# ---------------------------------------------------------------------------
+
+def split_signed(weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Split one signed block into the family's two insert-only streams.
+
+    Double SpaceSaving± (family paper, PAPERS.md) feeds insertions into
+    one summary and deletions into a second one *as insertions*; the
+    estimator subtracts. Zero weights stay zero on both sides, so block
+    padding remains padding for both banks.
+    """
+    w = weights.astype(jnp.int32)
+    return jnp.maximum(w, 0), jnp.maximum(-w, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("router", "variant"))
+def update_pair(ins_bank: SketchState, del_bank: SketchState,
+                items: jax.Array, weights: jax.Array, router: Router,
+                variant: int = 2) -> Tuple[SketchState, SketchState]:
+    """Coupled two-bank ingest: ONE launch updating both family banks.
+
+    The engine hook the Double SpaceSaving± backend builds on
+    (``repro.sketch.family``): both banks share the router (and hence the
+    row-ownership invariant), each sees an insert-only stream, so the
+    fused cores run in their monitored-heavy sweet spot and the lazy/SS±
+    distinction vanishes (no unmonitored deletions ever reach either
+    bank). Banks may have different per-row capacities (the family's
+    k_I/k_D split).
+    """
+    w_ins, w_del = split_signed(weights)
+    return (
+        update_block_fused(ins_bank, items, w_ins, router, variant),
+        update_block_fused(del_bank, items, w_del, router, variant),
+    )
+
+
 __all__ = [
     "init",
     "row_capacities",
@@ -697,4 +737,6 @@ __all__ = [
     "topk_bank",
     "merge_banks",
     "consolidate",
+    "split_signed",
+    "update_pair",
 ]

@@ -62,7 +62,8 @@ from .phases import (
     segment_nets,
     waterfill_unit_inserts,
 )
-from .state import EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX
+from .state import (EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX,
+                    sat_add)
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +85,8 @@ def _insert(state: SketchState, item: jax.Array, w: jax.Array) -> SketchState:
 
     sel = jnp.where(monitored, slot_mon, jnp.where(has_empty, slot_empty, jmin))
     new_count = jnp.where(
-        monitored, counts[slot_mon] + w, jnp.where(has_empty, w, min_count + w)
+        monitored, sat_add(counts[slot_mon], w),
+        jnp.where(has_empty, w, sat_add(min_count, w))
     )
     new_error = jnp.where(
         monitored, errors[slot_mon], jnp.where(has_empty, 0, min_count)
@@ -265,8 +267,9 @@ def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
     pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
     match = usearch[pos] == state.ids  # EMPTY/BLOCKED slots never match
     # Monitored deltas commute (insert: count += w; delete: count -= w; ids
-    # and errors untouched) — one gather applies them all at once.
-    counts1 = state.counts + jnp.where(match, net[pos], 0)
+    # and errors untouched) — one gather applies them all at once,
+    # saturating at ±INT_MAX instead of wrapping.
+    counts1 = sat_add(state.counts, jnp.where(match, net[pos], 0))
     monitored = (
         jnp.zeros((B,), bool)
         .at[jnp.where(match, pos, B)]

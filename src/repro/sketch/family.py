@@ -1,0 +1,538 @@
+"""The SpaceSaving± family backends: Double / unbiased SS± + CR-precis.
+
+The family follow-up paper (PAPERS.md: "The SpaceSaving± Family of
+Algorithms for Data Streams with Bounded Deletions") closes the circle
+the bank engine opened: every member of the family is a counter summary
+over the same (R, k) row layout, differing only in *what a row update
+means*. This module implements the three members the repo was still
+missing, each a thin client of ``repro.sketch.bank``:
+
+  * **Double SpaceSaving±** (``SketchSpec(variant='double')``) — two
+    coupled banks sharing one :class:`bank.HashShardRouter`: insertions
+    feed the insert bank, deletions feed the delete bank *as
+    insertions* (``bank.split_signed`` / ``bank.update_pair``), and the
+    combined estimator subtracts the delete bank's *guaranteed* count:
+    ``f̂(x) = Î_I(x) − max(Ç_D(x) − ê_D(x), 0)``, clamped at 0.
+    The guaranteed count never exceeds the true deletions, so f̂ never
+    underestimates the true frequency — SpaceSaving's no-false-negative
+    heavy-hitter property survives the subtraction. Both banks see
+    insert-only streams, so they run in the fused engine's
+    monitored-heavy sweet spot and the lazy/SS± distinction vanishes.
+    Capacity splits ``k_I : k_D = α : (α−1)`` — the ratio that
+    equalizes the two sides' worst-case contributions
+    ``I/k_I`` and ``D/k_D ≤ (α−1)(I−D)·ε/2`` under bounded deletion.
+
+  * **Unbiased SpaceSaving±** (``variant='unbiased'``) — the same
+    coupled-bank structure, but each bank applies the randomized
+    min-slot replacement of Unbiased SpaceSaving (Ting '18): an evicting
+    insert of weight w always adds w to the min count but adopts the
+    incoming id only with probability ``w / (mc + w)``, making every
+    per-item estimate unbiased in expectation. The difference of two
+    unbiased estimates stays unbiased, so the combined estimator is NOT
+    clamped. The PRNG key rides in the state (deterministic given the
+    initial seed); this is the family's statistical baseline, not a
+    throughput path — the update is a lockstep scan over the routed
+    block.
+
+  * **CR-precis** (``backend='crprecis'``) — the classic deterministic
+    *linear* sketch (PAPERS.md: cs/0609032): t counter rows over the
+    bank layout, row j indexed by ``x mod p_j`` for t distinct primes
+    p_1 > ... > p_t chosen just below ``k // t`` (so the total counter
+    budget matches an equal-space SpaceSaving± run). Linearity handles
+    deletions natively — ``C[j, x mod p_j] += w`` for signed w — and
+    the estimate is the min over rows, clamped at 0. No id storage, so
+    ``topk`` needs a finite enumerable universe (``spec.bits``).
+
+All three register with the ``repro.sketch.api`` adapter registry (the
+PR 5 promise: new family members are one ``register_adapter`` away) and
+are therefore reachable from :class:`repro.sketch.session.StreamSession`
+with zero consumer changes. Checkpoints carry the LAYOUT_DOUBLE /
+LAYOUT_CRPRECIS tags (api.py owns the numbering).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import bank as bk
+from .state import EMPTY, SketchState, _INT_MAX, sat_add
+
+# layout tags — mirrored from repro.sketch.api (which owns the
+# numbering); family.py cannot import api at module scope (api imports
+# family to register the adapters).
+_LAYOUT_DOUBLE = 3
+_LAYOUT_CRPRECIS = 4
+
+
+# ---------------------------------------------------------------------------
+# Double / unbiased SpaceSaving±: two coupled banks
+# ---------------------------------------------------------------------------
+
+class DoubleState(NamedTuple):
+    """Two coupled (R, k) banks + the unbiased variant's PRNG key."""
+
+    ins: SketchState    # (R, k_I) insert summary
+    dels: SketchState   # (R, k_D) delete summary (deletions as inserts)
+    key: jax.Array      # (2,) uint32; zeros for the deterministic variant
+
+
+def double_capacities(total: int, alpha: float) -> Tuple[int, int]:
+    """Split a total counter budget k into (k_I, k_D) at ratio α : (α−1).
+
+    With bounded deletion D ≤ (1−1/α)I the worst cases are
+    ``I/k_I ≤ α(I−D)/k_I`` and ``D/k_D ≤ (α−1)(I−D)/k_D``; the α:(α−1)
+    split equalizes the two, giving combined error ≤ ε(I−D) at
+    k = 2(2α−1)/ε — the family paper's sizing.
+    """
+    total = int(total)
+    if total < 2:
+        raise ValueError(
+            f"variant='double'/'unbiased' needs k >= 2 (one counter per "
+            f"bank), got k={total}")
+    k_i = int(round(total * alpha / (2.0 * alpha - 1.0)))
+    k_i = min(max(k_i, 1), total - 1)
+    return k_i, total - k_i
+
+
+def init_double(total: int, alpha: float, num_rows: int = 1,
+                seed: int = 0, unbiased: bool = False) -> DoubleState:
+    """Empty coupled banks; per-row caps split the total budget evenly."""
+    k_i, k_d = double_capacities(total, alpha)
+    per_i = -(-k_i // num_rows)
+    per_d = -(-k_d // num_rows)
+    key = (jax.random.PRNGKey(seed) if unbiased
+           else jnp.zeros((2,), jnp.uint32))
+    return DoubleState(ins=bk.init(per_i, num_rows),
+                       dels=bk.init(per_d, num_rows), key=key)
+
+
+@functools.partial(jax.jit, static_argnames=("router",))
+def update_double(state: DoubleState, items: jax.Array, weights: jax.Array,
+                  router: bk.HashShardRouter) -> DoubleState:
+    """Deterministic Double SS± ingest: one coupled two-bank launch."""
+    ins, dels = bk.update_pair(state.ins, state.dels, items, weights, router)
+    return DoubleState(ins, dels, state.key)
+
+
+def _unbiased_rows(bank: SketchState, row_items: jax.Array,
+                   row_weights: jax.Array, key: jax.Array) -> SketchState:
+    """Unbiased SpaceSaving ingest of routed (R, B) insert-only views.
+
+    Lockstep scan over block positions (the same one-hot where-mask
+    style as ``bank.residual_phase_banked`` — no vmapped scatters): at
+    step b every row applies its b-th routed entry. Monitored / empty
+    slots behave exactly like plain SpaceSaving; an eviction adds w to
+    the min count but adopts the incoming id only with probability
+    ``w / (mc + w)`` (Ting '18), keeping each per-item estimate
+    unbiased. Zero-weight entries (routing mask / padding) are no-ops.
+    """
+    R, k = bank.ids.shape
+    B = row_items.shape[1]
+    lane = jnp.arange(k, dtype=jnp.int32)[None, :]
+
+    def step(carry, b):
+        ids, cnt, err, key = carry
+        uid = jax.lax.dynamic_index_in_dim(row_items, b, 1, False)   # (R,)
+        w = jax.lax.dynamic_index_in_dim(row_weights, b, 1, False)
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, (R,))
+        active = (w > 0) & (uid >= 0)
+        eq = (ids == uid[:, None]) & (ids >= 0)
+        monitored = eq.any(axis=1)
+        slot_mon = jnp.argmax(eq, axis=1).astype(jnp.int32)
+        empty = ids == EMPTY
+        has_empty = empty.any(axis=1)
+        slot_empty = jnp.argmax(empty, axis=1).astype(jnp.int32)
+        cnt_min = jnp.where(empty, _INT_MAX, cnt)
+        jmin = jnp.argmin(cnt_min, axis=1).astype(jnp.int32)
+        mc = jnp.take_along_axis(cnt_min, jmin[:, None], 1)[:, 0]
+        sel = jnp.where(monitored, slot_mon,
+                        jnp.where(has_empty, slot_empty, jmin))
+        old_cnt = jnp.take_along_axis(cnt, sel[:, None], 1)[:, 0]
+        old_err = jnp.take_along_axis(err, sel[:, None], 1)[:, 0]
+        new_cnt = jnp.where(monitored, sat_add(old_cnt, w),
+                            jnp.where(has_empty, w, sat_add(mc, w)))
+        # randomized adoption: float compare avoids int overflow of mc+w
+        take = u * (mc.astype(jnp.float32) + w.astype(jnp.float32)) \
+            < w.astype(jnp.float32)
+        evicted_id = jnp.take_along_axis(ids, jmin[:, None], 1)[:, 0]
+        new_id = jnp.where(monitored | has_empty, uid,
+                           jnp.where(take, uid, evicted_id))
+        new_err = jnp.where(monitored, old_err,
+                            jnp.where(has_empty, 0, mc))
+        hot = (lane == sel[:, None]) & active[:, None]
+        return (
+            jnp.where(hot, new_id[:, None], ids),
+            jnp.where(hot, new_cnt[:, None], cnt),
+            jnp.where(hot, new_err[:, None], err),
+            key,
+        ), None
+
+    (ids, cnt, err, _), _ = jax.lax.scan(
+        step, (bank.ids, bank.counts, bank.errors, key),
+        jnp.arange(B, dtype=jnp.int32))
+    return SketchState(ids, cnt, err)
+
+
+@functools.partial(jax.jit, static_argnames=("router",))
+def update_unbiased(state: DoubleState, items: jax.Array,
+                    weights: jax.Array,
+                    router: bk.HashShardRouter) -> DoubleState:
+    """Unbiased-variant ingest: randomized eviction on both coupled banks."""
+    w_ins, w_del = bk.split_signed(weights)
+    key_i, key_d, key_next = jax.random.split(state.key, 3)
+    ri, wi = router.route_dense(items, w_ins)
+    rd, wd = router.route_dense(items, w_del)
+    return DoubleState(
+        ins=_unbiased_rows(state.ins, ri, wi, key_i),
+        dels=_unbiased_rows(state.dels, rd, wd, key_d),
+        key=key_next,
+    )
+
+
+def _guaranteed_rows(bank: SketchState, rows: jax.Array,
+                     items: jax.Array) -> jax.Array:
+    """Owner-row *guaranteed* count ``max(count − error, 0)`` per item.
+
+    SpaceSaving's classic lower bound: ``count − error ≤ f ≤ count``.
+    Unmonitored and sentinel ids answer 0 (their true count may still be
+    up to the row's min count, but never less than 0).
+    """
+    items = items.astype(jnp.int32)
+    ids_r = bank.ids[rows]
+    val_r = jnp.maximum(bank.counts[rows] - bank.errors[rows], 0)
+    eq = (ids_r == items[:, None]) & (ids_r >= 0)
+    return jnp.where(eq, val_r, 0).sum(axis=1) * eq.any(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("clamp",))
+def query_many_double(state: DoubleState, items: jax.Array,
+                      clamp: bool = True) -> jax.Array:
+    """Combined estimator, owner-row reads per bank.
+
+    ``clamp=True`` (the deterministic variant): subtract the delete
+    bank's *guaranteed* count ``max(Ĉ_D − ê_D, 0)`` — a lower bound on
+    the true deletions — so the combined estimate never underestimates
+    the true frequency (the family paper's no-false-negative property:
+    every φ-heavy item clears any threshold its true count clears).
+    Negative differences carry no information on a strict stream, so the
+    result is clamped at 0.
+    ``clamp=False`` (the unbiased variant): each bank's raw count is the
+    unbiased estimate, so the raw difference is returned — subtracting
+    the error term (or clamping) would re-bias it.
+    """
+    items = items.astype(jnp.int32)
+    rows = bk.shard_of(items, state.ins.ids.shape[0])
+    if clamp:
+        est = bk.query_rows(state.ins, rows, items) \
+            - _guaranteed_rows(state.dels, rows, items)
+        return jnp.maximum(est, 0)
+    return bk.query_rows(state.ins, rows, items) \
+        - bk.query_rows(state.dels, rows, items)
+
+
+def topk_double(state: DoubleState, m: int,
+                clamp: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Top-m by the combined estimate over the insert bank's monitored set.
+
+    Every reportable heavy hitter is monitored in the insert bank (it
+    cannot survive on deletions alone), so candidates are its R·k_I
+    slots; each candidate's delete-side count is looked up in the same
+    row of the delete bank (both banks share the router).
+    """
+    ins_ids = state.ins.ids                       # (R, kI)
+    eq = (state.dels.ids[:, None, :] == ins_ids[:, :, None]) \
+        & (state.dels.ids >= 0)[:, None, :] & (ins_ids >= 0)[:, :, None]
+    if clamp:
+        # deterministic scoring mirrors query_many_double: subtract the
+        # delete bank's guaranteed count so no true heavy hitter can be
+        # scored below its true frequency (no false negatives)
+        gtd = jnp.maximum(state.dels.counts - state.dels.errors, 0)
+        cnt_d = jnp.where(eq, gtd[:, None, :], 0).sum(-1)
+        est = jnp.maximum(state.ins.counts - cnt_d, 0)
+    else:
+        cnt_d = jnp.where(eq, state.dels.counts[:, None, :], 0).sum(-1)
+        est = state.ins.counts - cnt_d
+    ids = ins_ids.reshape(-1)
+    score = jnp.where(ids >= 0, est.reshape(-1), jnp.int32(-2**31))
+    vals, idx = jax.lax.top_k(score, m)
+    return ids[idx], vals
+
+
+@jax.jit
+def merge_double(a: DoubleState, b: DoubleState) -> DoubleState:
+    """Row-wise mergeable-summaries merge, per bank side.
+
+    Each side is a plain SpaceSaving summary of its insert-only
+    substream, so the standard merge bound applies per side and the
+    combined estimator keeps the summed-slack guarantee
+    (I_tot/k_I + D_tot/k_D) — the property tests/test_family.py pins.
+    The (arbitrary) left key survives: merged unbiased summaries are
+    deterministic given both input streams and the left seed.
+    """
+    return DoubleState(ins=bk.merge_banks(a.ins, b.ins),
+                       dels=bk.merge_banks(a.dels, b.dels), key=a.key)
+
+
+def consolidate_double(state: DoubleState) -> DoubleState:
+    """Fold the row axis of both banks into one-row banks (checkpoint
+    compaction); identity when already single-row."""
+    if state.ins.ids.shape[0] == 1:
+        return state
+    lift = lambda s: jax.tree.map(lambda x: x[None], bk.consolidate(s))
+    return DoubleState(ins=lift(state.ins), dels=lift(state.dels),
+                       key=state.key)
+
+
+# ---------------------------------------------------------------------------
+# CR-precis: deterministic linear counter rows with prime moduli
+# ---------------------------------------------------------------------------
+
+class CRPrecisState(NamedTuple):
+    counts: jax.Array   # (t, b) int32 linear counters; row j uses primes[j]
+    primes: jax.Array   # (t,) int32 pairwise-distinct moduli, descending
+
+
+def _primes_descending(below: int, count: int) -> list:
+    """The ``count`` largest primes <= below (trial division; hosts only)."""
+    out = []
+    n = int(below)
+    while n >= 2 and len(out) < count:
+        if all(n % p for p in range(2, int(math.isqrt(n)) + 1)):
+            out.append(n)
+        n -= 1
+    if len(out) < count:
+        raise ValueError(
+            f"cannot find {count} distinct primes <= {below}; raise the "
+            f"counter budget k (crprecis needs k >= ~{count * 8})")
+    return out
+
+
+def crprecis_depth(total: int) -> int:
+    """Row count t for a total counter budget (CR-precis t×b layout)."""
+    return 4 if total >= 64 else 2
+
+
+def init_crprecis(total: int) -> CRPrecisState:
+    """t prime-modulus counter rows whose widths sum to <= total.
+
+    Primes descend from the largest prime <= total // t, so the summary
+    never exceeds the equal-space budget it is raced at.
+    """
+    t = crprecis_depth(total)
+    primes = _primes_descending(int(total) // t, t)
+    b = primes[0]
+    return CRPrecisState(
+        counts=jnp.zeros((t, b), jnp.int32),
+        primes=jnp.asarray(primes, jnp.int32),
+    )
+
+
+@jax.jit
+def update_crprecis(state: CRPrecisState, items: jax.Array,
+                    weights: jax.Array) -> CRPrecisState:
+    """Linear signed update: ``C[j, x mod p_j] += w`` for every row.
+
+    One scatter-add per block; deletions are just negative weights
+    (linearity — no eviction logic at all). The per-block delta is
+    int32-safe (``api.validate_block`` bounds the block's weight-
+    magnitude sum) and lands with a saturating add.
+    """
+    t, b = state.counts.shape
+    items = items.astype(jnp.int32)
+    weights = weights.astype(jnp.int32)
+    cols = items[None, :] % state.primes[:, None]          # (t, B)
+    rows = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], cols.shape)
+    delta = jnp.zeros((t, b), jnp.int32).at[rows, cols].add(
+        jnp.broadcast_to(weights[None, :], cols.shape))
+    return CRPrecisState(counts=sat_add(state.counts, delta),
+                         primes=state.primes)
+
+
+@jax.jit
+def query_many_crprecis(state: CRPrecisState, items: jax.Array) -> jax.Array:
+    """Min-over-rows estimate, clamped at 0 (strict-stream frequency)."""
+    items = items.astype(jnp.int32)
+    cols = items[None, :] % state.primes[:, None]           # (t, n)
+    rows = jnp.arange(state.counts.shape[0], dtype=jnp.int32)[:, None]
+    vals = state.counts[rows, cols]                         # (t, n)
+    est = jnp.maximum(vals.min(axis=0), 0)
+    return jnp.where(items >= 0, est, 0)
+
+
+def topk_crprecis(state: CRPrecisState, m: int,
+                  bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-m by exhaustive universe scan — CR-precis stores no ids."""
+    universe = jnp.arange(1 << bits, dtype=jnp.int32)
+    est = query_many_crprecis(state, universe)
+    vals, idx = jax.lax.top_k(est, m)
+    ids = universe[idx]
+    # empty summaries report EMPTY like the SpaceSaving layouts do
+    return jnp.where(vals > 0, ids, EMPTY), vals
+
+
+@jax.jit
+def merge_crprecis(a: CRPrecisState, b: CRPrecisState) -> CRPrecisState:
+    """Linear merge: counters add (moduli must match)."""
+    return CRPrecisState(counts=sat_add(a.counts, b.counts), primes=a.primes)
+
+
+# ---------------------------------------------------------------------------
+# Adapters: plug the family into the spec registry
+# ---------------------------------------------------------------------------
+
+def _no_rank(spec):
+    raise ValueError(
+        f"rank/quantile queries need kind='quantile'; this spec is "
+        f"kind={spec.kind!r}. Build a SketchSpec(kind='quantile', "
+        f"bits=..., ...) to get the dyadic bank.")
+
+
+class DoubleAdapter:
+    """variant='double' (deterministic) / 'unbiased' (randomized
+    eviction) — the coupled two-bank family layouts, sharded or not
+    (shards=None is a one-row bank of the same shape)."""
+
+    def __init__(self, unbiased: bool = False):
+        self.unbiased = unbiased
+
+    def _rows(self, spec) -> int:
+        return spec.shards or 1
+
+    def _router(self, spec) -> bk.HashShardRouter:
+        return bk.HashShardRouter(self._rows(spec), spec.bits)
+
+    def make(self, spec) -> DoubleState:
+        return init_double(spec.capacity, spec.alpha, self._rows(spec),
+                           unbiased=self.unbiased)
+
+    def update(self, spec, state, items, weights):
+        fn = update_unbiased if self.unbiased else update_double
+        return fn(state, items, weights, self._router(spec))
+
+    def query_many(self, spec, state, items):
+        return query_many_double(state, items, clamp=not self.unbiased)
+
+    def topk(self, spec, state, m):
+        return topk_double(state, m, clamp=not self.unbiased)
+
+    def rank_many(self, spec, state, xs):
+        _no_rank(spec)
+
+    quantile_many = rank_many
+
+    def merge(self, spec, a, b):
+        return merge_double(a, b)
+
+    def consolidate(self, spec, state):
+        return consolidate_double(state)
+
+    def save(self, spec, state) -> Dict[str, Any]:
+        return {
+            "layout": np.int32(_LAYOUT_DOUBLE),
+            "family": np.int32(2 if self.unbiased else 1),
+            "ids": np.asarray(state.ins.ids),
+            "counts": np.asarray(state.ins.counts),
+            "errors": np.asarray(state.ins.errors),
+            "ids_del": np.asarray(state.dels.ids),
+            "counts_del": np.asarray(state.dels.counts),
+            "errors_del": np.asarray(state.dels.errors),
+            "key": np.asarray(state.key),
+            "shards": np.int32(spec.shards or 0),
+        }
+
+    def restore(self, spec, d) -> DoubleState:
+        ins = SketchState(
+            ids=jnp.asarray(np.asarray(d["ids"]), jnp.int32),
+            counts=jnp.asarray(np.asarray(d["counts"]), jnp.int32),
+            errors=jnp.asarray(np.asarray(d["errors"]), jnp.int32))
+        dels = SketchState(
+            ids=jnp.asarray(np.asarray(d["ids_del"]), jnp.int32),
+            counts=jnp.asarray(np.asarray(d["counts_del"]), jnp.int32),
+            errors=jnp.asarray(np.asarray(d["errors_del"]), jnp.int32))
+        got = ins.ids.shape[0]
+        if got != self._rows(spec):
+            raise ValueError(
+                f"checkpoint has {got} rows, spec asks for "
+                f"{self._rows(spec)} (shards={spec.shards}); restore with "
+                f"a matching spec (or consolidate first)")
+        return DoubleState(
+            ins=ins, dels=dels,
+            key=jnp.asarray(np.asarray(d["key"]), jnp.uint32))
+
+
+class CRPrecisAdapter:
+    """backend='crprecis': the deterministic linear-counter baseline."""
+
+    def make(self, spec) -> CRPrecisState:
+        return init_crprecis(spec.capacity)
+
+    def update(self, spec, state, items, weights):
+        return update_crprecis(state, items, weights)
+
+    def query_many(self, spec, state, items):
+        return query_many_crprecis(state, items)
+
+    def topk(self, spec, state, m):
+        if spec.bits is None or spec.bits > 20:
+            raise ValueError(
+                "crprecis stores no item ids, so topk needs an enumerable "
+                "universe: set SketchSpec.bits <= 20 (scan cost 2^bits), "
+                "or keep your own candidate set and use query_many")
+        return topk_crprecis(state, m, spec.bits)
+
+    def rank_many(self, spec, state, xs):
+        _no_rank(spec)
+
+    quantile_many = rank_many
+
+    def merge(self, spec, a, b):
+        if not np.array_equal(np.asarray(a.primes), np.asarray(b.primes)):
+            raise ValueError(
+                "cannot merge crprecis summaries with different prime "
+                "moduli (different k budgets); rebuild at one budget")
+        return merge_crprecis(a, b)
+
+    def consolidate(self, spec, state):
+        return state
+
+    def save(self, spec, state) -> Dict[str, Any]:
+        return {
+            "layout": np.int32(_LAYOUT_CRPRECIS),
+            "counts": np.asarray(state.counts),
+            "primes": np.asarray(state.primes),
+        }
+
+    def restore(self, spec, d) -> CRPrecisState:
+        return CRPrecisState(
+            counts=jnp.asarray(np.asarray(d["counts"]), jnp.int32),
+            primes=jnp.asarray(np.asarray(d["primes"]), jnp.int32))
+
+
+__all__ = [
+    "DoubleState",
+    "CRPrecisState",
+    "double_capacities",
+    "init_double",
+    "update_double",
+    "update_unbiased",
+    "query_many_double",
+    "topk_double",
+    "merge_double",
+    "consolidate_double",
+    "crprecis_depth",
+    "init_crprecis",
+    "update_crprecis",
+    "query_many_crprecis",
+    "topk_crprecis",
+    "merge_crprecis",
+    "DoubleAdapter",
+    "CRPrecisAdapter",
+]

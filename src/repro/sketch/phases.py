@@ -26,7 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .state import BLOCKED, EMPTY, LANES, VARIANT_LAZY, _INT_MAX
+from .state import BLOCKED, EMPTY, LANES, VARIANT_LAZY, _INT_MAX, sat_add
 
 
 def _stable_partition_perm(klass: jax.Array) -> jax.Array:
@@ -215,7 +215,7 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
         return jnp.where(counts <= x, x - counts + 1, 0)
 
     lo = counts.min()
-    hi = lo + m
+    hi = sat_add(lo, m)  # saturate: water level can't pass _INT_MAX
 
     def probe(_, lh):
         lo, hi = lh
@@ -233,7 +233,8 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
     extra = elig & (rank < r)
     t = jnp.where(counts <= T - 1, T - counts, 0) + extra
     evicted = t > 0
-    v_last = counts + t - 1
+    new_counts = sat_add(counts, t)
+    v_last = new_counts - 1
     # Global pop position of each slot's last pop. Non-extra slots all
     # stop at value T-1: position = #pops strictly below T-1 + #lower-
     # index slots also reaching T-1. Extra slots pop T: position =
@@ -245,7 +246,7 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
     pos = jnp.clip(offset + pos, 0, B - 1)
     return (
         jnp.where(evicted, uu[pos], ids),
-        counts + t,
+        new_counts,
         jnp.where(evicted, v_last, errors),
     )
 
@@ -277,7 +278,10 @@ def residual_phase(ids2, cnt2, err2, r_uids, r_net, start, n_ins, w_del,
         # unmonitored insert: empty slot if any survived, else evict min
         r_sel, c_sel, mc, has_empty = _pick_slot(ids2, cnt2, rhe, rmin)
         ids2 = ids2.at[r_sel, c_sel].set(uid)
-        cnt2 = cnt2.at[r_sel, c_sel].set(jnp.where(has_empty, w, mc + w))
+        # sat_add: an eviction on a near-INT_MAX min count pins at the
+        # ceiling instead of wrapping negative (int32-pure, kernel-safe)
+        cnt2 = cnt2.at[r_sel, c_sel].set(
+            jnp.where(has_empty, w, sat_add(mc, w)))
         err2 = err2.at[r_sel, c_sel].set(jnp.where(has_empty, 0, mc))
         # refresh the one touched row's summaries
         row_ids = ids2[r_sel]

@@ -300,8 +300,24 @@ class StreamSession:
                 self.deletions += old_w
 
     def flush(self) -> None:
-        """Ingest everything buffered (padding the final partial block)."""
+        """Ingest everything buffered (padding the final partial block),
+        then deliver any still-pending delayed fault slices.
+
+        Without the second step a delay fault near the end of the stream
+        would silently drop its slice (nothing arrives with
+        ``seq >= due`` to trigger redelivery), breaking the "delay
+        defers + redelivers exactly once" contract of
+        ``repro.sketch.faults``. Draining here keeps the contract: a
+        flushed session has ingested every observation exactly once.
+        """
         self._drain(keep_partial=False)
+        self._drain_deferred()
+
+    def _drain_deferred(self) -> None:
+        """Deliver every pending delayed slice (end-of-stream redelivery)."""
+        for due in sorted(self._deferred):
+            for di, dw in self._deferred.pop(due):
+                self.state = self._compiled(self.state, di, dw)
 
     def _drain(self, keep_partial: bool) -> None:
         if not self._buf_n:
@@ -488,6 +504,18 @@ class StreamSession:
         d["sched_seq"] = self._seq
         d["sched_window"] = -1 if self.window is None else int(self.window)
         d["sched_error_slack"] = self.error_slack
+        # pending delayed fault slices: a crash between a delay fault and
+        # its due block must not lose the slice across save/load
+        flat = [(due, di, dw) for due in sorted(self._deferred)
+                for di, dw in self._deferred[due]]
+        d["sched_deferred_due"] = np.asarray(
+            [due for due, _, _ in flat], np.int64)
+        d["sched_deferred_lens"] = np.asarray(
+            [len(di) for _, di, _ in flat], np.int64)
+        d["sched_deferred_items"] = cat([np.asarray(di, np.int32)
+                                         for _, di, _ in flat])
+        d["sched_deferred_weights"] = cat([np.asarray(dw, np.int32)
+                                           for _, _, dw in flat])
         return d
 
     def load(self, d: dict) -> None:
@@ -548,6 +576,18 @@ class StreamSession:
         self.deletions = int(np.asarray(d["sched_deletions"]))
         self._seq = int(np.asarray(d["sched_seq"]))
         self.error_slack = int(np.asarray(d["sched_error_slack"]))
+        # older schedule checkpoints predate deferred-slice carry-over
+        if "sched_deferred_due" in d:
+            dd_i = np.asarray(d["sched_deferred_items"], np.int32)
+            dd_w = np.asarray(d["sched_deferred_weights"], np.int32)
+            self._deferred = {}
+            s = 0
+            for due, n in zip(np.asarray(d["sched_deferred_due"], np.int64),
+                              np.asarray(d["sched_deferred_lens"], np.int64)):
+                due, n = int(due), int(n)
+                self._deferred.setdefault(due, []).append(
+                    (dd_i[s:s + n], dd_w[s:s + n]))
+                s += n
 
 
 __all__ = ["StreamSession", "_ingest_fn"]

@@ -27,6 +27,30 @@ VARIANT_LAZY = 1
 VARIANT_SSPM = 2
 _INT_MAX = jnp.int32(2**31 - 1)
 
+
+def sat_add(a, b):
+    """Saturating int32 add: clamps at ±(2**31-1) instead of wrapping.
+
+    Every count/error accumulation in the fused cores goes through this,
+    so a long stream or a large-weight block pins at ``_INT_MAX`` rather
+    than silently overflowing into negative counts. Implemented by
+    clamping the addend into the remaining headroom — pure int32
+    arithmetic, so the same body runs unchanged inside Pallas kernels
+    (no int64 on TPU) and stays bit-identical across paths. The
+    symmetric lower clamp keeps delete-heavy intermediates from
+    wrapping the other way. Inputs are assumed within ±(2**31-1),
+    which holds inductively from all-zero init.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    # headroom bounds computed one-sided so they are themselves int32-safe
+    # for any a in ±(2**31-1); Python-int literals (not the jnp _INT_MAX
+    # scalar) so the body folds cleanly inside Pallas kernels
+    imax = 2**31 - 1
+    lo = (-imax) - jnp.minimum(a, 0)
+    hi = imax - jnp.maximum(a, 0)
+    return a + jnp.clip(b, lo, hi)
+
 # Row-tournament geometry: the counter store is viewed as (R, LANES) so the
 # VPU reduces along the 128-wide lane axis and the serial loop only touches
 # (R,)-wide row summaries. BLOCKED marks capacity-padding slots (never
@@ -59,13 +83,17 @@ def init(capacity: int) -> SketchState:
 # ---------------------------------------------------------------------------
 
 def query(state: SketchState, item) -> jax.Array:
-    eq = state.ids == jnp.int32(item)
+    # Sentinel slots (EMPTY/BLOCKED/POISON, all negative) are masked out of
+    # the equality: querying item -1/-2/-3 must return 0, not the padding
+    # slots' garbage counts.
+    eq = (state.ids == jnp.int32(item)) & (state.ids >= 0)
     return jnp.where(eq.any(), jnp.where(eq, state.counts, 0).sum(), 0)
 
 
 @jax.jit
 def query_many(state: SketchState, items: jax.Array) -> jax.Array:
-    eq = state.ids[None, :] == items.astype(jnp.int32)[:, None]  # (n, k)
+    eq = (state.ids[None, :] == items.astype(jnp.int32)[:, None]) \
+        & (state.ids >= 0)[None, :]  # (n, k); sentinel slots never match
     return jnp.where(eq, state.counts[None, :], 0).sum(axis=1) * eq.any(axis=1)
 
 
@@ -104,35 +132,38 @@ def merge(a: SketchState, b: SketchState) -> SketchState:
     counts = jnp.concatenate([a.counts, b.counts])
     errors = jnp.concatenate([a.errors, b.errors])
     cross = jnp.concatenate([jnp.full((k,), m_b), jnp.full((k,), m_a)])
-    cross = jnp.where(ids < 0, 0, cross).astype(jnp.int32)
+    cross = jnp.where(ids < 0, 0, cross)
 
     # combine duplicates: sort by id; adjacent-equal pairs fold together.
+    # All arithmetic is saturating int32 (two near-saturated summaries
+    # sum past int32; x64 is disabled on this stack): clamp, never wrap.
     order = jnp.argsort(ids)
     ids_s = ids[order]
-    cnt_s = counts[order] + cross[order]
-    err_s = errors[order] + cross[order]
+    cnt_s = counts[order]
+    err_s = errors[order]
+    cross_s = cross[order]
     dup_prev = jnp.concatenate([jnp.zeros((1,), bool), ids_s[1:] == ids_s[:-1]])
     # fold each duplicate's (count,error) into the *first* of its run.
-    seg = jnp.cumsum(~dup_prev) - 1
-    n = ids.shape[0]
-    cnt_m = jax.ops.segment_sum(cnt_s, seg, num_segments=n)
-    err_m = jax.ops.segment_sum(err_s, seg, num_segments=n)
-    id_m = jax.ops.segment_max(ids_s, seg, num_segments=n)
-    # duplicates were double-cross-counted: a duplicate pair means the item is
-    # in both sketches, so no cross term applies — subtract both cross adds.
-    had_dup = jax.ops.segment_sum(dup_prev.astype(jnp.int32), seg, num_segments=n)
-    cnt_m = cnt_m - had_dup * (m_a + m_b)
-    err_m = err_m - had_dup * (m_a + m_b)
-    n_seg = (~dup_prev).sum()
-    valid = (jnp.arange(n) < n_seg) & (id_m >= 0)
-    # top-k by merged count
+    # Non-negative ids are unique within each input summary, so their
+    # runs have length <= 2 and a one-step shift-fold suffices; longer
+    # runs only occur among sentinel ids, which `valid` discards below.
+    # A duplicate pair means the item is in BOTH sketches: the two raw
+    # values add and no cross term applies; a singleton adds the other
+    # sketch's minCount bound instead.
+    dup_next = jnp.concatenate([dup_prev[1:], jnp.zeros((1,), bool)])
+    shift = lambda v: jnp.concatenate([v[1:], jnp.zeros((1,), v.dtype)])
+    cnt_m = sat_add(cnt_s, jnp.where(dup_next, shift(cnt_s), cross_s))
+    err_m = sat_add(err_s, jnp.where(dup_next, shift(err_s), cross_s))
+    valid = ~dup_prev & (ids_s >= 0)
+    # top-k by merged count (valid counts are >= 0, so the -2^31 floor
+    # of discarded lanes never wins)
     key = jnp.where(valid, cnt_m, jnp.int32(-2**31))
     _, idx = jax.lax.top_k(key, k)
     sel_valid = valid[idx]
     return SketchState(
-        ids=jnp.where(sel_valid, id_m[idx], EMPTY).astype(jnp.int32),
-        counts=jnp.where(sel_valid, cnt_m[idx], 0).astype(jnp.int32),
-        errors=jnp.where(sel_valid, err_m[idx], 0).astype(jnp.int32),
+        ids=jnp.where(sel_valid, ids_s[idx], EMPTY),
+        counts=jnp.where(sel_valid, cnt_m[idx], 0),
+        errors=jnp.where(sel_valid, err_m[idx], 0),
     )
 
 
@@ -155,6 +186,7 @@ __all__ = [
     "LANES",
     "VARIANT_LAZY",
     "VARIANT_SSPM",
+    "sat_add",
     "SketchState",
     "init",
     "query",

@@ -38,7 +38,7 @@ def _freq_spec(**kw):
 def _all_specs():
     for kind in api.KINDS:
         for shards in (None, 4):
-            for variant in api.VARIANTS:
+            for variant in api.variants_for(kind):
                 yield api.SketchSpec(
                     kind=kind, k=64 if kind == "frequency" else 256,
                     variant=variant, shards=shards, bits=BITS)

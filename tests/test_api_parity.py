@@ -30,8 +30,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.sketch import api, blocks, dyadic, dyadic_sharded as dysh, \
-    sharded as shd, state as st
+from repro.sketch import api, bank as bk, blocks, dyadic, \
+    dyadic_sharded as dysh, family as fam, sharded as shd, state as st
 from repro.sketch.session import StreamSession
 
 BITS = 8
@@ -74,6 +74,20 @@ def _direct_state(spec):
     """
     items, weights = _stream()
     v = spec.variant_id
+    if spec.variant in api.FAMILY_VARIANTS:
+        unbiased = spec.variant == "unbiased"
+        router = bk.HashShardRouter(spec.shards or 1, BITS)
+        s = fam.init_double(K, spec.alpha, spec.shards or 1,
+                            unbiased=unbiased)
+        step = fam.update_unbiased if unbiased else fam.update_double
+        for i, w in _blocks(items, weights):
+            s = step(s, i, w, router)
+        return s
+    if spec.backend == "crprecis":
+        s = fam.init_crprecis(K)
+        for i, w in _blocks(items, weights):
+            s = fam.update_crprecis(s, i, w)
+        return s
     if spec.kind == "frequency" and spec.shards is None:
         step = (blocks.block_update_serial if spec.backend == "serial"
                 else blocks.block_update)
@@ -118,8 +132,8 @@ GRID = [
     (kind, shards, variant, backend)
     for kind in api.KINDS
     for shards in (None, 4)
-    for variant in api.VARIANTS
-    for backend in api.backends_for(kind, shards)
+    for variant in api.variants_for(kind)
+    for backend in api.backends_for(kind, shards, variant)
 ]
 
 
@@ -196,6 +210,36 @@ def test_api_merge_consolidate_parity(kind, shards):
         want = (shd.consolidate(merged) if kind == "frequency"
                 else dysh.consolidate(merged))
         _assert_trees_equal(cons, want)
+
+
+@pytest.mark.parametrize("variant,shards", [
+    (v, s) for v in api.FAMILY_VARIANTS for s in (None, 4)])
+def test_family_queries_match_direct(variant, shards):
+    """Family api query/topk equal the family module's direct spellings."""
+    spec = _spec("frequency", shards, variant, "bank")
+    state = _api_state(spec)
+    probe = jnp.arange(1 << BITS, dtype=jnp.int32)
+    clamp = variant == "double"
+    np.testing.assert_array_equal(
+        np.asarray(api.query_many(spec, state, probe)),
+        np.asarray(fam.query_many_double(state, probe, clamp=clamp)))
+    got = api.topk(spec, state, 8)
+    want = fam.topk_double(state, 8, clamp=clamp)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_crprecis_queries_match_direct():
+    spec = _spec("frequency", None, "sspm", "crprecis")
+    state = _api_state(spec)
+    probe = jnp.arange(1 << BITS, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(api.query_many(spec, state, probe)),
+        np.asarray(fam.query_many_crprecis(state, probe)))
+    got = api.topk(spec, state, 8)
+    want = fam.topk_crprecis(state, 8, BITS)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
 
 
 def test_quantile_leaf_queries_match_leaf_layer():

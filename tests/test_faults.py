@@ -122,6 +122,55 @@ def test_delay_defers_and_redelivers_exactly_once():
         np.asarray(jax.device_get(ref.query_many(probe))))
 
 
+def test_end_of_stream_delay_drained_by_flush():
+    """A delayed slice whose due block never arrives is delivered by
+    flush(), not dropped: the stream *ends* before step due = 8.
+
+    Regression: flush() used to drain only the partial host buffer, so
+    a delay fault near the end of the stream silently lost its slice —
+    breaking the "delay defers, never drops" contract."""
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=5, row=0, kind="delay", delay_steps=3),))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    ref = StreamSession(spec, block=64)
+    rng = np.random.default_rng(5)
+    for _ in range(6):                       # due step 8 > 6: never lands
+        blk = rng.integers(0, 128, 64)
+        sess.ingest(blk, np.ones(64, np.int64))
+        ref.ingest(blk, np.ones(64, np.int64))
+    assert sess._deferred                    # the slice is still pending
+    probe = np.arange(128)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(sess.query_many(probe))),
+        np.asarray(jax.device_get(ref.query_many(probe))))
+    assert not sess._deferred
+
+
+def test_deferred_slices_survive_save_load():
+    """save(include_schedule=True) carries pending delayed slices, so a
+    checkpoint taken mid-delay redelivers after restore."""
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=5, row=1, kind="delay", delay_steps=4),))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    ref = StreamSession(spec, block=64)
+    rng = np.random.default_rng(6)
+    for _ in range(6):
+        blk = rng.integers(0, 128, 64)
+        sess.ingest(blk, np.ones(64, np.int64))
+        ref.ingest(blk, np.ones(64, np.int64))
+    assert sess._deferred
+    d = sess.save(include_schedule=True)
+    sess2 = StreamSession(spec, block=64)
+    sess2.load(d)
+    assert sess2._deferred
+    probe = np.arange(128)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(sess2.query_many(probe))),
+        np.asarray(jax.device_get(ref.query_many(probe))))
+
+
 def test_delay_fault_walks_the_straggler_path():
     """Two sustained delay events on one shard flag exactly that shard
     host on the session-attached monitor."""
@@ -188,6 +237,32 @@ def test_chaos_recovery_reproduces_never_failed_twin(seed, kind_kw):
     want = {int(i) for i in np.asarray(jax.device_get(ids_r)) if i >= 0}
     got = {int(i) for i in np.asarray(jax.device_get(ids_s)) if i >= 0}
     assert want <= got
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_end_of_stream_delay_never_drops(seed):
+    """A delay landing on the LAST block of the stream (due step past the
+    end) still reaches the state by flush — per seed-rotated shard."""
+    universe = 1 << 7
+    n_blocks = 8
+    spec = api.SketchSpec(kind="frequency", k=512, shards=S)
+    plan = faults.FaultPlan(events=(
+        faults.FaultEvent(step=n_blocks, row=seed % S, kind="delay",
+                          delay_steps=2 + seed),))
+    sess = StreamSession(spec, block=64, fault_plan=plan)
+    ref = StreamSession(spec, block=64)
+    rng = np.random.default_rng(seed + 200)
+    for _ in range(n_blocks):
+        blk = rng.integers(0, universe, 64)
+        sess.ingest(blk, np.ones(64, np.int64))
+        ref.ingest(blk, np.ones(64, np.int64))
+    sess.flush()
+    ref.flush()
+    for lx, ly in zip(jax.tree.leaves(sess.state),
+                      jax.tree.leaves(ref.state)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(lx)), np.asarray(jax.device_get(ly)))
 
 
 @pytest.mark.chaos
