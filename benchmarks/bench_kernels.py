@@ -1,17 +1,21 @@
 """Kernel benchmarks: parity + interpret-mode throughput for the Pallas
 kernels (sketch_update, flash_attention) against their jnp oracles.
 
-For sketch_update the benchmark is the two-phase story (DESIGN.md §3):
-per distribution it times the seed serial O(B·k) kernel scan against the
-two-phase monitored-first path, reports the speedup and the residual
-fraction (serial fraction of the block), and checks the kernel path is
-bit-identical to the pure-JAX ``block_update``. Results are also written
-to ``BENCH_kernels.json`` at the repo root so the perf trajectory is
-machine-readable across PRs.
+For sketch_update the benchmark races THREE generations of the kernel
+path per cell (DESIGN.md §3, §14): the seed serial O(B·k) scan, the
+split two-phase path (phase 1 in XLA + residual-only launch), and the
+production fused tiled kernel (phases 1-2 in ONE ``pallas_call``);
+reports both speedups, the residual fraction, bit-identity of the fused
+launch against the engine oracle ``bank.update_block_fused``, and the
+roofline columns (achieved vs peak bytes/s, arithmetic intensity) from
+the sketch-ingest cost model (``repro.roofline.model``) against the
+hardware preset for the detected backend (``repro.platform``). Results
+are written to ``BENCH_kernels.json`` at the repo root so the perf
+trajectory is machine-readable across PRs.
 
 Wall-times here are CPU interpret-mode numbers — correctness and
-relative-shape trends only; the TPU story is the roofline analysis
-(DESIGN.md §7).
+relative-shape trends only (``peak_fraction`` likewise reads against
+the cpu preset); the TPU story is the roofline analysis (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -23,7 +27,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_print, dist_stream, min_time, write_bench_json
+from benchmarks.common import (
+    UNIVERSE_BITS,
+    csv_print,
+    dist_stream,
+    min_time,
+    write_bench_json,
+)
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
@@ -32,8 +42,10 @@ SKETCH_DISTRIBUTIONS = ("zipf", "binomial", "caida")
 SKETCH_SHAPES = ((1024, 1024), (4096, 4096))  # (k, B)
 
 # single source of truth for both csv_print and the JSON artifact
-SKETCH_COLUMNS = ["dist", "state", "k", "block", "parity",
-                  "serial_ms", "two_phase_ms", "speedup", "residual_frac"]
+SKETCH_COLUMNS = ["dist", "state", "k", "block", "parity", "bit_identical",
+                  "serial_ms", "two_phase_ms", "fused_ms", "speedup",
+                  "fused_speedup", "residual_frac", "achieved_bytes_per_s",
+                  "peak_fraction", "arith_intensity"]
 FLASH_COLUMNS = ["kernel", "seq", "parity", "ms"]
 DECODE_COLUMNS = ["kernel", "cache", "parity", "ms"]
 
@@ -41,10 +53,28 @@ DECODE_COLUMNS = ["kernel", "cache", "parity", "ms"]
 def bench_sketch_update(runs: int = 3, shapes=SKETCH_SHAPES):
     from repro.kernels.sketch_update.ops import (
         sketch_block_update,
+        sketch_block_update_fused,
         sketch_block_update_serial,
     )
     from repro import sketch as js
+    from repro.platform import hw_config
+    from repro.roofline.model import sketch_ingest_cost, sketch_roofline
+    from repro.sketch import bank as bk
 
+    # end-to-end fused client: route (packed single sort — items live in
+    # [0, 2^UNIVERSE_BITS)) + prep + ONE tiled kernel launch, all one jit
+    # program; interpret=True pinned so fused vs split is an interpret-
+    # comparable measurement on CPU
+    router = bk.HashShardRouter(1, UNIVERSE_BITS)
+
+    @jax.jit
+    def fused_ingest(state, items, weights):
+        bank1 = jax.tree.map(lambda x: x[None], state)
+        ri, rw = router.route_dense(items, weights)
+        out = sketch_block_update_fused(bank1, ri, rw, 2, True)
+        return jax.tree.map(lambda x: x[0], out)
+
+    hw = hw_config()
     rows = []
     for dist in SKETCH_DISTRIBUTIONS:
         for k, block in shapes:
@@ -77,18 +107,39 @@ def bench_sketch_update(runs: int = 3, shapes=SKETCH_SHAPES):
                     np.array_equal(np.asarray(a), np.asarray(b))
                     for a, b in zip(out_k, out_j)
                 )
-                # warm both paths, then time
+                # fused launch vs the engine oracle: bit-identical, every cell
+                out_f = fused_ingest(state, items, weights)
+                bank1 = jax.tree.map(lambda x: x[None], state)
+                out_o = bk.update_block_fused(bank1, items, weights, router, 2)
+                bit_identical = all(
+                    np.array_equal(np.asarray(a), np.asarray(b[0]))
+                    for a, b in zip(out_f, out_o)
+                )
+                # warm all paths, then time
                 sketch_block_update_serial(state, items, weights).ids.block_until_ready()
                 t_two = min_time(lambda: sketch_block_update(state, items, weights), runs)
+                t_fused = min_time(lambda: fused_ingest(state, items, weights), runs)
                 t_serial = min_time(
                     lambda: sketch_block_update_serial(state, items, weights),
                     runs)
                 n_uniq, n_mon, n_res = js.block_partition_stats(state, items, weights)
                 res_frac = n_res / max(n_uniq, 1)
+                # exact residual lockstep trip count for the cost model:
+                # the non-unit insert run length from the fused prep
+                ri, rw = router.route_dense(items, weights)
+                _, _, _, _, _, nnu, _ = bk.phase1_dense_prep(
+                    bank1, ri, rw, 2)
+                trips = int(np.asarray(nnu).max())
+                cost = sketch_ingest_cost(num_rows=1, k=k, block=block,
+                                          residual_trips=trips)
+                roof = sketch_roofline(cost, t_fused, hw)
                 rows.append([
-                    dist, label, k, block, parity,
-                    t_serial * 1e3, t_two * 1e3,
-                    t_serial / max(t_two, 1e-12), res_frac,
+                    dist, label, k, block, parity, bit_identical,
+                    t_serial * 1e3, t_two * 1e3, t_fused * 1e3,
+                    t_serial / max(t_two, 1e-12),
+                    t_two / max(t_fused, 1e-12), res_frac,
+                    roof["achieved_bytes_per_s"], roof["peak_fraction"],
+                    roof["arith_intensity"],
                 ])
     csv_print("kernel_sketch_update", SKETCH_COLUMNS, rows)
     return rows

@@ -15,8 +15,14 @@ import time
 
 def _roofline_summary():
     from pathlib import Path
-    from repro.roofline.report import load_records, markdown_table
+    from repro.roofline.report import (
+        load_records, markdown_table, sketch_kernel_table,
+    )
 
+    kj = Path("BENCH_kernels.json")
+    if kj.exists():
+        print("\n# sketch_ingest_roofline (BENCH_kernels.json)")
+        print(sketch_kernel_table(kj))
     d = Path("experiments/dryrun")
     if not d.exists() or not list(d.glob("*__single.json")):
         print("# roofline: no dry-run artifacts found "
@@ -34,7 +40,9 @@ BENCHES = {
     "fig7": ("benchmarks.bench_recall_precision", "Fig 7: recall/precision"),
     "quantiles": ("benchmarks.bench_quantiles",
                   "Figs 8-10 + dyadic bank throughput (BENCH_quantiles.json)"),
-    "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/time"),
+    "kernels": ("benchmarks.bench_kernels",
+                "Pallas kernel parity/time + fused-vs-split race + "
+                "sketch-ingest roofline (BENCH_kernels.json)"),
     "sharded": ("benchmarks.bench_sharded",
                 "hash-sharded bank vs single sketch (BENCH_sharded.json)"),
     "elastic": ("benchmarks.bench_elastic",
@@ -85,8 +93,10 @@ def main() -> int:
             # so this process keeps its single-device view
             import os
             import subprocess
+
+            from repro.platform import xla_host_device_flags
             env = dict(os.environ)
-            env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            env["XLA_FLAGS"] = xla_host_device_flags(8)
             out = subprocess.run(
                 [sys.executable, "-m", mod_name], env=env,
                 capture_output=True, text=True, timeout=600,

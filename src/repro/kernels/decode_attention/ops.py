@@ -7,9 +7,12 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.platform import resolve_interpret
 from .kernel import decode_attention_kernel
 
 LANES = 128
@@ -22,8 +25,9 @@ def decode_attention(
     v_cache: jax.Array,  # (B, C, KV, hd)
     valid: jax.Array,    # (B, C) bool
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # platform-resolved (repro.platform)
 ):
+    interpret = resolve_interpret(interpret)
     B, KV, G, hd = q.shape
     C = k_cache.shape[1]
     pad = (-hd) % LANES

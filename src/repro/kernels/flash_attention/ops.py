@@ -9,9 +9,12 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.platform import resolve_interpret
 from .kernel import flash_attention_kernel
 
 LANES = 128
@@ -29,8 +32,9 @@ def flash_attention(
     window: int = 0,
     bq: int = 128,
     bkv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # platform-resolved (repro.platform)
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV

@@ -2,12 +2,16 @@ from .ops import (
     sketch_block_update,
     sketch_block_update_banked,
     sketch_block_update_batched,
+    sketch_block_update_fused,
     sketch_block_update_serial,
+    sketch_block_update_stream,
 )
 
 __all__ = [
     "sketch_block_update",
     "sketch_block_update_banked",
     "sketch_block_update_batched",
+    "sketch_block_update_fused",
     "sketch_block_update_serial",
+    "sketch_block_update_stream",
 ]

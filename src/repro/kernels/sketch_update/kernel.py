@@ -7,9 +7,21 @@ all k = R*128 counters instead of heap operations. The whole block of B
 updates is applied in one kernel launch: one HBM round-trip for the state
 per *block*, not per update.
 
-Three kernels live here:
+Four kernels live here:
 
-``sketch_residual_kernel`` — the production two-phase path's phase 2. The
+``sketch_update_kernel_fused`` — the production path (DESIGN.md §14):
+ONE tiled launch per block covering the whole stacked (R, K) bank. The
+grid runs over row tiles; each grid step holds a (row_tile, K) state
+tile and a (row_tile, B) stream tile in VMEM (double-buffered by the
+grid pipeline) and fuses the saturating phase-1 scatter, the bulk
+empty fill, the unit-weight water-fill and the lockstep residual
+tournament. Phase-1 *prep* (sorts, match census — reads only ids,
+does not lower in Mosaic) stays in XLA via ``bank.phase1_dense_prep``
+and feeds the kernel a per-cell delta; prep + launch trace as one jit
+program. Row independence + active-mask freezing make any row_tile
+bit-identical to the engine oracle ``bank.update_block_fused``.
+
+``sketch_residual_kernel`` — the two-phase split path's phase 2. The
 wrapper (ops.py) segment-aggregates the block and scatter-adds all
 monitored deltas in one vectorized pass (they commute); only the residual
 — unmonitored inserts and unmonitored SS± deletions — enters this kernel.
@@ -45,11 +57,143 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.sketch.phases import residual_phase
-from repro.sketch.state import LANES
+from repro.sketch.phases import (
+    fill_empty_slots,
+    residual_phase,
+    waterfill_unit_inserts,
+)
+from repro.sketch.state import LANES, sat_add
 
 _INT_MAX = 2**31 - 1  # python ints: pallas kernels must not close over arrays
 EMPTY = -1
+
+
+# ---------------------------------------------------------------------------
+# Fused tiled kernel: phases 1-2 on VMEM-resident (row_tile, K) tiles
+# ---------------------------------------------------------------------------
+
+def _fused_kernel_tile(scalars_ref, uids_ref, nets_ref, delta_ref, ids_ref,
+                       counts_ref, errors_ref, ids_out, counts_out,
+                       errors_out, *, variant: int):
+    """One grid step: the whole update pipeline for a tile of bank rows.
+
+    The XLA prep (``bank.phase1_dense_prep``: sorts, searchsorted
+    matching, grouping — none of which lower in Mosaic) hands this
+    kernel per-row tensors; everything per-*cell* happens here on the
+    VMEM-resident tile in one launch:
+
+      phase 1    saturating scatter of the monitored delta;
+      phase 1.5  bulk empty fill (vmapped over tile rows);
+      phase 1.75 unit-weight water-fill;
+      phase 2    the banked residual tournament, every tile row in
+                 lockstep (shared verbatim with the pure-JAX engine).
+
+    Row independence makes tiling exact: each row's result never reads
+    another row, and the lockstep loops' extra trips (max over the tile
+    instead of the whole bank) are frozen no-ops for finished rows — so
+    any row_tile gives bit-identical banks.
+    """
+    from repro.sketch.bank import residual_phase_banked
+
+    # scalars = (4, RT) rows [i0, mu, nnu, w_del] for this tile's rows
+    i0 = scalars_ref[0]
+    mu = scalars_ref[1]
+    nnu = scalars_ref[2]
+    w_del = scalars_ref[3]
+    uids = uids_ref[...]
+    nets = nets_ref[...]
+    RT, B = uids.shape
+    flat_u = uids.reshape(-1)
+    flat_n = nets.reshape(-1)
+    uoff = jnp.arange(RT, dtype=jnp.int32) * B
+
+    ids = ids_ref[...]
+    counts = sat_add(counts_ref[...], delta_ref[...])
+    errors = errors_ref[...]
+    ids, counts, errors, _ = jax.vmap(
+        fill_empty_slots, in_axes=(0, 0, 0, None, None, 0, 0))(
+        ids, counts, errors, flat_u, flat_n, i0, uoff + mu + nnu)
+    ids, counts, errors = jax.vmap(
+        waterfill_unit_inserts, in_axes=(0, 0, 0, None, 0, 0))(
+        ids, counts, errors, flat_u, mu, uoff)
+    ids, counts, errors = residual_phase_banked(
+        ids, counts, errors, flat_u, flat_n, uoff, mu, mu + nnu, w_del,
+        variant)
+    ids_out[...] = ids
+    counts_out[...] = counts
+    errors_out[...] = errors
+
+
+def choose_row_tile(num_rows: int, k_pad: int, block: int,
+                    budget_bytes: int) -> int:
+    """Largest divisor of ``num_rows`` whose tile fits the VMEM budget.
+
+    Per grid step one slot holds the state tile (ids/counts/errors,
+    aliased in/out: 3 x RT x K_pad), the delta tile (RT x K_pad) and the
+    grouped stream tile (uids + nets: 2 x RT x B), all int32. The budget
+    is half of VMEM (repro.platform.vmem_budget_bytes) so the pipeline
+    can keep two slots resident — the double-buffer in DESIGN.md §14.
+    """
+    bytes_per_row = 4 * (4 * k_pad + 2 * block)
+    rt = max(1, min(num_rows, budget_bytes // max(bytes_per_row, 1)))
+    while num_rows % rt:
+        rt -= 1
+    return rt
+
+
+def sketch_update_kernel_fused(
+    ids: jax.Array,      # (R, K) int32 bank, K a multiple of LANES
+    counts: jax.Array,   # (R, K) int32 (padding slots inert: BLOCKED ids)
+    errors: jax.Array,   # (R, K) int32
+    delta: jax.Array,    # (R, K) int32 monitored phase-1 addend (prep)
+    h_uids: jax.Array,   # (R, B) int32 grouped residual layout per row
+    h_net: jax.Array,    # (R, B) int32 net weights aligned with h_uids
+    i0: jax.Array,       # (R,) int32 inserts consumed by the bulk fill
+    mu: jax.Array,       # (R,) int32 unit-weight insert count per row
+    nnu: jax.Array,      # (R,) int32 non-unit insert count per row
+    w_del: jax.Array,    # (R,) int32 summed unmonitored deletions per row
+    *,
+    variant: int = 2,
+    interpret: bool = True,
+    row_tile: int | None = None,
+):
+    """ONE ``pallas_call`` for the whole bank update: grid over row
+    tiles, phases 1-2 fused per tile.
+
+    Replaces the split path (phase 1 applied in XLA + a separate
+    residual-only launch): the state makes one HBM round trip per block
+    instead of two, and the grid pipeline streams the next tile's
+    operands into VMEM while the current tile updates (Mosaic's
+    ``emit_pipeline`` two-slot copy machinery — see DESIGN.md §14).
+    ``row_tile`` must divide R; None picks the largest tile fitting the
+    platform VMEM budget (``choose_row_tile``).
+    """
+    assert ids.ndim == 2 and ids.shape[1] % LANES == 0, ids.shape
+    R, K = ids.shape
+    B = h_uids.shape[1]
+    if row_tile is None:
+        from repro.platform import vmem_budget_bytes
+
+        row_tile = choose_row_tile(R, K, B, vmem_budget_bytes())
+    assert R % row_tile == 0, (R, row_tile)
+    grid = (R // row_tile,)
+    out_shape = [jax.ShapeDtypeStruct((R, K), jnp.int32)] * 3
+    kern = functools.partial(_fused_kernel_tile, variant=variant)
+    state_spec = pl.BlockSpec((row_tile, K), lambda i: (i, 0))
+    stream_spec = pl.BlockSpec((row_tile, B), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((4, row_tile), lambda i: (0, i))
+    scalars = jnp.stack([i0.astype(jnp.int32), mu.astype(jnp.int32),
+                         nnu.astype(jnp.int32), w_del.astype(jnp.int32)])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        out_shape=out_shape,
+        in_specs=[scalar_spec, stream_spec, stream_spec,
+                  state_spec, state_spec, state_spec, state_spec],
+        out_specs=[state_spec] * 3,
+        input_output_aliases={4: 0, 5: 1, 6: 2},  # state updated in place
+        interpret=interpret,
+    )(scalars, h_uids, h_net, delta, ids, counts, errors)
 
 
 # ---------------------------------------------------------------------------

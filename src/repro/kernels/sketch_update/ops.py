@@ -1,6 +1,15 @@
 """Public jit'd wrappers around the sketch_update Pallas kernels.
 
-``sketch_block_update`` is the production two-phase path (DESIGN.md §3):
+``sketch_block_update_fused`` is the production path (DESIGN.md §14):
+XLA-side prep (``bank.phase1_dense_prep``) + ONE tiled fused launch
+covering every phase per bank row, with the bank padded to the lane
+width via BLOCKED sentinels. ``sketch_block_update_stream`` scans it
+over a (NB, B) stream — prep is state-dependent, so multi-block ingest
+is a scan of launches inside one jit program, not one batched launch.
+``interpret`` is platform-resolved everywhere (None → interpret iff no
+accelerator, ``repro.platform.resolve_interpret``).
+
+``sketch_block_update`` is the earlier two-phase split path (DESIGN.md §3):
 
   1. segment-aggregate the block to per-unique net weights (XLA),
   2. phase 1 — scatter-add every monitored delta in one vectorized pass
@@ -36,14 +45,35 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from typing import Optional
+
+from repro.platform import resolve_interpret
 from repro.sketch.blocks import _phase1
 from repro.sketch.phases import pad_rows
 from repro.sketch.state import BLOCKED, LANES, SketchState, _INT_MAX
 from .kernel import (
+    choose_row_tile,
     sketch_residual_kernel,
     sketch_residual_kernel_banked,
+    sketch_update_kernel_fused,
     sketch_update_kernel_serial,
 )
+
+# Every entry point takes interpret=None by default: resolved by
+# repro.platform.resolve_interpret at trace time (interpret is a static
+# argname) to "compiled kernel iff an accelerator is attached". An
+# explicit bool is honored unchanged — CPU CI pins interpret=True.
+
+
+def _pad_bank(ids, counts, errors, k):
+    """Pad bank columns to a LANES multiple with inert BLOCKED slots."""
+    pad = (-k) % LANES
+    if pad:
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=int(BLOCKED))
+        counts = jnp.pad(counts, ((0, 0), (0, pad)),
+                         constant_values=int(_INT_MAX))
+        errors = jnp.pad(errors, ((0, 0), (0, pad)))
+    return ids, counts, errors
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))
@@ -52,10 +82,11 @@ def sketch_block_update(
     items: jax.Array,
     weights: jax.Array,
     variant: int = 2,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     assume_sorted: bool = False,
 ) -> SketchState:
     """Two-phase block of signed weighted updates via the Pallas kernel."""
+    interpret = resolve_interpret(interpret)
     k = state.ids.shape[0]
     ids1, cnt1, err1, r_uids, r_net, nu_start, nu_end, w_del = _phase1(
         state, items.astype(jnp.int32), weights.astype(jnp.int32), variant,
@@ -78,7 +109,7 @@ def sketch_block_update_banked(
     row_items: jax.Array,
     row_weights: jax.Array,
     variant: int = 2,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> SketchState:
     """Whole-bank two-phase update: ONE Pallas launch for all (R, k) rows.
 
@@ -98,15 +129,11 @@ def sketch_block_update_banked(
     """
     from repro.sketch.bank import phase1_dense
 
+    interpret = resolve_interpret(interpret)
     R, k = bank.ids.shape
     ids1, cnt1, err1, h_uids, h_net, uoff, mu, nnu, w_del = phase1_dense(
         bank, row_items, row_weights, variant)
-    pad = (-k) % LANES
-    if pad:
-        ids1 = jnp.pad(ids1, ((0, 0), (0, pad)), constant_values=int(BLOCKED))
-        cnt1 = jnp.pad(cnt1, ((0, 0), (0, pad)),
-                       constant_values=int(_INT_MAX))
-        err1 = jnp.pad(err1, ((0, 0), (0, pad)))
+    ids1, cnt1, err1 = _pad_bank(ids1, cnt1, err1, k)
     ids2, cnt2, err2 = sketch_residual_kernel_banked(
         ids1, cnt1, err1, h_uids, h_net, uoff, mu, mu + nnu, w_del,
         variant=variant, interpret=interpret,
@@ -115,13 +142,114 @@ def sketch_block_update_banked(
         ids=ids2[:, :k], counts=cnt2[:, :k], errors=err2[:, :k])
 
 
+@functools.partial(
+    jax.jit, static_argnames=("variant", "interpret", "row_tile"))
+def sketch_block_update_fused(
+    bank: SketchState,
+    row_items: jax.Array,
+    row_weights: jax.Array,
+    variant: int = 2,
+    interpret: Optional[bool] = None,
+    row_tile: Optional[int] = None,
+) -> SketchState:
+    """Whole-bank update with phases 1-2 fused in ONE tiled Pallas launch.
+
+    The production kernel path (DESIGN.md §14). The split path above
+    (``sketch_block_update_banked``) applies phase 1 in XLA and launches
+    a residual-only kernel — two HBM round trips for the bank per block.
+    Here the XLA side runs only ``bank.phase1_dense_prep`` (the sorts /
+    searchsorted matching / grouping that don't lower in Mosaic) and
+    hands the kernel a per-cell *delta* plus the grouped residual
+    layout; the kernel grid tiles the bank over rows and fuses the
+    saturating phase-1 scatter, bulk fill, water-fill and the lockstep
+    residual tournament on each VMEM-resident (row_tile, K) tile.
+
+    Bit-identical to ``bank.update_rows`` / ``bank.update_block_fused``
+    on routed views for any ``row_tile`` (rows never read each other);
+    pinned across the variant × layout grid in
+    tests/test_kernels_banked.py.
+    """
+    from repro.sketch.bank import phase1_dense_prep
+
+    interpret = resolve_interpret(interpret)
+    R, k = bank.ids.shape
+    B = row_items.shape[1]
+    ids0, cnt0, err0 = _pad_bank(bank.ids, bank.counts, bank.errors, k)
+    padded = SketchState(ids0, cnt0, err0)
+    # prep reads only the ids (matching + empty census): BLOCKED padding
+    # is not EMPTY and never matches, so prepping the padded bank is
+    # exact and the delta lands already K-padded (padding delta = 0)
+    delta, h_uids, h_net, i0, mu, nnu, w_del = phase1_dense_prep(
+        padded, row_items, row_weights, variant)
+    h_uids = h_uids.reshape(R, B)
+    h_net = h_net.reshape(R, B)
+    ids2, cnt2, err2 = sketch_update_kernel_fused(
+        ids0, cnt0, err0, delta, h_uids, h_net, i0, mu, nnu, w_del,
+        variant=variant, interpret=interpret, row_tile=row_tile,
+    )
+    return SketchState(
+        ids=ids2[:, :k], counts=cnt2[:, :k], errors=err2[:, :k])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("router", "variant", "interpret", "row_tile"))
+def sketch_block_update_stream(
+    bank: SketchState,
+    blocks_items: jax.Array,   # (NB, B) raw item blocks
+    blocks_weights: jax.Array,  # (NB, B) signed weights
+    router,
+    variant: int = 2,
+    interpret: Optional[bool] = None,
+    row_tile: Optional[int] = None,
+) -> SketchState:
+    """Multi-block ingest: scan of route -> prep -> fused kernel launches.
+
+    The device-resident half of the double-buffered ingest (DESIGN.md
+    §14): the whole NB-block stream runs as ONE jit program, so block
+    i+1's routing/prep (XLA) is queued behind block i's fused kernel
+    with no host round trip between blocks, and inside each launch the
+    grid pipeline streams tiles with two-slot copies. Phase-1 prep is
+    state-dependent (matching and the empty census read the bank ids
+    after the previous block), which is why the blocks chain through a
+    ``lax.scan`` carry rather than a single batched launch.
+
+    Bit-identical to folding ``bank.update_block_fused`` over the
+    blocks. The host-side counterpart is ``session.BlockFeeder``.
+    """
+    from repro.sketch.bank import phase1_dense_prep
+
+    interpret = resolve_interpret(interpret)
+    R, k = bank.ids.shape
+    ids0, cnt0, err0 = _pad_bank(bank.ids, bank.counts, bank.errors, k)
+
+    def step(carry, blk):
+        items, weights = blk
+        row_items, row_weights = router.route_dense(items, weights)
+        B = row_items.shape[1]
+        delta, h_uids, h_net, i0, mu, nnu, w_del = phase1_dense_prep(
+            carry, row_items, row_weights, variant)
+        out = sketch_update_kernel_fused(
+            carry.ids, carry.counts, carry.errors, delta,
+            h_uids.reshape(R, B), h_net.reshape(R, B), i0, mu, nnu, w_del,
+            variant=variant, interpret=interpret, row_tile=row_tile,
+        )
+        return SketchState(*out), None
+
+    out, _ = jax.lax.scan(
+        step, SketchState(ids0, cnt0, err0),
+        (blocks_items.astype(jnp.int32), blocks_weights.astype(jnp.int32)))
+    return SketchState(
+        ids=out.ids[:, :k], counts=out.counts[:, :k],
+        errors=out.errors[:, :k])
+
+
 @functools.partial(jax.jit, static_argnames=("variant", "interpret", "assume_sorted"))
 def sketch_block_update_batched(
     states: SketchState,
     items: jax.Array,
     weights: jax.Array,
     variant: int = 2,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     assume_sorted: bool = False,
 ) -> SketchState:
     """vmap'd two-phase update: states (E, k), items/weights (E, B).
@@ -142,9 +270,10 @@ def sketch_block_update_serial(
     items: jax.Array,
     weights: jax.Array,
     variant: int = 2,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> SketchState:
     """Pre-two-phase baseline: serial O(B·k) kernel scan (benchmarks only)."""
+    interpret = resolve_interpret(interpret)
     k = state.ids.shape[0]
     ids2, cnt2, err2 = pad_rows(state.ids, state.counts, state.errors)
     ids2, cnt2, err2 = sketch_update_kernel_serial(

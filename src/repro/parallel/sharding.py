@@ -133,6 +133,29 @@ def current_rules() -> Optional[ShardingRules]:
     return _CTX.rules
 
 
+def host_device_mesh(n: int, axis: str = "shards") -> Mesh:
+    """A 1D mesh over ``n`` emulated host devices (CPU testing idiom).
+
+    Requires the process to have been started with
+    ``repro.platform.xla_host_device_flags(n)`` in XLA_FLAGS (the flag
+    only takes effect before backend init — benchmarks/run.py builds the
+    subprocess env with it; tests use conftest-level env). Raises with
+    that recipe if fewer than ``n`` devices are visible.
+    """
+    import numpy as np
+
+    from repro import platform
+
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"host_device_mesh({n}) needs {n} devices but only "
+            f"{len(devs)} are visible; start the process with "
+            f"XLA_FLAGS='{platform.xla_host_device_flags(n)}' "
+            f"(repro.platform.set_host_device_count before jax init)")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
 def _axis_size(mesh: Mesh, axis: Axis) -> int:
     if axis is None:
         return 1

@@ -29,9 +29,54 @@ class HWConfig:
     hbm_bw: float = 819e9             # bytes/s per chip
     link_bw: float = 50e9             # bytes/s per ICI link
     hbm_bytes: float = 16e9           # HBM capacity per chip
+    int_flops: float = 0.0            # int32 ALU op/s (0 -> use peak_flops)
+
+    @property
+    def peak_int_ops(self) -> float:
+        """Peak int32 compare/select throughput for the sketch kernels.
+
+        The sketch ingest is pure int32 (no MXU work), so its compute
+        roof is the vector-ALU rate, not the bf16 matmul peak. Presets
+        that know their int rate set ``int_flops``; others fall back to
+        ``peak_flops`` (an optimistic roof — peak_fraction then under-
+        reports, never over-reports).
+        """
+        return self.int_flops or self.peak_flops
 
 
-HW = HWConfig()
+# Registry of hardware presets, selected by ``repro.platform.hw_config``
+# from the detected JAX backend so peak-fraction numbers are computed
+# against the hardware that ran the bench (the old behavior silently
+# rooflined CPU interpret-mode runs against TPU v5e HBM).
+#   cpu:      one modern server core's share (benches are single-threaded
+#             per-cell): ~50 GFLOP/s, ~30 GB/s DRAM stream bandwidth.
+#   gpu_a100: A100-80GB SXM: 312 TFLOP/s bf16, 2.0 TB/s HBM2e, 600 GB/s
+#             NVLink, 19.5 TFLOP/s int32.
+#   tpu_v5e:  the original constants (197 TFLOP/s bf16, 819 GB/s HBM,
+#             50 GB/s ICI link); int ~ one VPU lane-op per cycle.
+HW_PRESETS: Dict[str, HWConfig] = {
+    "cpu": HWConfig(name="cpu", peak_flops=5e10, hbm_bw=3e10,
+                    link_bw=1e10, hbm_bytes=64e9, int_flops=5e10),
+    "gpu_a100": HWConfig(name="gpu_a100", peak_flops=312e12, hbm_bw=2.0e12,
+                         link_bw=600e9, hbm_bytes=80e9, int_flops=19.5e12),
+    "tpu_v5e": HWConfig(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                        link_bw=50e9, hbm_bytes=16e9, int_flops=4e12),
+}
+
+
+def hw_for(name: str) -> HWConfig:
+    try:
+        return HW_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown hardware preset {name!r}; "
+            f"available: {sorted(HW_PRESETS)}") from None
+
+
+# Default for the transformer-side roofline terms below (the launch
+# configs target v5e pods); sketch benches pass an explicit HWConfig
+# resolved by repro.platform instead of this global.
+HW = HW_PRESETS["tpu_v5e"]
 
 
 @dataclasses.dataclass
@@ -272,3 +317,78 @@ def roofline_terms(
         memory_s_analytic=analytic_hbm_bytes(cfg, shape, microbatches, remat)
         / (chips * HW.hbm_bw),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sketch-ingest cost model (SpaceSaving± bank kernel)
+# ---------------------------------------------------------------------------
+# First-order op counts per counter cell in the fused tiled kernel
+# (DESIGN.md §14). These are compare/select/add counts read off the fused
+# core bodies, not measured: sat_add is ~6 vector ops (two clamps + min +
+# max + clip + add); fill/waterfill touch each cell ~12 times (masks,
+# iota compare, two selects per array); one residual lockstep trip costs
+# ~8 ops/cell (argmin tournament + one-hot select on three arrays).
+_SAT_ADD_OPS = 6
+_FILL_OPS = 12
+_TOURNAMENT_OPS = 8
+
+
+def sketch_ingest_cost(
+    *,
+    num_rows: int,
+    k: int,
+    block: int,
+    lanes: int = 128,
+    residual_trips: float = 0.0,
+    dtype_bytes: int = 4,
+) -> Dict[str, float]:
+    """Analytic bytes/flops for one fused bank update of a (R, k) bank.
+
+    bytes = bank tile traffic + block stream:
+      - state tiles (ids/counts/errors) read + written once each:
+        3 x R x k_pad x 4 x 2
+      - block stream read once: the phase-1 delta tile (R x k_pad), the
+        grouped residual layout (uids + nets, R x B each), and the raw
+        item/weight block (B each)
+    flops ~ compare/select ops: per-cell phase-1 + fill/waterfill work
+    plus ``residual_trips`` lockstep tournament iterations, each a full
+    (R x k_pad) argmin + one-hot select.
+
+    ``residual_trips`` is the measured (or estimated) iteration count of
+    the residual while-loop — 0 on a cold bank (bulk fill absorbs every
+    insert), up to ~residual_frac x B on a saturated one.
+    """
+    k_pad = ((k + lanes - 1) // lanes) * lanes
+    cells = num_rows * k_pad
+    state_bytes = 3 * cells * dtype_bytes * 2
+    stream_bytes = (
+        cells * dtype_bytes                        # phase-1 delta tile
+        + 2 * num_rows * block * dtype_bytes       # grouped uids + nets
+        + 2 * block * dtype_bytes                  # raw items + weights
+    )
+    flops = cells * (_SAT_ADD_OPS + _FILL_OPS) \
+        + residual_trips * cells * _TOURNAMENT_OPS
+    return {"bytes": float(state_bytes + stream_bytes), "flops": float(flops)}
+
+
+def sketch_roofline(cost: Dict[str, float], wall_s: float,
+                    hw: Optional[HWConfig] = None) -> Dict[str, float]:
+    """Roofline columns for one bench cell given its analytic cost.
+
+    achieved_bytes_per_s — analytic bytes moved / measured wall time;
+    peak_fraction        — achieved vs the preset's HBM bandwidth roof
+                           (the sketch ingest is memory-bound at its
+                           ~1.6 op/byte intensity on every preset);
+    arith_intensity      — analytic flops / analytic bytes (op/byte).
+    """
+    hw = hw or HW
+    achieved = cost["bytes"] / wall_s if wall_s > 0 else 0.0
+    memory_s = cost["bytes"] / hw.hbm_bw
+    compute_s = cost["flops"] / hw.peak_int_ops
+    return {
+        "achieved_bytes_per_s": achieved,
+        "peak_fraction": achieved / hw.hbm_bw,
+        "arith_intensity": cost["flops"] / cost["bytes"] if cost["bytes"] else 0.0,
+        "bound_s": max(memory_s, compute_s),
+        "bound": "memory" if memory_s >= compute_s else "compute",
+    }

@@ -54,6 +54,35 @@ def markdown_table(recs: List[Dict]) -> str:
     return hdr + "\n".join(rows) + "\n"
 
 
+def sketch_kernel_table(json_path) -> str:
+    """BENCH_kernels.json sketch_update rows -> roofline markdown.
+
+    Renders the fused-kernel accountability columns (DESIGN.md §14):
+    achieved stream rate vs the HW preset's HBM bound, peak fraction and
+    arithmetic intensity per (dist, state, shape) cell, alongside the
+    fused-vs-split speedup. Raises KeyError if the artifact predates the
+    roofline columns — the CI bench-smoke assertion relies on that.
+    """
+    data = json.loads(Path(json_path).read_text())
+    rows = data["sketch_update"]
+    hdr = (
+        "| dist | state | k | B | fused ms | fused/split | GB/s | "
+        "peak% | flop/B | bit-identical |\n"
+        "|---|---|--:|--:|--:|--:|--:|--:|--:|---|\n"
+    )
+    out = []
+    for r in rows:
+        out.append(
+            f"| {r['dist']} | {r['state']} | {r['k']} | {r['block']} "
+            f"| {r['fused_ms']:.2f} | {r['fused_speedup']:.2f}x "
+            f"| {r['achieved_bytes_per_s']/1e9:.2f} "
+            f"| {r['peak_fraction']*100:.1f}% "
+            f"| {r['arith_intensity']:.3f} "
+            f"| {'yes' if r['bit_identical'] else '**NO**'} |"
+        )
+    return hdr + "\n".join(out) + "\n"
+
+
 def memory_table(recs: List[Dict]) -> str:
     hdr = (
         "| arch | shape | args | output | temp | fits 16G HBM? | compile |\n"

@@ -101,7 +101,8 @@ class SketchSpec:
     backend of a given spec produces bit-identical states:
       'bank'   fused bank-engine launch (production default);
       'block'  per-row vmapped two-phase update;
-      'kernel' Pallas residual kernel (interpret mode on CPU);
+      'kernel' fused tiled Pallas launch (interpret resolved by
+               repro.platform: compiled iff an accelerator is attached);
       'serial' sequential scan baseline (A/B reference).
     ``backends_for(kind, shards)`` lists what a combination supports.
     """
@@ -307,9 +308,19 @@ class _FrequencyAdapter:
             return blocks.block_update(state, items, weights, v)
         if spec.backend == "serial":
             return blocks.block_update_serial(state, items, weights, v)
-        from repro.kernels.sketch_update.ops import sketch_block_update
+        # 'kernel': the fused tiled launch on the flat sketch viewed as a
+        # one-row bank (same routing as bank.update_single, so the fused
+        # partition path and this stay bit-identical); interpret resolves
+        # platform-side (repro.platform) instead of hardcoding True.
+        from repro.kernels.sketch_update.ops import sketch_block_update_fused
+        from repro.sketch.bank import HashShardRouter
 
-        return sketch_block_update(state, items, weights, v, interpret=True)
+        router = HashShardRouter(1, spec.bits)
+        row_items, row_weights = router.route_dense(
+            items.astype(jnp.int32), weights.astype(jnp.int32))
+        bank1 = jax.tree.map(lambda x: x[None], state)
+        out = sketch_block_update_fused(bank1, row_items, row_weights, v)
+        return jax.tree.map(lambda x: x[0], out)
 
     def query_many(self, spec, state, items):
         return st.query_many(state, items)

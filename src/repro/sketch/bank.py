@@ -337,33 +337,32 @@ def residual_phase_banked(ids2, cnt2, err2, h_uids, h_net, uoff, start,
 # Dense fused core: batched phase 1 on (R, B) row views
 # ---------------------------------------------------------------------------
 
-def phase1_dense(bank: SketchState, row_items: jax.Array,
-                 row_weights: jax.Array, variant: int):
-    """Batched phases 1-1.75 on row-sorted (R, B) views — no per-row vmap
-    of block orchestration, no compaction sorts.
-
-    The single-sketch pipeline (blocks._phase1) run for all rows at once
-    on dense matrices:
+def phase1_dense_prep(bank: SketchState, row_items: jax.Array,
+                      row_weights: jax.Array, variant: int):
+    """The XLA half of the dense phase 1: everything that needs sorts,
+    searchsorted or scatters, none of which lower inside a Mosaic
+    kernel. Returns the per-cell state *delta* instead of mutating the
+    bank, so the fused Pallas kernel can apply phases 1-2 on VMEM-
+    resident tiles (kernels/sketch_update) while this path's own
+    ``phase1_dense`` applies the identical arithmetic in XLA:
 
       1. per-row prefix-sum aggregation to (head, net) — every row is
          already ascending (router contract), so no sort at all;
       2. monitored matching for ALL rows with one vmapped searchsorted
          of the (R, k) bank ids into their own row's sorted view
-         (first occurrence = segment head, where net is valid);
+         (first occurrence = segment head, where net is valid) ->
+         ``delta``, the (R, k) monitored scatter addend;
       3. residual classification + ONE batched within-row grouping sort
          building every row's [units | non-units | consumed-by-fill]
          layout at once (the layout blocks._phase1 builds with two
          partition sorts, collapsed to one since the consumed prefix is
-         known up front from in-row insert ranks);
-      4. per-row slices of the one flattened grouped layout feed batched
-         fill_empty_slots / waterfill_unit_inserts.
+         known up front from in-row insert ranks).
 
-    Returns ``(ids1, cnt1, err1, h_uids, h_net, uoff, mu, nnu, w_del)``:
-    the bank after the vectorized phases, the flattened (R*B,) grouped
-    residual layout, per-row offsets of the unit run (``uoff``), unit /
-    non-unit insert counts and summed unmonitored deletion weight — the
-    banked residual loop's inputs, shared verbatim with the Pallas
-    banked kernel so the two stay bit-identical.
+    Only ``bank.ids`` is read (matching and the empty census); counts
+    and errors are untouched, so the delta is valid however the
+    consumer stages the apply. Returns ``(delta, h_uids, h_net, i0,
+    mu, nnu, w_del)`` with ``h_uids``/``h_net`` the flattened (R*B,)
+    grouped residual layout.
     """
     R, k = bank.ids.shape
     B = row_items.shape[1]
@@ -382,8 +381,7 @@ def phase1_dense(bank: SketchState, row_items: jax.Array,
     pos = jnp.clip(jax.vmap(jnp.searchsorted)(row_items, bank.ids), 0, B - 1)
     match = (jnp.take_along_axis(row_items, pos, axis=1) == bank.ids) \
         & (bank.ids >= 0)
-    counts1 = sat_add(bank.counts, jnp.where(
-        match, jnp.take_along_axis(net, pos, axis=1), 0))
+    delta = jnp.where(match, jnp.take_along_axis(net, pos, axis=1), 0)
     rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, k))
     monitored = (
         jnp.zeros((R, B), bool)
@@ -413,6 +411,31 @@ def phase1_dense(bank: SketchState, row_items: jax.Array,
     h_net = jnp.take_along_axis(net, perm, axis=1).reshape(-1)
     mu = unit.sum(axis=1)
     nnu = nonunit.sum(axis=1)
+    return delta, h_uids, h_net, i0, mu, nnu, w_del
+
+
+def phase1_dense(bank: SketchState, row_items: jax.Array,
+                 row_weights: jax.Array, variant: int):
+    """Batched phases 1-1.75 on row-sorted (R, B) views — no per-row vmap
+    of block orchestration, no compaction sorts.
+
+    ``phase1_dense_prep`` (sorts/matching/grouping) followed by the
+    in-place apply: saturating phase-1 scatter, then per-row slices of
+    the one flattened grouped layout feed batched fill_empty_slots /
+    waterfill_unit_inserts. The apply bodies are shared verbatim with
+    the fused Pallas tile kernel, so the two stay bit-identical.
+
+    Returns ``(ids1, cnt1, err1, h_uids, h_net, uoff, mu, nnu, w_del)``:
+    the bank after the vectorized phases, the flattened (R*B,) grouped
+    residual layout, per-row offsets of the unit run (``uoff``), unit /
+    non-unit insert counts and summed unmonitored deletion weight — the
+    banked residual loop's inputs.
+    """
+    R, k = bank.ids.shape
+    B = row_items.shape[1]
+    delta, h_uids, h_net, i0, mu, nnu, w_del = phase1_dense_prep(
+        bank, row_items, row_weights, variant)
+    counts1 = sat_add(bank.counts, delta)
     uoff = jnp.arange(R, dtype=jnp.int32) * B   # row r's run starts at r*B
 
     # -- 4. batched O(k) phases on the one global grouped layout ----------
@@ -730,6 +753,7 @@ __all__ = [
     "Router",
     "residual_phase_banked",
     "phase1_dense",
+    "phase1_dense_prep",
     "update_rows",
     "update_block_fused",
     "update_single",

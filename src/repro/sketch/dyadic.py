@@ -122,7 +122,7 @@ def update_block(
     weights: jax.Array,
     variant: int = VARIANT_SSPM,
     path: str = "bank",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> DyadicState:
     """Apply a block of signed weighted updates to every layer at once.
 
@@ -132,11 +132,18 @@ def update_block(
                      (``repro.sketch.bank``)
           'block'  — vmapped pure-JAX two-phase update (pre-engine path,
                      kept for A/B; bit-identical to 'bank')
-          'kernel' — Pallas banked residual kernel, ONE launch for the
-                     whole bank (bit-identical: shares phase 1 and the
-                     banked residual body with 'bank')
+          'kernel' — fused tiled Pallas launch, phases 1-2 in ONE
+                     ``pallas_call`` for the whole bank (bit-identical:
+                     shares the prep and phase bodies with 'bank')
           'serial' — vmapped pre-two-phase serial scan (A/B baseline)
+
+    ``interpret`` is platform-resolved when None; passing True
+    explicitly from this layer is deprecated (trace-time warning).
     """
+    if interpret is True:
+        from repro.platform import warn_explicit_interpret
+
+        warn_explicit_interpret("dyadic.update_block")
     items = items.astype(jnp.int32)
     weights = weights.astype(jnp.int32)
     bits = state.bank.ids.shape[0]
@@ -151,11 +158,11 @@ def update_block(
         bank = bk.update_rows(state.bank, items_l, weights_l, variant)
         return DyadicState(bank=bank, mass=state.mass + weights.sum())
     if path == "kernel":
-        # the banked kernel shares phase1_dense: (1, B) weights pass
+        # the fused kernel shares phase1_dense_prep: (1, B) weights pass
         # through, prefix-summed once like the 'bank' path
-        from repro.kernels.sketch_update.ops import sketch_block_update_banked
+        from repro.kernels.sketch_update.ops import sketch_block_update_fused
 
-        bank = sketch_block_update_banked(
+        bank = sketch_block_update_fused(
             state.bank, items_l, weights_l, variant, interpret)
         return DyadicState(bank=bank, mass=state.mass + weights.sum())
     # pre-engine paths vmap per layer: materialize the shared weight row

@@ -166,7 +166,10 @@ def fill_empty_slots(ids: jax.Array, counts: jax.Array, errors: jax.Array,
     offsets instead of materializing per-shard slices.
     """
     B = r_uids.shape[0]
-    empty = ids == EMPTY
+    # Python-int EMPTY literal, not the module's jnp scalar: this body is
+    # shared verbatim with the fused Pallas tile kernel, which must not
+    # close over arrays.
+    empty = ids == -1
     e_rank = jnp.cumsum(empty) - 1  # 0,1,2,... over empty slots in index order
     take = empty & (e_rank < n_ins)
     src = jnp.clip(offset + e_rank, 0, B - 1)

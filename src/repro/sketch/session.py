@@ -81,7 +81,13 @@ def _ingest_fn(spec: SketchSpec, block: int, donate: bool = True):
     def ingest(state, items, weights):
         return api.adapter_for(spec).update(spec, state, items, weights)
 
-    donate_args = (0,) if donate and jax.default_backend() != "cpu" else ()
+    # platform-resolved: donation is on iff an accelerator is attached
+    # (repro.platform.donate_state_buffers; DESIGN.md §14 on why CPU
+    # keeps it off). Donation changes buffer reuse only, never results —
+    # pinned by tests/test_platform.py.
+    from repro.platform import donate_state_buffers
+
+    donate_args = (0,) if donate and donate_state_buffers() else ()
     return jax.jit(ingest, donate_argnums=donate_args)
 
 
@@ -590,4 +596,60 @@ class StreamSession:
                 s += n
 
 
-__all__ = ["StreamSession", "_ingest_fn"]
+class BlockFeeder:
+    """Host-side two-slot feeder that keeps the compiled ingest saturated.
+
+    The device half of the double-buffered ingest pipeline (DESIGN.md
+    §14) streams tiles inside the fused kernel; this is the host half.
+    ``feed(items, weights)`` *stages* block i (async ``jax.device_put``
+    of the padded arrays) and *dispatches* block i-1 — so the host→device
+    transfer and numpy conversion of the next block overlap the device
+    compute of the current one, the same two-slot copy idiom as the
+    kernel's VMEM pipeline:
+
+        slot A: block i-1  dispatched, computing on device
+        slot B: block i    staging host->device
+
+    At most ``depth`` ingests stay in flight (backpressure via
+    ``block_until_ready`` on the oldest) so a fast host cannot queue
+    unbounded device work. ``flush()`` dispatches the last staged block
+    and synchronizes.
+
+    Blocks must be exactly session-block-sized and zero-weight padded
+    (the ``StreamSession.ingest_block`` contract). Feeding through a
+    feeder is bit-identical to calling ``ingest_block`` sequentially —
+    only the overlap changes (pinned in tests/test_platform.py).
+    """
+
+    def __init__(self, session: StreamSession, depth: int = 2):
+        self.session = session
+        self.depth = max(1, int(depth))
+        self._staged: Optional[Tuple[jax.Array, jax.Array]] = None
+        self._inflight: Deque = collections.deque()
+
+    def feed(self, items, weights) -> None:
+        staged = (
+            jax.device_put(np.asarray(items, dtype=np.int32)),
+            jax.device_put(np.asarray(weights, dtype=np.int32)),
+        )
+        if self._staged is not None:
+            self._dispatch(*self._staged)
+        self._staged = staged
+
+    def _dispatch(self, items, weights) -> None:
+        self.session.ingest_block(items, weights)
+        self._inflight.append(self.session.state)
+        while len(self._inflight) > self.depth:
+            jax.block_until_ready(self._inflight.popleft())
+
+    def flush(self):
+        """Dispatch the staged block, wait for the device, return state."""
+        if self._staged is not None:
+            self._dispatch(*self._staged)
+            self._staged = None
+        while self._inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        return self.session.state
+
+
+__all__ = ["BlockFeeder", "StreamSession", "_ingest_fn"]

@@ -178,15 +178,18 @@ def _update_block_routed(
     variant: int,
     universe_bits: Optional[int],
     path: str,
-    interpret: bool,
+    interpret: Optional[bool],
 ) -> ShardedSketch:
     """Masked-row ingest: the per-device program (and the Pallas path)."""
     S = state.num_shards
     items_b, w_routed = route_block(items, weights, S, universe_bits)
     if path == "kernel":
-        from repro.kernels.sketch_update.ops import sketch_block_update_banked
+        # production kernel path: phases 1-2 fused in one tiled launch
+        # (bit-identical to the split banked kernel and the pure-JAX
+        # engine; interpret resolves platform-side)
+        from repro.kernels.sketch_update.ops import sketch_block_update_fused
 
-        bank = sketch_block_update_banked(
+        bank = sketch_block_update_fused(
             state.bank, items_b, w_routed, variant, interpret)
     else:
         bank = block_update_batched(
@@ -237,7 +240,7 @@ def update_block(
     *,
     universe_bits: Optional[int] = None,
     path: str = "auto",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> ShardedSketch:
     """Route one block shard-by-hash and ingest it with a single launch.
 
@@ -249,11 +252,17 @@ def update_block(
           'vmap'      — masked-row ``block_update_batched`` (the
                         per-device program; kept callable for A/B);
           'shard_map' — force the mesh path;
-          'kernel'    — Pallas residual kernel per shard (bit-identical).
+          'kernel'    — fused tiled Pallas launch (bit-identical).
     All paths produce bit-identical banks. ``universe_bits``: static
     bound log2(universe) enabling the packed single-sort router (as in
-    the dyadic bank).
+    the dyadic bank). ``interpret`` defaults to platform-resolved
+    (``repro.platform.resolve_interpret``); passing True explicitly is
+    deprecated at this layer.
     """
+    if interpret is True:
+        from repro.platform import warn_explicit_interpret
+
+        warn_explicit_interpret("sharded.update_block")
     if path == "auto":
         axes = _shard_mesh_axes(state.num_shards)
         path = "shard_map" if axes else "block"

@@ -1,0 +1,144 @@
+"""Kernel-parity grid for the fused tiled bank kernel (DESIGN.md §14).
+
+Pins ``sketch_block_update_fused`` — ONE tiled ``pallas_call`` fusing the
+phase-1 scatter, bulk fill, water-fill and the lockstep residual
+tournament — bit-identical to the engine oracle
+``bank.update_block_fused`` across
+
+    variant ∈ {sspm, lazy, double} × layout ∈ {plain, sharded S=4,
+    dyadic bits=12} × non-LANES-multiple k (padding edge),
+
+plus the tiling/grid edge (every row_tile gives the same bank) and the
+multi-block stream entry. Everything runs in interpret mode on CPU CI
+(interpret=True pinned at the ops layer, which never warns — the
+deprecation applies to the sketch API layer only, also covered here).
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sketch_update.ops import (
+    sketch_block_update_fused,
+    sketch_block_update_stream,
+)
+from repro.sketch import bank as bk
+
+K = 200  # deliberately not a LANES multiple: exercises BLOCKED padding
+VARIANT = {"sspm": 2, "lazy": 1}
+
+
+def _layout(name):
+    if name == "plain":
+        return bk.init([K]), bk.HashShardRouter(1, 16), 1 << 16
+    if name == "sharded":
+        return bk.init([K] * 4), bk.HashShardRouter(4, 16), 1 << 16
+    assert name == "dyadic"
+    bits = 12
+    return bk.init([K] * bits), bk.DyadicLevelRouter(bits), 1 << bits
+
+
+def _stream(rng, universe, n=512, signed=True):
+    items = jnp.asarray(rng.integers(0, universe, n), jnp.int32)
+    choices = [-2, -1, 1, 1, 1, 3] if signed else [1, 1, 2]
+    weights = jnp.asarray(rng.choice(choices, n), jnp.int32)
+    return items, weights
+
+
+def _assert_banks_equal(got, want, msg):
+    for name, a, b in zip(("ids", "counts", "errors"), got, want):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{msg}: {name}")
+
+
+@pytest.mark.parametrize("layout", ["plain", "sharded", "dyadic"])
+@pytest.mark.parametrize("variant", ["sspm", "lazy"])
+def test_fused_kernel_matches_engine(layout, variant):
+    """Two blocks (cold + warm/residual-active) per grid cell."""
+    bank, router, universe = _layout(layout)
+    v = VARIANT[variant]
+    rng = np.random.default_rng(hash((layout, variant)) % 2**31)
+    ref = fused = bank
+    for blk in range(2):
+        items, weights = _stream(rng, universe)
+        ref = bk.update_block_fused(ref, items, weights, router, v)
+        ri, rw = router.route_dense(items, weights)
+        fused = sketch_block_update_fused(fused, ri, rw, v, True)
+        _assert_banks_equal(fused, ref, f"{layout}/{variant}/block{blk}")
+
+
+@pytest.mark.parametrize("layout", ["plain", "sharded", "dyadic"])
+def test_fused_kernel_double_variant(layout):
+    """'double' = the family's coupled two-bank ingest (bank.update_pair):
+    both insert-only split streams through the fused kernel."""
+    bank, router, universe = _layout(layout)
+    rng = np.random.default_rng(7)
+    ins_ref = del_ref = ins_f = del_f = bank
+    for blk in range(2):
+        items, weights = _stream(rng, universe)
+        ins_ref, del_ref = bk.update_pair(
+            ins_ref, del_ref, items, weights, router, 2)
+        w_ins, w_del = bk.split_signed(weights)
+        for tag, w in (("ins", w_ins), ("del", w_del)):
+            ri, rw = router.route_dense(items, w)
+            if tag == "ins":
+                ins_f = sketch_block_update_fused(ins_f, ri, rw, 2, True)
+            else:
+                del_f = sketch_block_update_fused(del_f, ri, rw, 2, True)
+        _assert_banks_equal(ins_f, ins_ref, f"{layout}/double/ins/{blk}")
+        _assert_banks_equal(del_f, del_ref, f"{layout}/double/del/{blk}")
+
+
+@pytest.mark.parametrize("row_tile", [1, 2, 4])
+def test_row_tile_grid_bit_identical(row_tile):
+    """Any row_tile divisor gives the same bank: rows never read each
+    other and the lockstep loops' extra trips are frozen no-ops."""
+    bank, router, universe = _layout("sharded")
+    rng = np.random.default_rng(3)
+    items, weights = _stream(rng, universe)
+    ri, rw = router.route_dense(items, weights)
+    want = sketch_block_update_fused(bank, ri, rw, 2, True, row_tile=4)
+    got = sketch_block_update_fused(bank, ri, rw, 2, True, row_tile=row_tile)
+    _assert_banks_equal(got, want, f"row_tile={row_tile}")
+
+
+@pytest.mark.parametrize("layout", ["sharded", "dyadic"])
+def test_stream_entry_matches_sequential(layout):
+    """The scanned multi-block stream == folding single fused updates."""
+    bank, router, universe = _layout(layout)
+    rng = np.random.default_rng(11)
+    nb, n = 3, 256
+    items = jnp.asarray(rng.integers(0, universe, (nb, n)), jnp.int32)
+    weights = jnp.asarray(rng.choice([-1, 1, 1, 2], (nb, n)), jnp.int32)
+    seq = bank
+    for b in range(nb):
+        seq = bk.update_block_fused(seq, items[b], weights[b], router, 2)
+    got = sketch_block_update_stream(bank, items, weights, router, 2, True)
+    _assert_banks_equal(got, seq, f"{layout}/stream")
+
+
+def test_ops_layer_accepts_explicit_interpret_silently():
+    """interpret=True at the kernel-ops layer is the CI pin, not an API
+    misuse: no DeprecationWarning (the sketch layer is what warns)."""
+    bank, router, universe = _layout("plain")
+    items, weights = _stream(np.random.default_rng(0), universe, n=64)
+    ri, rw = router.route_dense(items, weights)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sketch_block_update_fused(bank, ri, rw, 2, True)
+
+
+def test_sketch_layer_warns_on_explicit_interpret():
+    from repro.sketch import sharded
+
+    state = sharded.init(256, 4)
+    items = jnp.arange(32, dtype=jnp.int32)
+    weights = jnp.ones(32, jnp.int32)
+    with pytest.warns(DeprecationWarning, match="interpret=True"):
+        sharded.update_block(state, items, weights, path="kernel",
+                             interpret=True)
