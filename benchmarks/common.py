@@ -53,6 +53,61 @@ def adversarial_stream(n_insert: int, delete_ratio: float = 0.5,
                        delete_pattern="targeted", order="inserts_first")
 
 
+def mixed_traffic(num_tenants: int, n_updates: int, *,
+                  delete_ratio: float = 0.5, skew: float = 1.2,
+                  query_frac: float = 0.1, query_size: int = 8,
+                  burst: int = 64, dist: str = "zipf",
+                  universe: int = UNIVERSE, seed: int = 0) -> List[tuple]:
+    """A heavy-traffic day in op form: the shared multi-tenant generator.
+
+    Returns a seeded, reproducible list of interleaved ops
+
+        ("update", tenant, items, weights)   signed int32 fragments
+        ("query",  tenant, items)            point-query probes
+
+    Tenant sizes are zipf-skewed (tenant ranks weighted ``(r+1)^-skew``,
+    sizes drawn multinomially so they sum to ``n_updates``): a few whale
+    tenants, a long tail — the service bench's population shape. Each
+    tenant's own substream is a standard ``dist_stream`` bounded-deletion
+    stream (per-tenant seed), chopped into ``burst``-sized update ops;
+    after a burst, with probability ``query_frac``, a query op probes
+    ``query_size`` items drawn from that burst. The global interleaving
+    permutes ops ACROSS tenants while preserving each tenant's own op
+    order (a fixed-permutation label trick), so per-tenant
+    insert-before-delete validity survives the shuffle.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, num_tenants + 1, dtype=np.float64)
+    p = ranks ** -float(skew)
+    p /= p.sum()
+    sizes = rng.multinomial(int(n_updates), p)
+    per_tenant_ops: List[List[tuple]] = []
+    for t in range(num_tenants):
+        ops_t: List[tuple] = []
+        if sizes[t] > 0:
+            sub = dist_stream(dist, int(sizes[t]), delete_ratio,
+                              seed=seed + 7919 * t, universe=universe)
+            for s in range(0, len(sub), burst):
+                chunk = sub[s:s + burst]
+                items = np.ascontiguousarray(chunk[:, 0], np.int32)
+                weights = np.ascontiguousarray(chunk[:, 1], np.int32)
+                ops_t.append(("update", t, items, weights))
+                if rng.random() < query_frac:
+                    probes = rng.choice(items, size=min(query_size,
+                                                        len(items)))
+                    ops_t.append(("query", t, probes.astype(np.int32)))
+        per_tenant_ops.append(ops_t)
+    labels = np.repeat(np.arange(num_tenants),
+                       [len(o) for o in per_tenant_ops])
+    rng.shuffle(labels)
+    cursors = [0] * num_tenants
+    out: List[tuple] = []
+    for t in labels:
+        out.append(per_tenant_ops[t][cursors[t]])
+        cursors[t] += 1
+    return out
+
+
 def stream_blocks(stream: np.ndarray, block: int):
     """(items, weights) int32 arrays zero-padded to a multiple of block."""
     n = len(stream)

@@ -52,6 +52,9 @@ BENCHES = {
     "family": ("benchmarks.bench_family",
                "SS± family frontier: double/unbiased/crprecis "
                "(BENCH_family.json)"),
+    "service": ("benchmarks.bench_service",
+                "multi-tenant service: heavy-traffic day, fused-vs-"
+                "sessions race + roofline (BENCH_service.json)"),
 }
 
 # --smoke shape overrides: every bench still executes end to end (import,
@@ -71,6 +74,7 @@ SMOKE_KW = {
     "compression": {},
     "h2o": {},
     "family": dict(smoke=True, write_json=False),
+    "service": dict(smoke=True, write_json=False),
 }
 
 

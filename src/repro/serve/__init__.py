@@ -7,11 +7,15 @@
   decode   -- serve_step builder: one token for the whole stack
   prefill  -- prefill_step builder: full-sequence forward + cache fill
   engine   -- smoke-scale batched serving loop (greedy sampling)
+  sketch_service -- multi-tenant sketch serving loop (coalesced ingest,
+              batched queries, top-k/quantile subscriptions, cold-row
+              spill)
 """
 from .kv_cache import build_cache, cache_spec, cache_len_for
 from .decode import build_serve_step
 from .prefill import build_prefill_step
 from .engine import ServeEngine
+from .sketch_service import QueryTicket, SketchService
 
 __all__ = [
     "build_cache",
@@ -20,4 +24,6 @@ __all__ = [
     "build_serve_step",
     "build_prefill_step",
     "ServeEngine",
+    "QueryTicket",
+    "SketchService",
 ]

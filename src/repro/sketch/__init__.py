@@ -25,6 +25,12 @@ Layered package (DESIGN.md §9-§10):
     global queries (DESIGN.md §9);
   * ``dyadic_sharded`` — the composition: mesh-distributed Dyadic
     SpaceSaving± (shard × level rows, owner-shard rank/quantile);
+  * ``tenant``  — multi-tenant bank layout (DESIGN.md §15): composite
+    ``(tenant << item_bits) | item`` keys routed tenant-major by
+    ``bank.TenantRouter``, per-tenant capacity masks, owner-row
+    queries/top-k that never cross tenants, cold-row spill / exact
+    re-admission, and per-tenant rank/quantile on a composite-key
+    dyadic bank;
   * ``api``     — the spec-driven public surface (DESIGN.md §11): one
     frozen :class:`SketchSpec` (kind × sizing × variant × shards ×
     backend) resolved through an adapter registry to every layout
@@ -58,7 +64,7 @@ from . import (
     sharded,
     state,
 )
-from . import api, elastic, family, faults, session
+from . import api, elastic, family, faults, session, tenant
 from .api import SketchSpec
 from .faults import FaultEvent, FaultPlan
 from .session import StreamSession
@@ -112,6 +118,7 @@ __all__ = [
     "elastic",
     "family",
     "faults",
+    "tenant",
     "SketchSpec",
     "StreamSession",
     "FaultEvent",

@@ -105,6 +105,15 @@ class SketchSpec:
                repro.platform: compiled iff an accelerator is attached);
       'serial' sequential scan baseline (A/B reference).
     ``backends_for(kind, shards)`` lists what a combination supports.
+
+    ``tenants=T`` selects the multi-tenant bank layout
+    (``repro.sketch.tenant``): one (T·S, k) bank ingesting composite
+    keys ``(tenant << bits) | item``, rows tenant-major, with ``shards``
+    meaning per-tenant hash shards. ``bits`` becomes required (it is
+    the per-tenant item-universe bound composite keys are packed
+    against). Size with ``k``/``eps`` (split evenly across tenants) or
+    ``tenant_caps`` (one capacity per tenant — per-tenant BLOCKED
+    masks; base variants only).
     """
 
     kind: str = "frequency"
@@ -115,6 +124,8 @@ class SketchSpec:
     shards: Optional[int] = None
     bits: Optional[int] = None
     backend: str = "bank"
+    tenants: Optional[int] = None
+    tenant_caps: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -129,11 +140,20 @@ class SketchSpec:
             raise ValueError(
                 f"SketchSpec.backend must be one of "
                 f"{BACKENDS + ('crprecis',)}, got {self.backend!r}")
-        if (self.k is None) == (self.eps is None):
+        if self.tenant_caps is not None and not isinstance(
+                self.tenant_caps, tuple):
+            # the spec must stay hashable (jit-static); accept any
+            # sequence but store the canonical tuple
+            object.__setattr__(self, "tenant_caps",
+                               tuple(int(c) for c in self.tenant_caps))
+        n_sizing = ((self.k is not None) + (self.eps is not None)
+                    + (self.tenant_caps is not None))
+        if n_sizing != 1:
             raise ValueError(
-                "size the spec with exactly one of k (total counters) or "
-                f"eps (+ alpha, paper Thm 4 / §4.2); got k={self.k}, "
-                f"eps={self.eps}")
+                "size the spec with exactly one of k (total counters), "
+                "eps (+ alpha, paper Thm 4 / §4.2) or tenant_caps "
+                f"(per-tenant counters); got k={self.k}, eps={self.eps}, "
+                f"tenant_caps={self.tenant_caps}")
         if self.kind == "quantile" and self.bits is None:
             raise ValueError(
                 "kind='quantile' needs bits (the dyadic universe bound "
@@ -145,13 +165,53 @@ class SketchSpec:
                 f"variant={self.variant!r} (the Double/unbiased "
                 f"SpaceSaving± family) is a frequency-kind layout; "
                 f"kind={self.kind!r} does not support it")
+        if self.tenant_caps is not None and self.tenants is None:
+            raise ValueError(
+                "tenant_caps sizes the multi-tenant layout; set tenants=T "
+                "(the per-tenant capacity list has no meaning without it)")
+        if self.tenants is not None:
+            if self.tenants < 1:
+                raise ValueError(
+                    f"tenants must be >= 1 or None, got {self.tenants}")
+            if self.kind != "frequency":
+                raise ValueError(
+                    "tenants=T is a frequency-kind layout; per-tenant "
+                    "quantiles run a plain quantile spec over composite "
+                    "keys instead (repro.sketch.tenant.tenant_rank_many)")
+            if self.bits is None:
+                raise ValueError(
+                    "tenants=T needs bits (the per-tenant item-universe "
+                    "bound composite keys (tenant << bits) | item are "
+                    "packed against)")
+            tb = (self.tenants - 1).bit_length()
+            if tb + self.bits > 31:
+                raise ValueError(
+                    f"composite keys need tenant_bits + bits <= 31 to fit "
+                    f"the int32 id dtype; got tenants={self.tenants} "
+                    f"({tb} bits) with bits={self.bits}")
+            if self.tenant_caps is not None:
+                if len(self.tenant_caps) != self.tenants:
+                    raise ValueError(
+                        f"tenant_caps has {len(self.tenant_caps)} entries "
+                        f"for tenants={self.tenants}")
+                if min(self.tenant_caps) < 1:
+                    raise ValueError(
+                        f"every tenant needs >= 1 counter; got "
+                        f"min(tenant_caps)={min(self.tenant_caps)}")
+                if self.variant in FAMILY_VARIANTS:
+                    raise ValueError(
+                        "tenant_caps (per-tenant BLOCKED masks) is a "
+                        "base-layout feature; the family's k_I/k_D split "
+                        "sizes evenly — use k or eps with "
+                        f"variant={self.variant!r}")
         if self.backend not in backends_for(self.kind, self.shards,
-                                            self.variant):
+                                            self.variant, self.tenants):
             raise ValueError(
                 f"backend {self.backend!r} is not supported for "
                 f"kind={self.kind!r}, shards={self.shards}, "
-                f"variant={self.variant!r}; supported: "
-                f"{backends_for(self.kind, self.shards, self.variant)}")
+                f"variant={self.variant!r}, tenants={self.tenants}; "
+                f"supported: "
+                f"{backends_for(self.kind, self.shards, self.variant, self.tenants)}")
 
     @property
     def variant_id(self) -> int:
@@ -165,6 +225,8 @@ class SketchSpec:
             raise ValueError(
                 "capacity is the frequency-kind budget; quantile kinds size "
                 "per layer — use layer_capacities()")
+        if self.tenant_caps is not None:
+            return int(sum(self.tenant_caps))
         if self.k is not None:
             return int(self.k)
         return capacity_for(self.eps, self.alpha,
@@ -178,17 +240,22 @@ class SketchSpec:
             self.bits, total_counters=self.k, eps=self.eps, alpha=self.alpha)
 
 
-def backends_for(kind: str, shards: Optional[int],
-                 variant: str = "sspm") -> Tuple[str, ...]:
-    """Execution paths a (kind, sharded?, variant) combination supports.
+def backends_for(kind: str, shards: Optional[int], variant: str = "sspm",
+                 tenants: Optional[int] = None) -> Tuple[str, ...]:
+    """Execution paths a (kind, sharded?, variant, tenants?) combination
+    supports.
 
     The family variants run only through the fused bank engine (their
     coupled banks are engine banks by construction); the deterministic
     CR-precis layout is reachable as ``backend='crprecis'`` on unsharded
     sspm frequency specs (it is a different summary, not an execution
     path of the SpaceSaving± store — sharding it would break its linear
-    row arithmetic for no space gain).
+    row arithmetic for no space gain). Multi-tenant layouts are
+    frequency-kind fused-engine banks only (their whole point is the
+    one-launch routed ingest).
     """
+    if tenants:
+        return ("bank",) if kind == "frequency" else ()
     if variant in FAMILY_VARIANTS:
         return ("bank",) if kind == "frequency" else ()
     if kind == "quantile" and shards:
@@ -281,6 +348,15 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
             raise ValueError(
                 f"item {bad} is outside the dyadic universe [0, 2^{spec.bits}"
                 f"); raise SketchSpec.bits or bucket ids before ingest")
+    if spec.tenants is not None:
+        hi = spec.tenants << spec.bits
+        if (i[real].astype(np.int64) >= hi).any():
+            bad = int(i[real][i[real].astype(np.int64) >= hi][0])
+            raise ValueError(
+                f"composite key {bad} is outside the tenant key space "
+                f"[0, {spec.tenants} << {spec.bits}); pack keys with "
+                f"tenant.pack_keys(tenant, item, item_bits={spec.bits}) "
+                f"and keep items inside [0, 2^{spec.bits})")
 
 
 # ---------------------------------------------------------------------------
@@ -513,12 +589,14 @@ def _sketch_fields(d) -> SketchState:
     )
 
 
-# registry key: (kind, sharded?, axis) — new layouts register here
-# instead of teaching every consumer a fifth client module. The third
-# axis discriminates same-kind layout families: 'base' is the plain
-# SpaceSaving± store, 'double'/'unbiased' the coupled two-bank family
-# layouts, 'crprecis' the deterministic linear-counter baseline.
-_REGISTRY: Dict[Tuple[str, bool, str], Any] = {}
+# registry key: (kind, sharded?, axis, tenants?) — new layouts register
+# here instead of teaching every consumer a fifth client module. The
+# third axis discriminates same-kind layout families: 'base' is the
+# plain SpaceSaving± store, 'double'/'unbiased' the coupled two-bank
+# family layouts, 'crprecis' the deterministic linear-counter baseline.
+# The fourth discriminates the multi-tenant bank layouts (composite-key
+# routing, tenant-major rows — repro.sketch.tenant).
+_REGISTRY: Dict[Tuple[str, bool, str, bool], Any] = {}
 
 
 def spec_axis(spec: SketchSpec) -> str:
@@ -531,20 +609,21 @@ def spec_axis(spec: SketchSpec) -> str:
 
 
 def register_adapter(kind: str, sharded: bool, adapter,
-                     axis: str = "base") -> None:
+                     axis: str = "base", tenants: bool = False) -> None:
     """Plug a new backend layout into the spec-driven surface."""
-    _REGISTRY[(kind, sharded, axis)] = adapter
+    _REGISTRY[(kind, sharded, axis, tenants)] = adapter
 
 
 def adapter_for(spec: SketchSpec):
     try:
         return _REGISTRY[(spec.kind, spec.shards is not None,
-                          spec_axis(spec))]
+                          spec_axis(spec), spec.tenants is not None)]
     except KeyError:
         raise ValueError(
             f"no adapter registered for kind={spec.kind!r}, "
             f"sharded={spec.shards is not None}, "
-            f"axis={spec_axis(spec)!r}") from None
+            f"axis={spec_axis(spec)!r}, "
+            f"tenants={spec.tenants is not None}") from None
 
 
 register_adapter("frequency", False, _FrequencyAdapter())
@@ -566,6 +645,21 @@ register_adapter("frequency", True, _family.DoubleAdapter(unbiased=True),
                  axis="unbiased")
 register_adapter("frequency", False, _family.CRPrecisAdapter(),
                  axis="crprecis")
+
+# the multi-tenant bank layouts (same acyclic post-registry import):
+# base sspm/lazy through TenantAdapter, the family variants through the
+# tenant-aware DoubleAdapter — per-tenant rows on BOTH coupled banks.
+from . import tenant as _tenant  # noqa: E402
+
+register_adapter("frequency", False, _tenant.TenantAdapter(), tenants=True)
+register_adapter("frequency", True, _tenant.TenantAdapter(), tenants=True)
+for _sharded in (False, True):
+    register_adapter("frequency", _sharded, _family.DoubleAdapter(),
+                     axis="double", tenants=True)
+    register_adapter("frequency", _sharded,
+                     _family.DoubleAdapter(unbiased=True),
+                     axis="unbiased", tenants=True)
+del _sharded
 
 
 # ---------------------------------------------------------------------------
@@ -614,8 +708,28 @@ def query(spec: SketchSpec, state, item) -> jax.Array:
 
 
 def topk(spec: SketchSpec, state, m: int) -> Tuple[jax.Array, jax.Array]:
-    """Top-m (ids, counts) heavy hitters by estimated count."""
+    """Top-m (ids, counts) heavy hitters by estimated count.
+
+    On ``tenants=T`` specs the ids are COMPOSITE keys (items of
+    different tenants are different keys); per-tenant heavy hitters in
+    raw item ids come from :func:`tenant_topk`.
+    """
     return adapter_for(spec).topk(spec, state, m)
+
+
+def tenant_topk(spec: SketchSpec, state, tenant,
+                m: int) -> Tuple[jax.Array, jax.Array]:
+    """ONE tenant's top-m (raw items, counts); never crosses tenants.
+
+    Only meaningful on multi-tenant specs (``tenants=T``): the answer
+    reads the tenant's own row slice and nothing else.
+    """
+    ad = adapter_for(spec)
+    if spec.tenants is None or not hasattr(ad, "topk_tenant"):
+        raise ValueError(
+            f"tenant_topk needs a multi-tenant spec (tenants=T); this spec "
+            f"has tenants={spec.tenants}. Use topk for the global answer.")
+    return ad.topk_tenant(spec, state, tenant, m)
 
 
 def rank_many(spec: SketchSpec, state, xs) -> jax.Array:
@@ -692,6 +806,19 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
             changes["bits"] = int(np.asarray(d["ids"]).shape[-2])
     if shards != spec.shards:
         changes["shards"] = shards
+    raw_tenants = d.get("tenants")
+    n_tenants = int(np.asarray(raw_tenants)) if raw_tenants is not None else 0
+    tenants = (n_tenants or None) if kind == "frequency" else None
+    if tenants != spec.tenants:
+        changes["tenants"] = tenants
+        if spec.tenant_caps is not None:
+            # the caps were sized for a different fleet; the restored
+            # state carries its own per-row BLOCKED capacity masks, so
+            # re-size the spec by the dict's live counters
+            changes["tenant_caps"] = None
+            changes["k"] = int((np.asarray(d["ids"]) != st.BLOCKED).sum())
+        if tenants is not None and spec.bits is None:
+            changes["bits"] = int(np.asarray(d["item_bits"]))
     # layout-family axes: the family tag carries which variant wrote it
     # (1 = double, 2 = unbiased); the crprecis tag forces its backend.
     if tag == LAYOUT_DOUBLE:
@@ -715,7 +842,7 @@ def infer_spec(spec: SketchSpec, d: Dict[str, Any]) -> SketchSpec:
         # the stored layout may not support the spec's backend
         probe = dataclasses.replace(spec, **changes, backend="bank")
         if spec.backend not in backends_for(probe.kind, probe.shards,
-                                            probe.variant):
+                                            probe.variant, probe.tenants):
             changes["backend"] = "bank"
     return dataclasses.replace(spec, **changes) if changes else spec
 
@@ -792,14 +919,16 @@ def restore(spec: SketchSpec, d: Dict[str, Any]):
     is constructed — never a half-loaded state.
     """
     inferred = infer_spec(spec, d)
-    if (inferred.kind, inferred.shards, spec_axis(inferred)) != \
-            (spec.kind, spec.shards, spec_axis(spec)):
+    if (inferred.kind, inferred.shards, spec_axis(inferred),
+            inferred.tenants) != \
+            (spec.kind, spec.shards, spec_axis(spec), spec.tenants):
         raise ValueError(
             f"checkpoint layout is kind={inferred.kind!r}, "
-            f"shards={inferred.shards}, axis={spec_axis(inferred)!r}, but "
-            f"the spec says kind={spec.kind!r}, shards={spec.shards}, "
-            f"axis={spec_axis(spec)!r}; restore through "
-            f"infer_spec(spec, d) (StreamSession.load does)")
+            f"shards={inferred.shards}, axis={spec_axis(inferred)!r}, "
+            f"tenants={inferred.tenants}, but the spec says "
+            f"kind={spec.kind!r}, shards={spec.shards}, "
+            f"axis={spec_axis(spec)!r}, tenants={spec.tenants}; restore "
+            f"through infer_spec(spec, d) (StreamSession.load does)")
     _validate_checkpoint(spec, d)
     return adapter_for(spec).restore(spec, d)
 
@@ -851,6 +980,7 @@ __all__ = [
     "query",
     "query_many",
     "topk",
+    "tenant_topk",
     "rank",
     "rank_many",
     "quantile",

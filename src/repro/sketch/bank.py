@@ -14,7 +14,11 @@ padding), and a pluggable **router** deciding what a row means —
     every row as ``x >> level`` (``repro.sketch.dyadic``);
   * :class:`ShardLevelRouter`  the composition: rows are
     (shard, level) pairs, item x feeds row (shard_of(x >> l), l) — the
-    mesh-distributed Dyadic bank (``repro.sketch.dyadic_sharded``).
+    mesh-distributed Dyadic bank (``repro.sketch.dyadic_sharded``);
+  * :class:`TenantRouter`      rows are tenants (× per-tenant hash
+    shards); composite keys (tenant << item_bits) | item route to the
+    owning tenant's rows only — the multi-tenant service bank
+    (``repro.sketch.tenant``).
 
 Routers are frozen dataclasses (hashable → jit-static) with two duties:
 ``route_dense(items, weights) -> (R, B) row-sorted views`` and, for
@@ -136,6 +140,30 @@ def sort_block(items: jax.Array, universe_bits: Optional[int]) -> jax.Array:
 # Routers: what a bank row means
 # ---------------------------------------------------------------------------
 
+def _partition_route_dense(router, items: jax.Array,
+                           weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Shared partition routing: (B,) block -> (R, B) row views.
+
+    ONE shared sort, the sorted block broadcast to every row with
+    foreign weights masked to 0. Every row stays ascending, so
+    downstream aggregation runs sorted-free, and each row aggregates to
+    exactly its own (uid, net) multiset: zero-net foreign uniques are
+    dropped by the validity mask, preserving bit-identity with
+    independently built rows.
+    """
+    items = items.astype(jnp.int32)
+    weights = weights.astype(jnp.int32)
+    order = sort_block(items, router.universe_bits)
+    s_items = items[order]
+    s_w = weights[order]
+    owner = router.owner_of(s_items)
+    rows = jnp.arange(router.num_rows, dtype=jnp.int32)[:, None]
+    w_routed = jnp.where(owner[None, :] == rows, s_w[None, :], 0)
+    items_b = jnp.broadcast_to(
+        s_items[None, :], (router.num_rows, items.shape[0]))
+    return items_b, w_routed
+
+
 @dataclasses.dataclass(frozen=True)
 class HashShardRouter:
     """Partition router: row = lowbias32 hash shard; one owner row per id.
@@ -157,25 +185,75 @@ class HashShardRouter:
 
     def route_dense(self, items: jax.Array,
                     weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
-        """(B,) block -> (S, B): sorted block broadcast, foreign weights 0.
+        """(B,) block -> (S, B): sorted block broadcast, foreign weights 0."""
+        return _partition_route_dense(self, items, weights)
 
-        Every row stays ascending, so downstream aggregation runs
-        sorted-free, and each row aggregates to exactly the shard's own
-        (uid, net) multiset: zero-net foreign uniques are dropped by the
-        validity mask, preserving bit-identity with independently built
-        shards.
+
+@dataclasses.dataclass(frozen=True)
+class TenantRouter:
+    """Partition router for multi-tenant banks: row = tenant (× shard).
+
+    Items arrive as composite routing keys ``(tenant << item_bits) |
+    item`` (``repro.sketch.tenant.pack_keys``). The router peels the
+    tenant off the high bits, and — when ``num_shards > 1`` — hashes the
+    *item part* with the same lowbias32 ``shard_of`` a per-tenant
+    ``HashShardRouter(num_shards)`` applies to raw items, so each
+    tenant's rows partition its stream exactly like an independently
+    built sharded sketch (the bit-identity tests/test_tenant.py pins).
+    Rows are tenant-major: tenant t owns rows ``[t*S, (t+1)*S)``.
+
+    Composite keys from different tenants never collide, so ownership —
+    and therefore monitoring, queries and top-k — never crosses a tenant
+    boundary: isolation is routing, not bookkeeping. Composes with the
+    dyadic layout the way ``ShardLevelRouter`` composes shard × level: a
+    dyadic bank over composite keys answers per-tenant ranks/quantiles
+    as range differences inside the tenant's key range
+    (``repro.sketch.tenant.tenant_rank_many``).
+    """
+
+    num_tenants: int
+    item_bits: int
+    num_shards: int = 1
+    kind = "partition"
+
+    @property
+    def tenant_bits(self) -> int:
+        return (self.num_tenants - 1).bit_length()
+
+    @property
+    def universe_bits(self) -> int:
+        # static composite-key bound -> packed single-sort eligibility
+        return self.item_bits + self.tenant_bits
+
+    @property
+    def num_rows(self) -> int:
+        return self.num_tenants * self.num_shards
+
+    @property
+    def monotone_owner(self) -> bool:
+        """Owner row is non-decreasing in composite-key order.
+
+        With one row per tenant the owner is the key's high bits, so the
+        fused ingest's shared sort leaves every row's entries in one
+        contiguous run — ``_fused_partition`` swaps its (R, B) one-hot
+        ranks/tallies for O(B + R) prefix-sum differences, the step that
+        otherwise dominates once rows reach the thousands (multi-tenant
+        banks). Per-tenant hash shards break monotonicity.
         """
-        items = items.astype(jnp.int32)
-        weights = weights.astype(jnp.int32)
-        order = sort_block(items, self.universe_bits)
-        s_items = items[order]
-        s_w = weights[order]
-        owner = self.owner_of(s_items)
-        rows = jnp.arange(self.num_shards, dtype=jnp.int32)[:, None]
-        w_routed = jnp.where(owner[None, :] == rows, s_w[None, :], 0)
-        items_b = jnp.broadcast_to(
-            s_items[None, :], (self.num_shards, items.shape[0]))
-        return items_b, w_routed
+        return self.num_shards == 1
+
+    def owner_of(self, keys: jax.Array) -> jax.Array:
+        keys = keys.astype(jnp.int32)
+        tenant = jnp.right_shift(keys, self.item_bits)
+        if self.num_shards == 1:
+            return tenant
+        item = jnp.bitwise_and(keys, (1 << self.item_bits) - 1)
+        return tenant * self.num_shards + shard_of(item, self.num_shards)
+
+    def route_dense(self, items: jax.Array,
+                    weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(B,) block -> (T*S, B): sorted block broadcast, foreign 0."""
+        return _partition_route_dense(self, items, weights)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,7 +326,8 @@ class ShardLevelRouter:
         return jnp.where(owner[None] == rows, w_l[None], 0)
 
 
-Router = Union[HashShardRouter, DyadicLevelRouter, ShardLevelRouter]
+Router = Union[HashShardRouter, TenantRouter, DyadicLevelRouter,
+               ShardLevelRouter]
 
 
 # ---------------------------------------------------------------------------
@@ -553,23 +632,58 @@ def _fused_partition(bank: SketchState, items: jax.Array, weights: jax.Array,
     # masks (no segment_sum: CPU XLA serializes B-wide scatter-adds).
     owner_c = jnp.clip(owner, 0, S - 1)
     res_ins = valid & ~monitored & (net > 0)
-    shard_rows = jnp.arange(S, dtype=jnp.int32)[:, None]
-    owner_mat = owner[None, :] == shard_rows                      # (S, B)
-    ins_mat = owner_mat & res_ins[None, :]
-    rank_mat = jnp.cumsum(ins_mat, axis=1)                        # inclusive
-    n_ins_s = rank_mat[:, -1]
-    rank = jnp.take_along_axis(rank_mat, owner_c[None, :], axis=0)[0] - 1
     empties_s = (bank.ids == EMPTY).sum(axis=1)
-    i0_s = jnp.minimum(n_ins_s, empties_s)
-    consumed = res_ins & (rank < i0_s[owner_c])
-    unit = res_ins & ~consumed & (net == 1)
-    nonunit = res_ins & ~consumed & (net != 1)
-    if variant == VARIANT_LAZY:
-        w_del_s = jnp.zeros((S,), jnp.int32)
+    if getattr(router, "monotone_owner", False):
+        # owner is non-decreasing in sorted-key order (tenant-major
+        # composite keys): each row's entries form one contiguous run,
+        # so in-row ranks and per-row tallies are prefix-sum
+        # differences at the run boundaries — O(B + S) where the dense
+        # branch below pays (S, B). At S ~ 1000 rows this is the
+        # difference between the fused launch beating per-row sessions
+        # and losing to them (BENCH_service.json, fused_vs_sessions).
+        rows_s = jnp.arange(S, dtype=jnp.int32)
+        start_s = jnp.searchsorted(owner, rows_s, side="left")
+        end_s = jnp.searchsorted(owner, rows_s, side="right")
+
+        def seg_sum(vals):
+            p = jnp.cumsum(vals.astype(jnp.int32))
+            p = jnp.concatenate([jnp.zeros(1, jnp.int32), p])
+            return p[end_s] - p[start_s]
+
+        cum_ins = jnp.cumsum(res_ins.astype(jnp.int32))
+        ex_ins = cum_ins - res_ins                 # exclusive prefix
+        n_ins_s = seg_sum(res_ins)
+        rank = ex_ins - ex_ins[start_s[owner_c]]   # valid at res_ins
+        i0_s = jnp.minimum(n_ins_s, empties_s)
+        consumed = res_ins & (rank < i0_s[owner_c])
+        unit = res_ins & ~consumed & (net == 1)
+        nonunit = res_ins & ~consumed & (net != 1)
+        if variant == VARIANT_LAZY:
+            w_del_s = jnp.zeros((S,), jnp.int32)
+        else:
+            res_del = valid & ~monitored & (net < 0)
+            w_del_s = seg_sum(jnp.where(res_del, -net, 0))
+        mu_s = seg_sum(unit)
+        nnu_s = seg_sum(nonunit)
     else:
-        res_del = valid & ~monitored & (net < 0)
-        w_del_s = jnp.where(owner_mat & res_del[None, :],
-                            -net[None, :], 0).sum(axis=1)
+        shard_rows = jnp.arange(S, dtype=jnp.int32)[:, None]
+        owner_mat = owner[None, :] == shard_rows                  # (S, B)
+        ins_mat = owner_mat & res_ins[None, :]
+        rank_mat = jnp.cumsum(ins_mat, axis=1)                    # inclusive
+        n_ins_s = rank_mat[:, -1]
+        rank = jnp.take_along_axis(rank_mat, owner_c[None, :], axis=0)[0] - 1
+        i0_s = jnp.minimum(n_ins_s, empties_s)
+        consumed = res_ins & (rank < i0_s[owner_c])
+        unit = res_ins & ~consumed & (net == 1)
+        nonunit = res_ins & ~consumed & (net != 1)
+        if variant == VARIANT_LAZY:
+            w_del_s = jnp.zeros((S,), jnp.int32)
+        else:
+            res_del = valid & ~monitored & (net < 0)
+            w_del_s = jnp.where(owner_mat & res_del[None, :],
+                                -net[None, :], 0).sum(axis=1)
+        mu_s = (owner_mat & unit[None, :]).sum(axis=1)
+        nnu_s = (owner_mat & nonunit[None, :]).sum(axis=1)
     klass = jnp.where(
         res_ins,
         owner_c * 3 + jnp.where(unit, 0, jnp.where(nonunit, 1, 2)),
@@ -578,8 +692,6 @@ def _fused_partition(bank: SketchState, items: jax.Array, weights: jax.Array,
     perm = _stable_partition_perm(klass)
     h_uids = uids[perm]
     h_net = net[perm]
-    mu_s = (owner_mat & unit[None, :]).sum(axis=1)
-    nnu_s = (owner_mat & nonunit[None, :]).sum(axis=1)
     cc = jnp.stack([mu_s, nnu_s, i0_s], axis=1).reshape(-1)       # (3S,)
     class_off = jnp.cumsum(cc) - cc
     uoff_s = class_off[0::3]   # start of row s's [units | non-units] run
@@ -671,6 +783,24 @@ def topk_bank(bank: SketchState, m: int) -> Tuple[jax.Array, jax.Array]:
     return ids[idx], vals
 
 
+@functools.partial(jax.jit, static_argnames=("m",))
+def topk_rows(bank: SketchState, rows: jax.Array,
+              m: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-m (ids, counts) over a row subset; ``m <= len(rows) * k``.
+
+    ``topk_bank`` restricted to ``rows`` (a traced index array, so one
+    compiled gather serves every tenant). When the subset is
+    ownership-closed under a partition router — a tenant's rows — the
+    answer is exact for that subset and blind to every other row: the
+    never-cross-tenants top-k read.
+    """
+    ids = bank.ids[rows].reshape(-1)
+    counts = jnp.where(ids < 0, jnp.int32(-2**31),
+                       bank.counts[rows].reshape(-1))
+    vals, idx = jax.lax.top_k(counts, m)
+    return ids[idx], vals
+
+
 @jax.jit
 def merge_banks(a: SketchState, b: SketchState) -> SketchState:
     """Row-wise mergeable-summaries merge of two same-shape banks.
@@ -748,6 +878,7 @@ __all__ = [
     "shard_of",
     "sort_block",
     "HashShardRouter",
+    "TenantRouter",
     "DyadicLevelRouter",
     "ShardLevelRouter",
     "Router",
@@ -759,6 +890,7 @@ __all__ = [
     "update_single",
     "query_rows",
     "topk_bank",
+    "topk_rows",
     "merge_banks",
     "consolidate",
     "split_signed",

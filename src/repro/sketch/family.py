@@ -213,7 +213,8 @@ def _guaranteed_rows(bank: SketchState, rows: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("clamp",))
 def query_many_double(state: DoubleState, items: jax.Array,
-                      clamp: bool = True) -> jax.Array:
+                      clamp: bool = True, rows: jax.Array = None
+                      ) -> jax.Array:
     """Combined estimator, owner-row reads per bank.
 
     ``clamp=True`` (the deterministic variant): subtract the delete
@@ -226,9 +227,15 @@ def query_many_double(state: DoubleState, items: jax.Array,
     ``clamp=False`` (the unbiased variant): each bank's raw count is the
     unbiased estimate, so the raw difference is returned — subtracting
     the error term (or clamping) would re-bias it.
+
+    ``rows`` overrides the owner-row computation for non-hash routers
+    (the tenant layout routes by the composite key's tenant part, not by
+    ``shard_of``); both banks always share one router, so one row vector
+    serves both sides.
     """
     items = items.astype(jnp.int32)
-    rows = bk.shard_of(items, state.ins.ids.shape[0])
+    if rows is None:
+        rows = bk.shard_of(items, state.ins.ids.shape[0])
     if clamp:
         est = bk.query_rows(state.ins, rows, items) \
             - _guaranteed_rows(state.dels, rows, items)
@@ -398,16 +405,27 @@ def _no_rank(spec):
 class DoubleAdapter:
     """variant='double' (deterministic) / 'unbiased' (randomized
     eviction) — the coupled two-bank family layouts, sharded or not
-    (shards=None is a one-row bank of the same shape)."""
+    (shards=None is a one-row bank of the same shape). With
+    ``spec.tenants`` set, rows go tenant-major (tenant t's shards are
+    rows [t*S, (t+1)*S)) and both banks route composite
+    ``(tenant << bits) | item`` keys through :class:`bank.TenantRouter`
+    — the same layout contract as ``repro.sketch.tenant``."""
 
     def __init__(self, unbiased: bool = False):
         self.unbiased = unbiased
 
     def _rows(self, spec) -> int:
-        return spec.shards or 1
+        return (spec.tenants or 1) * (spec.shards or 1)
 
-    def _router(self, spec) -> bk.HashShardRouter:
-        return bk.HashShardRouter(self._rows(spec), spec.bits)
+    def _router(self, spec, num_rows: int = None):
+        # num_rows (when given) is read off the state's leading axis so
+        # tenant specs that normalized onto one compiled-ingest cache
+        # entry (session.ingest_cache_spec) still route correctly.
+        rows = num_rows if num_rows is not None else self._rows(spec)
+        if spec.tenants is not None:
+            shards = spec.shards or 1
+            return bk.TenantRouter(rows // shards, spec.bits, shards)
+        return bk.HashShardRouter(rows, spec.bits)
 
     def make(self, spec) -> DoubleState:
         return init_double(spec.capacity, spec.alpha, self._rows(spec),
@@ -415,13 +433,40 @@ class DoubleAdapter:
 
     def update(self, spec, state, items, weights):
         fn = update_unbiased if self.unbiased else update_double
-        return fn(state, items, weights, self._router(spec))
+        router = self._router(spec, int(state.ins.ids.shape[0]))
+        return fn(state, items, weights, router)
 
     def query_many(self, spec, state, items):
-        return query_many_double(state, items, clamp=not self.unbiased)
+        rows = None
+        if spec.tenants is not None:
+            router = self._router(spec, int(state.ins.ids.shape[0]))
+            rows = router.owner_of(jnp.asarray(items).astype(jnp.int32))
+        return query_many_double(state, items, clamp=not self.unbiased,
+                                 rows=rows)
 
     def topk(self, spec, state, m):
+        # tenant specs answer in COMPOSITE keys (tenant << bits | item),
+        # same contract as the base tenant layout's global topk
         return topk_double(state, m, clamp=not self.unbiased)
+
+    def topk_tenant(self, spec, state, tenant, m):
+        """Per-tenant top-m over the tenant's own row slice of both
+        banks; ids come back as raw (unpacked) item values."""
+        shards = spec.shards or 1
+        sub = DoubleState(
+            ins=jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, jnp.asarray(tenant, jnp.int32) * shards, shards, 0),
+                state.ins),
+            dels=jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, jnp.asarray(tenant, jnp.int32) * shards, shards, 0),
+                state.dels),
+            key=state.key)
+        keys, vals = topk_double(sub, m, clamp=not self.unbiased)
+        items = jnp.where(keys >= 0,
+                          jnp.bitwise_and(keys, (1 << spec.bits) - 1), keys)
+        return items, vals
 
     def rank_many(self, spec, state, xs):
         _no_rank(spec)
@@ -432,6 +477,10 @@ class DoubleAdapter:
         return merge_double(a, b)
 
     def consolidate(self, spec, state):
+        if spec.tenants is not None:
+            # folding the row axis would collapse tenant-major rows into
+            # one shared row and destroy tenancy — keep the layout
+            return state
         return consolidate_double(state)
 
     def save(self, spec, state) -> Dict[str, Any]:
@@ -446,6 +495,8 @@ class DoubleAdapter:
             "errors_del": np.asarray(state.dels.errors),
             "key": np.asarray(state.key),
             "shards": np.int32(spec.shards or 0),
+            "tenants": np.int32(spec.tenants or 0),
+            "item_bits": np.int32(spec.bits or 0),
         }
 
     def restore(self, spec, d) -> DoubleState:
@@ -461,8 +512,9 @@ class DoubleAdapter:
         if got != self._rows(spec):
             raise ValueError(
                 f"checkpoint has {got} rows, spec asks for "
-                f"{self._rows(spec)} (shards={spec.shards}); restore with "
-                f"a matching spec (or consolidate first)")
+                f"{self._rows(spec)} (tenants={spec.tenants}, "
+                f"shards={spec.shards}); restore with a matching spec "
+                f"(or consolidate first)")
         return DoubleState(
             ins=ins, dels=dels,
             key=jnp.asarray(np.asarray(d["key"]), jnp.uint32))

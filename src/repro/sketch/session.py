@@ -51,9 +51,10 @@ call (BENCH_sharded.json / BENCH_quantiles.json ``session_overhead``).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import time
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,21 +64,30 @@ from . import api
 from .api import SketchSpec
 
 
+def ingest_cache_spec(spec: SketchSpec) -> SketchSpec:
+    """Normalize a spec to its compiled-ingest cache identity.
+
+    The jitted ingest's trace depends on the spec only through what the
+    adapter's ``update`` actually reads: kind / variant / backend / bits
+    / shards (+ the state SHAPES, which jit keys on by itself). The
+    tenant axis deliberately keeps the update path tenant-count-blind —
+    adapters derive the tenant count from the state's leading axis — so
+    a thousand per-tenant layouts that agree on those fields share ONE
+    cache entry instead of growing the process-lifetime cache without
+    bound. Tenant specs therefore collapse onto a ``tenants=1``
+    canonical form (capacity folded back into a plain ``k``); non-tenant
+    specs are their own identity.
+    """
+    if spec.tenants is None:
+        return spec
+    changes = {"tenants": 1, "tenant_caps": None}
+    if spec.tenant_caps is not None:
+        changes["k"] = int(sum(spec.tenant_caps))
+    return dataclasses.replace(spec, **changes)
+
+
 @functools.lru_cache(maxsize=None)
-def _ingest_fn(spec: SketchSpec, block: int, donate: bool = True):
-    """The compiled (state, items, weights) -> state ingest for one
-    (spec, block, donate) cell — cached for the process lifetime so
-    every session (and bench) of that cell shares one trace (unbounded
-    on purpose: an eviction would silently retrace a live session).
-
-    ``donate=True`` donates the state buffers on accelerators (the CPU
-    backend cannot reuse donated buffers, so donation is skipped there):
-    ingest then consumes the previous state, and any reference a caller
-    captured before the update dies with it.  Callers that EXPOSE their
-    state to consumers (the stats trackers' public ``.state``) pass
-    ``donate=False`` to keep captured references valid, matching the
-    pre-redesign behavior."""
-
+def _ingest_fn_cached(spec: SketchSpec, block: int, donate: bool = True):
     def ingest(state, items, weights):
         return api.adapter_for(spec).update(spec, state, items, weights)
 
@@ -89,6 +99,34 @@ def _ingest_fn(spec: SketchSpec, block: int, donate: bool = True):
 
     donate_args = (0,) if donate and donate_state_buffers() else ()
     return jax.jit(ingest, donate_argnums=donate_args)
+
+
+def _ingest_fn(spec: SketchSpec, block: int, donate: bool = True):
+    """The compiled (state, items, weights) -> state ingest for one
+    (spec, block, donate) cell — cached for the process lifetime so
+    every session (and bench) of that cell shares one trace (unbounded
+    on purpose: an eviction would silently retrace a live session).
+    Tenant specs are normalized first (:func:`ingest_cache_spec`) so the
+    cache stays bounded by LAYOUTS, not by tenant populations.
+
+    ``donate=True`` donates the state buffers on accelerators (the CPU
+    backend cannot reuse donated buffers, so donation is skipped there):
+    ingest then consumes the previous state, and any reference a caller
+    captured before the update dies with it.  Callers that EXPOSE their
+    state to consumers (the stats trackers' public ``.state``) pass
+    ``donate=False`` to keep captured references valid, matching the
+    pre-redesign behavior."""
+    return _ingest_fn_cached(ingest_cache_spec(spec), int(block), donate)
+
+
+def ingest_cache_stats() -> Dict[str, int]:
+    """Cache-accounting hook for benches and tests: how many compiled
+    ingest entries exist (``entries``) and the lru hit/miss counters.
+    ``benchmarks/bench_service.py`` asserts one-compile-per-layout with
+    the ``entries`` delta across a multi-tenant run."""
+    info = _ingest_fn_cached.cache_info()
+    return {"entries": int(info.currsize), "hits": int(info.hits),
+            "misses": int(info.misses)}
 
 
 class StreamSession:
@@ -133,9 +171,15 @@ class StreamSession:
         self._buf_i: List[np.ndarray] = []
         self._buf_w: List[np.ndarray] = []
         self._buf_n = 0
-        # windowed-deletion queues (batch- and item-granularity)
-        self._batch_fifo: Deque[Tuple[np.ndarray, np.ndarray]] = (
-            collections.deque())
+        # windowed-deletion queues (batch- and item-granularity). Batch
+        # FIFOs are keyed per tenant (None = the classic single-stream
+        # schedule) so a multi-tenant service expires each tenant's
+        # batches on that tenant's OWN horizon; the None deque is
+        # created eagerly because the stats trackers alias it through
+        # the ``batch_fifo`` property.
+        self._batch_fifos: Dict[Optional[int],
+                                Deque[Tuple[np.ndarray, np.ndarray]]] = {
+            None: collections.deque()}
         self._item_fifo: Deque[Tuple[int, int]] = collections.deque()
         # fault-tolerance machinery (all inert by default; deque with
         # maxlen=0 silently retains nothing, so the hot path below can
@@ -350,7 +394,7 @@ class StreamSession:
 
     # -- windowed batch scheduling (the stats trackers' machinery) ---------
 
-    def push(self, items, weights) -> None:
+    def push(self, items, weights, tenant: Optional[int] = None) -> None:
         """Ingest one aggregated batch NOW and schedule its expiry.
 
         After ``window`` further pushes the batch re-ingests with
@@ -363,27 +407,57 @@ class StreamSession:
         ahead of buffered insertions.  (Counters track pushed batches
         only: ``extend`` is raw streaming, outside the window
         accounting.)
+
+        ``tenant`` selects which per-tenant expiry FIFO the batch ages
+        on (the window counts pushes PER TENANT, so a hot tenant cannot
+        flush a cold tenant's history); ``None`` is the classic
+        single-stream schedule.
         """
         self.flush()
         items = np.asarray(items).ravel()
         weights = np.asarray(weights).ravel()
         self.ingest(items, weights)  # validates raw, casts internally
-        items = items.astype(np.int32)
-        weights = weights.astype(np.int32)
+        for di, dw in self.schedule_batch(
+                items.astype(np.int32), weights.astype(np.int32), tenant):
+            self.ingest(di, dw)
+
+    def schedule_batch(self, items: np.ndarray, weights: np.ndarray,
+                       tenant: Optional[int] = None,
+                       ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Account one already-ingested batch on the window schedule and
+        return the expiry updates now due (negated-weight fragments),
+        WITHOUT ingesting them — the sketch service coalesces the due
+        expiries of many tenants into its fused blocks instead of paying
+        one padded ingest per expiry the way ``push`` does.
+
+        ``push`` is exactly ``ingest`` + ``schedule_batch`` + ingesting
+        the due fragments; counters move here so both paths agree.
+        """
         self.insertions += int(weights.sum())
         if self.window is None:
-            return
-        self._batch_fifo.append((items, weights))
-        while len(self._batch_fifo) > self.window:
-            di, dw = self._batch_fifo.popleft()
-            self.ingest(di, -dw)
+            return []
+        fifo = self._batch_fifos.setdefault(tenant, collections.deque())
+        fifo.append((items, weights))
+        due: List[Tuple[np.ndarray, np.ndarray]] = []
+        while len(fifo) > self.window:
+            di, dw = fifo.popleft()
             self.deletions += int(dw.sum())
+            due.append((di, -dw))
+        return due
 
     @property
     def batch_fifo(self) -> Deque[Tuple[np.ndarray, np.ndarray]]:
-        """Live (items, weights) batches awaiting expiry (checkpointed by
-        the stats trackers)."""
-        return self._batch_fifo
+        """Live (items, weights) batches awaiting expiry on the default
+        (tenant=None) schedule (checkpointed by the stats trackers, which
+        mutate this deque in place — its identity is stable across
+        ``load``)."""
+        return self._batch_fifos[None]
+
+    @property
+    def batch_fifos(self) -> Dict[Optional[int],
+                                  Deque[Tuple[np.ndarray, np.ndarray]]]:
+        """All per-tenant expiry FIFOs, keyed by tenant (None = default)."""
+        return self._batch_fifos
 
     @property
     def alpha_bound(self) -> float:
@@ -462,7 +536,11 @@ class StreamSession:
         self.error_slack += other.error_slack
         # carry pending expiries: the merged state contains the other
         # session's live mass, so its scheduled deletions must still fire
-        self._batch_fifo.extend(other._batch_fifo)
+        # (per tenant — an absorbed tenant's batches keep aging on that
+        # tenant's own horizon)
+        for t, fifo in other._batch_fifos.items():
+            self._batch_fifos.setdefault(
+                t, collections.deque()).extend(fifo)
         self._item_fifo.extend(other._item_fifo)
 
     def consolidated(self):
@@ -501,10 +579,20 @@ class StreamSession:
             [i for i, _ in self._item_fifo], np.int32)
         d["sched_item_fifo_weights"] = np.asarray(
             [w for _, w in self._item_fifo], np.int32)
-        d["sched_batch_items"] = cat([b for b, _ in self._batch_fifo])
-        d["sched_batch_weights"] = cat([w for _, w in self._batch_fifo])
+        # batch FIFOs flatten across tenants in a deterministic key
+        # order (None first, then ascending tenant); sched_batch_tenants
+        # tags each batch's owner FIFO (-1 = the default None schedule)
+        # — the failing-before regression: pre-tenant checkpoints
+        # collapsed every tenant's pending expiries onto one FIFO
+        keys = sorted(self._batch_fifos,
+                      key=lambda t: (t is not None, t if t is not None else 0))
+        flat_b = [(t, b, w) for t in keys for b, w in self._batch_fifos[t]]
+        d["sched_batch_items"] = cat([b for _, b, _ in flat_b])
+        d["sched_batch_weights"] = cat([w for _, _, w in flat_b])
         d["sched_batch_lens"] = np.asarray(
-            [len(b) for b, _ in self._batch_fifo], np.int64)
+            [len(b) for _, b, _ in flat_b], np.int64)
+        d["sched_batch_tenants"] = np.asarray(
+            [-1 if t is None else int(t) for t, _, _ in flat_b], np.int64)
         d["sched_insertions"] = self.insertions
         d["sched_deletions"] = self.deletions
         d["sched_seq"] = self._seq
@@ -537,7 +625,11 @@ class StreamSession:
         trackers) restore their counters and FIFO after this call.
         """
         self._buf_i, self._buf_w, self._buf_n = [], [], 0
-        self._batch_fifo.clear()
+        # keep the None deque's OBJECT identity: the stats trackers hold
+        # a live alias through the batch_fifo property
+        none_fifo = self._batch_fifos[None]
+        none_fifo.clear()
+        self._batch_fifos = {None: none_fifo}
         self._item_fifo.clear()
         self.insertions = 0
         self.deletions = 0
@@ -572,11 +664,18 @@ class StreamSession:
                 np.asarray(d["sched_item_fifo_weights"])))
         cat_i = np.asarray(d["sched_batch_items"], np.int32)
         cat_w = np.asarray(d["sched_batch_weights"], np.int32)
-        self._batch_fifo = collections.deque()
+        lens = np.asarray(d["sched_batch_lens"], np.int64)
+        # pre-tenant checkpoints carry no tenant tags: everything loads
+        # onto the default (None) schedule, the pre-tenant behavior
+        tags = np.asarray(d.get("sched_batch_tenants",
+                                np.full(len(lens), -1)), np.int64)
         s = 0
-        for n in np.asarray(d["sched_batch_lens"], np.int64):
+        for n, t in zip(lens, tags):
             n = int(n)
-            self._batch_fifo.append((cat_i[s:s + n], cat_w[s:s + n]))
+            key = None if int(t) < 0 else int(t)
+            self._batch_fifos.setdefault(
+                key, collections.deque()).append(
+                    (cat_i[s:s + n], cat_w[s:s + n]))
             s += n
         self.insertions = int(np.asarray(d["sched_insertions"]))
         self.deletions = int(np.asarray(d["sched_deletions"]))
@@ -652,4 +751,5 @@ class BlockFeeder:
         return self.session.state
 
 
-__all__ = ["BlockFeeder", "StreamSession", "_ingest_fn"]
+__all__ = ["BlockFeeder", "StreamSession", "_ingest_fn",
+           "ingest_cache_spec", "ingest_cache_stats"]

@@ -57,7 +57,7 @@ def test_package_root_reexports_match_layers():
         obj = getattr(pkg, name)
         if name in ("bank", "blocks", "dyadic", "dyadic_sharded", "phases",
                     "sharded", "state", "jax_sketch", "api", "session",
-                    "elastic", "family", "faults"):
+                    "elastic", "family", "faults", "tenant"):
             continue
         if name in ("SketchSpec", "StreamSession"):
             # the spec-driven surface lives in its own layer modules
