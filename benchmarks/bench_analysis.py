@@ -1,0 +1,87 @@
+"""Analyzer runtime + coverage bench (BENCH_analysis.json).
+
+The `repro.analysis` gate runs on every push, so its wall time is a CI
+tax every PR pays — this bench makes that cost (and the analyzer's
+coverage: rules checked, entry points traced, findings) a tracked
+artifact next to the perf benches.  A range-pass regression that, say,
+loses the scan-unrolling fast path shows up here as a wall-time cliff
+before it shows up as a 10-minute CI job.
+
+One row per layer: wall ms, entry points analyzed, findings (expected
+0 on a clean tree).  Trends only — 2-core CPU numbers (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import csv_print, write_bench_json
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_analysis.json")
+
+COLUMNS = ["layer", "rules", "entry_points", "findings", "ms_wall"]
+
+
+def _layer_rows(k: int, block: int):
+    from repro.analysis.astlint import lint_tree
+    from repro.analysis.donation_audit import audit_donation
+    from repro.analysis.range_interp import DEFAULT_GRID, analyze_ingest_grid
+    from repro.analysis.recompile_audit import audit_recompiles, default_grid
+    from repro.analysis.sentinel_flow import analyze_query_grid
+
+    rows = []
+
+    t0 = time.perf_counter()
+    fs = lint_tree(os.path.join(_REPO_ROOT, "src", "repro"))
+    n_files = sum(1 for dp, dn, fn in os.walk(
+        os.path.join(_REPO_ROOT, "src", "repro"))
+        for f in fn if f.endswith(".py"))
+    rows.append(["ast", "SK101-SK104", n_files, len(fs),
+                 (time.perf_counter() - t0) * 1e3])
+
+    t0 = time.perf_counter()
+    fs = analyze_ingest_grid(k=k, block=block)
+    rows.append(["range", "SK201", len(DEFAULT_GRID) + 1, len(fs),
+                 (time.perf_counter() - t0) * 1e3])
+
+    t0 = time.perf_counter()
+    fs = analyze_query_grid(k=k)
+    rows.append(["sentinel", "SK202", len(DEFAULT_GRID) + 1, len(fs),
+                 (time.perf_counter() - t0) * 1e3])
+
+    t0 = time.perf_counter()
+    fs, report = audit_recompiles(block=block, k=k)
+    rows.append(["recompile", "SK203", report["grid"], len(fs),
+                 (time.perf_counter() - t0) * 1e3])
+
+    t0 = time.perf_counter()
+    fs, _ = audit_donation(k=k, block=block)
+    rows.append(["donation", "SK204", 4 + 2, len(fs),
+                 (time.perf_counter() - t0) * 1e3])
+    return rows
+
+
+def run(smoke: bool = False, write_json: bool = True,
+        k: int | None = None, block: int | None = None) -> None:
+    k = k or (16 if smoke else 64)
+    block = block or (16 if smoke else 64)
+    rows = _layer_rows(k, block)
+    csv_print("analysis", COLUMNS, rows)
+    total_findings = sum(r[3] for r in rows)
+    total_ms = sum(r[4] for r in rows)
+    print(f"# total: {total_findings} finding(s), {total_ms:.0f} ms "
+          f"across {len(rows)} layers (k={k}, block={block})")
+    if total_findings:
+        raise AssertionError(
+            f"analyzer found {total_findings} finding(s) on the committed "
+            f"tree — run PYTHONPATH=src python -m repro.analysis for the "
+            f"report")
+    if write_json:
+        write_bench_json({"analysis": rows}, {"analysis": COLUMNS},
+                         JSON_PATH)
+        print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    run()

@@ -55,6 +55,9 @@ BENCHES = {
     "service": ("benchmarks.bench_service",
                 "multi-tenant service: heavy-traffic day, fused-vs-"
                 "sessions race + roofline (BENCH_service.json)"),
+    "analysis": ("benchmarks.bench_analysis",
+                 "repro.analysis gate: rule counts + wall per layer "
+                 "(BENCH_analysis.json)"),
 }
 
 # --smoke shape overrides: every bench still executes end to end (import,
@@ -75,6 +78,7 @@ SMOKE_KW = {
     "h2o": {},
     "family": dict(smoke=True, write_json=False),
     "service": dict(smoke=True, write_json=False),
+    "analysis": dict(smoke=True, write_json=False),
 }
 
 

@@ -1,0 +1,40 @@
+"""repro.analysis — the sketch-aware static analyzer (DESIGN.md §16).
+
+Two layers over one :class:`repro.analysis.findings.Finding` model:
+
+* **Layer 1** (:mod:`repro.analysis.astlint`): a pure-AST lint of
+  ``src/repro`` with four repo-specific rules — unguarded sentinel
+  equality (SK101), Pallas kernel-literal hygiene (SK102), jit-static
+  argument hygiene (SK103) and deprecated ``jax_sketch`` shim imports
+  (SK104).  Milliseconds; wired into pre-commit.
+
+* **Layer 2**: traced-jaxpr analyses of the real entry points — an
+  int32 value-range abstract interpreter propagating the
+  ``validate_block`` preconditions through the fused ingest
+  (:mod:`range_interp`, SK201), a sentinel-flow taint pass over the
+  query paths (:mod:`sentinel_flow`, SK202), a recompile auditor over
+  the full spec grid (:mod:`recompile_audit`, SK203) and a
+  donation/aliasing audit (:mod:`donation_audit`, SK204).
+
+``python -m repro.analysis --ci`` runs everything, diffs against the
+committed ``baseline.json`` and exits 1 on any new finding.
+"""
+from .findings import (  # noqa: F401
+    Finding,
+    RULES,
+    ZERO_BASELINE_RULES,
+    diff_baseline,
+    load_baseline,
+    rule_counts,
+    write_baseline,
+)
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "ZERO_BASELINE_RULES",
+    "diff_baseline",
+    "load_baseline",
+    "rule_counts",
+    "write_baseline",
+]

@@ -1,0 +1,453 @@
+"""Layer 1: repo-specific AST lint over ``src/repro``.
+
+Four rules, each encoding a convention the sketch core depends on for
+correctness (DESIGN.md §16).  The linter is pure ``ast`` — no imports
+of the linted code — so it runs in milliseconds from pre-commit.
+
+SK101 sentinel-equality
+    Negative ids are reserved sentinels (EMPTY=-1, BLOCKED=-2,
+    POISON=-3), so any equality between an ids array and *data* (query
+    items, stream uids, another ids array) can match a sentinel slot
+    and read its garbage count unless the enclosing function also masks
+    with ``ids >= 0``.  Comparisons against a recognized sentinel
+    constant (``EMPTY``, ``-1``, ``jnp.int32(-2)``, ...) are masking,
+    not queries, and are exempt.  Scoped to ``sketch/`` and
+    ``kernels/`` files, where the ids convention lives.
+
+SK102 kernel-literal
+    Pallas kernel bodies (functions in ``kernels/*/kernel.py`` whose
+    parameters are ``*_ref``/``*_out`` Refs, plus their same-module
+    callees) must not close over module-level jnp/np array constants —
+    a captured device scalar breaks Mosaic lowering and pins a device
+    at import time.  Sentinels and INT_MAX must be Python ints there
+    (``_INT_MAX = 2**31 - 1``, not ``jnp.int32(2**31 - 1)``).  Integer
+    literals outside int32 also flag: the device int dtype is int32.
+    Dtype aliases (``F32 = jnp.float32``) are attribute references,
+    not calls, and are exempt.
+
+SK103 jit-static
+    ``partial(jax.jit, static_argnums=...)`` / ``static_argnames``
+    parameters key the compile cache by value: a mutable default
+    (list/dict/set) or a mutable call-site literal is either a
+    TypeError at trace time or a silent retrace-per-call.
+
+SK104 deprecated-shim
+    ``repro.sketch.jax_sketch`` is a deprecated re-export shim; new
+    code imports the real homes (``state``/``phases``/``blocks``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from .findings import Finding, relpath
+
+INT32_MAX = 2**31 - 1
+SENTINEL_NAMES = {"EMPTY", "BLOCKED", "POISON", "_INT_MAX", "INT_MAX"}
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    """Constant-fold an int expression (+,-,*,** over int literals)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _const_int(node.operand)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.Add, ast.Sub, ast.Mult, ast.Pow)):
+        l, r = _const_int(node.left), _const_int(node.right)
+        if l is None or r is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return l + r
+        if isinstance(node.op, ast.Sub):
+            return l - r
+        if isinstance(node.op, ast.Mult):
+            return l * r
+        return l ** r if abs(r) < 64 else None
+    return None
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    """The terminal identifier of an expression: ``state.ids`` -> 'ids',
+    ``ids_r[owner]`` -> 'ids_r', ``bank.ids[:, None]`` -> 'ids'."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Subscript):
+        return _base_name(node.value)
+    if isinstance(node, ast.Call):
+        # ids.astype(...), ids.reshape(...)
+        return _base_name(node.func)
+    return None
+
+
+def _is_ids_like(node: ast.AST) -> bool:
+    name = _base_name(node)
+    if name is None:
+        return False
+    # the state-ids naming family: ids, ids_r, ids_s, flat_ids, ins_ids...
+    # ('astype'/'reshape' terminals recurse through _base_name already)
+    if name in ("astype", "reshape"):
+        return False
+    return name == "ids" or name.endswith("_ids") or name.startswith("ids_")
+
+
+def _is_sentinel_const(node: ast.AST) -> bool:
+    """EMPTY / BLOCKED / POISON / negative int literal / jnp.int32(-k) /
+    int(EMPTY): masking comparisons, not data queries."""
+    v = _const_int(node)
+    if v is not None:
+        return v < 0
+    name = _base_name(node)
+    if name in SENTINEL_NAMES:
+        return True
+    if isinstance(node, ast.Call) and node.args:
+        fname = _base_name(node.func)
+        if fname in ("int32", "int", "asarray", "full", "full_like"):
+            return _is_sentinel_const(node.args[0])
+    return False
+
+
+class _FuncIndex(ast.NodeVisitor):
+    """Map every node to its enclosing function, and collect functions."""
+
+    def __init__(self):
+        self.funcs: List[ast.FunctionDef] = []
+        self._stack: List[ast.FunctionDef] = []
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.funcs.append(node)
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+# ---------------------------------------------------------------------------
+# SK101: sentinel equality
+# ---------------------------------------------------------------------------
+
+def _func_has_guard(func: ast.FunctionDef) -> bool:
+    """Does the function compare an ids-like expression >= 0 (or > -1)?"""
+    for node in ast.walk(func):
+        if isinstance(node, ast.Compare) and len(node.ops) == 1:
+            lhs, rhs = node.left, node.comparators[0]
+            if isinstance(node.ops[0], ast.GtE) and _is_ids_like(lhs) \
+                    and _const_int(rhs) == 0:
+                return True
+            if isinstance(node.ops[0], ast.Gt) and _is_ids_like(lhs) \
+                    and _const_int(rhs) == -1:
+                return True
+            # flipped spelling: 0 <= ids
+            if isinstance(node.ops[0], ast.LtE) and _is_ids_like(rhs) \
+                    and _const_int(lhs) == 0:
+                return True
+    return False
+
+
+def _sentinel_rule(path: str, tree: ast.Module, rel: str) -> List[Finding]:
+    if "/sketch/" not in rel and "/kernels/" not in rel:
+        return []
+    if rel.endswith("/jax_sketch.py"):
+        return []  # the shim re-exports, defines nothing
+    idx = _FuncIndex()
+    idx.visit(tree)
+    out = []
+    for func in idx.funcs:
+        guarded = _func_has_guard(func)
+        if guarded:
+            continue
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Compare) and len(node.ops) == 1
+                    and isinstance(node.ops[0], ast.Eq)):
+                continue
+            lhs, rhs = node.left, node.comparators[0]
+            ids_side = _is_ids_like(lhs) or _is_ids_like(rhs)
+            if not ids_side:
+                continue
+            other = rhs if _is_ids_like(lhs) else lhs
+            if _is_sentinel_const(other):
+                continue  # masking against a sentinel constant
+            out.append(Finding(
+                rule="SK101", path=rel, line=node.lineno,
+                symbol=func.name,
+                message=f"ids equality `{ast.unparse(node)}` has no "
+                        f"`ids >= 0` guard in the enclosing function; "
+                        f"sentinel slots (EMPTY/BLOCKED/POISON) can "
+                        f"match and leak padding counts"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SK102: kernel literals / captured array constants
+# ---------------------------------------------------------------------------
+
+def _kernel_literal_rule(path: str, tree: ast.Module,
+                         rel: str) -> List[Finding]:
+    if not (("/kernels/" in rel or rel.startswith("kernels/"))
+            and rel.endswith("kernel.py")):
+        return []
+    # module-level names bound to jnp/np CALL results (array constants;
+    # plain attribute aliases like F32 = jnp.float32 are fine)
+    array_consts: Dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            root = node.value.func
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id in (
+                    "jnp", "np", "numpy", "jax", "lax"):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        array_consts[tgt.id] = node.lineno
+
+    idx = _FuncIndex()
+    idx.visit(tree)
+    funcs = {f.name: f for f in idx.funcs}
+    # kernel bodies: >= 2 params ending in _ref/_out
+    def is_body(f: ast.FunctionDef) -> bool:
+        refish = [a for a in f.args.args
+                  if a.arg.endswith("_ref") or a.arg.endswith("_out")]
+        return len(refish) >= 2
+
+    kernel_funcs: Set[str] = {n for n, f in funcs.items() if is_body(f)}
+    # transitive same-module callees are kernel-traced too
+    changed = True
+    while changed:
+        changed = False
+        for name in list(kernel_funcs):
+            f = funcs.get(name)
+            if f is None:
+                continue
+            for node in ast.walk(f):
+                if isinstance(node, ast.Call) and isinstance(
+                        node.func, ast.Name) and node.func.id in funcs \
+                        and node.func.id not in kernel_funcs:
+                    kernel_funcs.add(node.func.id)
+                    changed = True
+
+    out = []
+    for name in sorted(kernel_funcs):
+        f = funcs[name]
+        local = {a.arg for a in f.args.args}
+        for node in ast.walk(f):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                    and node.id in array_consts and node.id not in local:
+                out.append(Finding(
+                    rule="SK102", path=rel, line=node.lineno, symbol=name,
+                    message=f"kernel body captures module-level array "
+                            f"constant `{node.id}`; Pallas kernels must "
+                            f"not close over arrays — use a Python-int "
+                            f"literal"))
+            if isinstance(node, ast.Constant) and isinstance(
+                    node.value, int) and not isinstance(node.value, bool) \
+                    and abs(node.value) > INT32_MAX:
+                out.append(Finding(
+                    rule="SK102", path=rel, line=node.lineno, symbol=name,
+                    message=f"int literal {node.value} exceeds int32 in a "
+                            f"kernel body; the device int dtype is int32"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SK103: jit-static argument hygiene
+# ---------------------------------------------------------------------------
+
+def _jit_static_decorator(node: ast.AST):
+    """If ``node`` is partial(jax.jit, static_arg...=...) or
+    jax.jit(..., static_arg...=...), return (argnums, argnames)."""
+    if not isinstance(node, ast.Call):
+        return None
+    fname = _base_name(node.func)
+    is_partial = fname == "partial"
+    is_jit = fname == "jit"
+    if not (is_partial or is_jit):
+        return None
+    if is_partial:
+        if not (node.args and _base_name(node.args[0]) == "jit"):
+            return None
+    nums, names = None, None
+    for kw in node.keywords:
+        if kw.arg == "static_argnums":
+            nums = kw.value
+        elif kw.arg == "static_argnames":
+            names = kw.value
+    if nums is None and names is None:
+        return None
+    return nums, names
+
+
+def _literal_elts(node: ast.AST) -> List[ast.AST]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+def _jit_static_rule(path: str, tree: ast.Module, rel: str) -> List[Finding]:
+    out = []
+    idx = _FuncIndex()
+    idx.visit(tree)
+    jitted: Dict[str, Set[str]] = {}      # func name -> static param names
+    jitted_pos: Dict[str, Set[int]] = {}  # func name -> static positions
+    for func in idx.funcs:
+        for dec in func.decorator_list:
+            parsed = _jit_static_decorator(dec)
+            if parsed is None:
+                continue
+            nums, names = parsed
+            static_names: Set[str] = set()
+            static_pos: Set[int] = set()
+            if names is not None:
+                for elt in _literal_elts(names):
+                    if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, str):
+                        static_names.add(elt.value)
+            if nums is not None:
+                for elt in _literal_elts(nums):
+                    v = _const_int(elt)
+                    if v is not None:
+                        static_pos.add(v)
+            jitted[func.name] = static_names
+            jitted_pos[func.name] = static_pos
+            # mutable DEFAULTS on static params retrace or TypeError
+            params = func.args.args
+            defaults = func.args.defaults
+            off = len(params) - len(defaults)
+            for i, d in enumerate(defaults):
+                p = params[off + i]
+                is_static = (p.arg in static_names
+                             or (off + i) in static_pos)
+                if is_static and isinstance(
+                        d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                            ast.DictComp, ast.SetComp)):
+                    out.append(Finding(
+                        rule="SK103", path=rel, line=p.lineno
+                        if hasattr(p, "lineno") else func.lineno,
+                        symbol=func.name,
+                        message=f"jit-static parameter `{p.arg}` has a "
+                                f"mutable default ({type(d).__name__}); "
+                                f"static args must be hashable"))
+            # kw-only params
+            for p, d in zip(func.args.kwonlyargs, func.args.kw_defaults):
+                if d is not None and p.arg in static_names and isinstance(
+                        d, (ast.List, ast.Dict, ast.Set)):
+                    out.append(Finding(
+                        rule="SK103", path=rel, line=func.lineno,
+                        symbol=func.name,
+                        message=f"jit-static parameter `{p.arg}` has a "
+                                f"mutable default ({type(d).__name__}); "
+                                f"static args must be hashable"))
+
+    # same-module call sites passing mutable literals to static slots
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = _base_name(node.func)
+        if fname not in jitted:
+            continue
+        for kw in node.keywords:
+            if kw.arg in jitted[fname] and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                               ast.DictComp, ast.SetComp)):
+                out.append(Finding(
+                    rule="SK103", path=rel, line=node.lineno, symbol=fname,
+                    message=f"call passes a mutable "
+                            f"{type(kw.value).__name__} as jit-static "
+                            f"argument `{kw.arg}`; static args must be "
+                            f"hashable"))
+        for i, arg in enumerate(node.args):
+            if i in jitted_pos[fname] and isinstance(
+                    arg, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+                out.append(Finding(
+                    rule="SK103", path=rel, line=node.lineno, symbol=fname,
+                    message=f"call passes a mutable "
+                            f"{type(arg).__name__} as jit-static "
+                            f"positional argument {i}; static args must "
+                            f"be hashable"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SK104: deprecated shim imports
+# ---------------------------------------------------------------------------
+
+def _shim_rule(path: str, tree: ast.Module, rel: str) -> List[Finding]:
+    if rel.endswith("sketch/jax_sketch.py"):
+        return []  # the shim itself
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.endswith("jax_sketch"):
+                    out.append(Finding(
+                        rule="SK104", path=rel, line=node.lineno,
+                        symbol="<module>",
+                        message=f"import of deprecated shim "
+                                f"`{alias.name}`; import the real homes "
+                                f"(repro.sketch.state/phases/blocks)"))
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            from_shim = mod.endswith("jax_sketch")
+            imports_shim = any(a.name == "jax_sketch" for a in node.names)
+            if from_shim or imports_shim:
+                out.append(Finding(
+                    rule="SK104", path=rel, line=node.lineno,
+                    symbol="<module>",
+                    message="import of deprecated shim `jax_sketch`; "
+                            "import the real homes "
+                            "(repro.sketch.state/phases/blocks)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+_RULES = (_sentinel_rule, _kernel_literal_rule, _jit_static_rule, _shim_rule)
+
+
+def lint_source(src: str, rel: str) -> List[Finding]:
+    """Lint one source string as if it lived at repo-relative ``rel``
+    (the unit-test entry point: fixtures pick their rule scope by path)."""
+    tree = ast.parse(src)
+    out: List[Finding] = []
+    for rule in _RULES:
+        out.extend(rule(rel, tree, rel))
+    return out
+
+
+def lint_file(path: str) -> List[Finding]:
+    rel = relpath(path)
+    with open(path) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(rule="SK101", path=rel, line=e.lineno or 0,
+                        symbol="<module>",
+                        message=f"syntax error prevents linting: {e.msg}")]
+    out: List[Finding] = []
+    for rule in _RULES:
+        out.extend(rule(path, tree, rel))
+    return out
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (skipping caches)."""
+    out: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.extend(lint_file(os.path.join(dirpath, fn)))
+    return out

@@ -1,0 +1,180 @@
+"""Layer 2d: donation / in-place-aliasing audit (SK204).
+
+Two halves, one invariant: state buffers move through the ingest path
+in place, and only when the platform policy says they may.
+
+**Static half** — every ``pl.pallas_call`` in the sketch-update kernel
+family takes its three state operands (ids, counts, errors) LAST and
+must alias them onto its three outputs via ``input_output_aliases ==
+{n-3: 0, n-2: 1, n-1: 2}``.  A site that drops the keyword (or aliases
+the wrong operands) silently doubles the kernel's HBM footprint and
+halves the roofline — nothing fails, the bench just degrades.  The
+audit parses the call sites, so a refactor that reorders operands
+without re-deriving the alias map is caught at lint time, before any
+accelerator sees it.
+
+**Behavioral half** — the session layer requests jit donation of the
+state pytree iff ``donate and platform.donate_state_buffers()``
+(accelerator-only; DESIGN.md §14 on why CPU keeps it off).  The audit
+runs a real compiled ingest in all donate modes and checks the caller's
+captured state references: deleted exactly when the policy says
+donation is active.  A policy/plumbing mismatch either leaks the old
+bank (donation silently off on an accelerator) or invalidates live
+references the stats trackers hold (donation on where callers rely on
+``donate=False``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Tuple
+
+from .findings import Finding, relpath
+
+_KERNEL_PATH = os.path.join("src", "repro", "kernels", "sketch_update",
+                            "kernel.py")
+_SESSION_PATH = "src/repro/sketch/session.py"
+
+
+# ---------------------------------------------------------------------------
+# static half: pallas_call alias maps
+# ---------------------------------------------------------------------------
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "pallas_call") or \
+           (isinstance(f, ast.Name) and f.id == "pallas_call")
+
+
+def _list_len(node: Optional[ast.expr]) -> Optional[int]:
+    """Length of a list-valued spec expression: a literal list, or the
+    ``[spec] * N`` idiom used for homogeneous out_specs."""
+    if isinstance(node, ast.List):
+        return len(node.elts)
+    if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult)):
+        for side in (node.right, node.left):
+            if isinstance(side, ast.Constant) and isinstance(side.value, int):
+                return int(side.value)
+    return None
+
+
+def _alias_map(node: Optional[ast.expr]) -> Optional[Dict[int, int]]:
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[int, int] = {}
+    for k, v in zip(node.keys, node.values):
+        if not (isinstance(k, ast.Constant) and isinstance(v, ast.Constant)):
+            return None
+        out[int(k.value)] = int(v.value)
+    return out
+
+
+def audit_kernel_aliasing(path: Optional[str] = None) -> List[Finding]:
+    """Check every pallas_call site in the sketch-update kernel aliases
+    its trailing state operands onto its outputs, in order."""
+    path = path or _KERNEL_PATH
+    with open(path, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    findings: List[Finding] = []
+    rel = relpath(path)
+    n_sites = 0
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(node)):
+            continue
+        n_sites += 1
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        n_in = _list_len(kw.get("in_specs"))
+        n_out = _list_len(kw.get("out_specs")) or \
+            _list_len(kw.get("out_shape")) or 3
+        aliases = _alias_map(kw.get("input_output_aliases"))
+        if "input_output_aliases" not in kw:
+            findings.append(Finding(
+                rule="SK204", path=rel, line=node.lineno,
+                symbol="pallas_call",
+                message="pallas_call site has no input_output_aliases: "
+                        "state round-trips HBM as a fresh allocation "
+                        "instead of updating in place"))
+            continue
+        if aliases is None or n_in is None:
+            findings.append(Finding(
+                rule="SK204", path=rel, line=node.lineno,
+                symbol="pallas_call",
+                message="pallas_call in_specs/input_output_aliases are "
+                        "not statically checkable literals — keep them "
+                        "literal so the aliasing audit can verify them"))
+            continue
+        want = {n_in - n_out + j: j for j in range(n_out)}
+        if aliases != want:
+            findings.append(Finding(
+                rule="SK204", path=rel, line=node.lineno,
+                symbol="pallas_call",
+                message=f"input_output_aliases {aliases!r} does not map "
+                        f"the trailing {n_out} state operands onto the "
+                        f"outputs in order (expected {want!r}) — operand "
+                        f"order and alias map have drifted apart"))
+    if n_sites == 0:
+        findings.append(Finding(
+            rule="SK204", path=rel, line=1, symbol="pallas_call",
+            message="no pallas_call sites found in the sketch-update "
+                    "kernel — the aliasing audit has lost its target"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# behavioral half: session donation vs platform policy
+# ---------------------------------------------------------------------------
+
+def audit_session_donation(k: int = 64, block: int = 64
+                           ) -> Tuple[List[Finding], Dict[str, bool]]:
+    """Drive a compiled ingest in both donate modes; assert the caller's
+    captured state buffers die exactly when policy says they donate."""
+    import jax
+    import numpy as np
+
+    from repro.platform import donate_state_buffers
+    from repro.sketch import api
+    from repro.sketch import session as sess
+
+    spec = api.SketchSpec(kind="frequency", k=k, variant="sspm",
+                          backend="bank")
+    ad = api.adapter_for(spec)
+    items = np.arange(block, dtype=np.int32) % 17
+    weights = np.ones(block, dtype=np.int32)
+
+    findings: List[Finding] = []
+    report: Dict[str, bool] = {"policy": bool(donate_state_buffers())}
+    for donate in (True, False):
+        state = ad.make(spec)
+        leaves = [l for l in jax.tree_util.tree_leaves(state)
+                  if hasattr(l, "is_deleted")]
+        fn = sess._ingest_fn(spec, block, donate)
+        out = fn(state, items, weights)
+        jax.block_until_ready(out)
+        deleted = any(l.is_deleted() for l in leaves)
+        expected = bool(donate and donate_state_buffers())
+        report[f"donate={donate}"] = deleted
+        if deleted != expected:
+            if expected:
+                msg = (f"donate={donate} with an accelerator attached "
+                       f"left the pre-ingest state buffers alive — "
+                       f"donation was requested by policy but never "
+                       f"reached jit (stale donate_argnums plumbing?)")
+            else:
+                msg = (f"donate={donate} deleted the caller's state "
+                       f"buffers although platform policy says donation "
+                       f"is off — live references (fault-replay "
+                       f"snapshots, trackers' public .state) would be "
+                       f"invalidated")
+            findings.append(Finding(
+                rule="SK204", path=_SESSION_PATH, line=100,
+                symbol="_ingest_fn_cached", message=msg))
+    return findings, report
+
+
+def audit_donation(kernel_path: Optional[str] = None, k: int = 64,
+                   block: int = 64) -> Tuple[List[Finding], Dict]:
+    findings = audit_kernel_aliasing(kernel_path)
+    behavioral, report = audit_session_donation(k=k, block=block)
+    findings.extend(behavioral)
+    report["alias_sites_clean"] = not findings
+    return findings, report

@@ -1,0 +1,155 @@
+"""Layer 2c: recompile auditor over the StreamSession spec grid (SK203).
+
+The PR 9 service layer keys compiled ingest on the *normalized* spec
+(:func:`repro.sketch.session.ingest_cache_spec`): tenant populations
+collapse onto a ``tenants=1`` canonical layout so a thousand tenants
+share one trace.  A regression here is silent — everything still
+computes, the process just compiles per tenant and the multi-tenant
+bench falls off a cliff.
+
+This audit DRIVES real sessions over a spec grid and asserts, from the
+lru counters (:func:`ingest_cache_stats`):
+
+* one cache entry per distinct ``(normalized spec, block, donate)``
+  cell — no more (a normalization gap), no fewer (an over-eager
+  collapse that would share traces across genuinely different layouts);
+* re-driving the same grid adds ZERO entries (steady-state sessions
+  never retrace);
+* each cell's jit wrapper holds exactly one compiled signature after
+  being driven at one shape (``_cache_size``), the per-function view
+  of the same invariant.
+
+Findings carry the grid cell that broke, anchored at the session cache
+plumbing, so `--ci` fails on the exact regression class PR 9 fixed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .findings import Finding
+
+_SESSION_PATH = "src/repro/sketch/session.py"
+
+
+def default_grid(k: int = 64) -> List:
+    """Spec cells exercising every normalization axis: plain, sharded,
+    family variants, crprecis, and tenant populations that MUST collapse
+    (T=3 and T=5 with equal per-tenant capacity share one layout)."""
+    from repro.sketch.api import SketchSpec
+
+    return [
+        SketchSpec(kind="frequency", k=k, variant="sspm", backend="bank"),
+        SketchSpec(kind="frequency", k=k, variant="lazy", backend="bank"),
+        SketchSpec(kind="frequency", k=k, variant="double", backend="bank"),
+        SketchSpec(kind="frequency", k=k, variant="unbiased",
+                   backend="bank"),
+        SketchSpec(kind="frequency", k=k, variant="sspm",
+                   backend="crprecis"),
+        SketchSpec(kind="frequency", k=k, variant="sspm", backend="bank",
+                   shards=4),
+        # PR 9 pin: distinct tenant populations, same total layout
+        # -> ONE normalized cell for all three
+        SketchSpec(kind="frequency", k=k, bits=8, variant="sspm",
+                   backend="bank", tenants=3),
+        SketchSpec(kind="frequency", k=k, bits=8, variant="sspm",
+                   backend="bank", tenants=5),
+        SketchSpec(kind="frequency", k=k, bits=8, variant="sspm",
+                   backend="bank", tenants=1),
+    ]
+
+
+def _drive(spec, block: int, rng: np.random.Generator) -> None:
+    from repro.sketch.session import StreamSession
+
+    s = StreamSession(spec, block=block)
+    n = block
+    items = rng.integers(0, 50, size=n).astype(np.int32)
+    if spec.tenants:
+        # composite keys: (tenant << bits) | item, item < 2**bits
+        t = rng.integers(0, int(spec.tenants), size=n)
+        items = ((t << int(spec.bits)) | (items % (1 << int(spec.bits))))
+        items = items.astype(np.int32)
+    weights = np.ones(n, dtype=np.int32)
+    s.ingest(items, weights)
+    s.flush()
+
+
+def audit_recompiles(grid: Optional[Sequence] = None, block: int = 64,
+                     k: int = 64) -> Tuple[List[Finding], Dict[str, int]]:
+    """Run the grid through real sessions; return (findings, report)."""
+    from repro.sketch import session as sess
+
+    if grid is None:
+        grid = default_grid(k=k)
+    findings: List[Finding] = []
+    rng = np.random.default_rng(0)
+
+    sess._ingest_fn_cached.cache_clear()
+    for spec in grid:
+        _drive(spec, block, rng)
+    stats1 = sess.ingest_cache_stats()
+
+    by_cell: Dict[Tuple, List] = {}
+    for spec in grid:
+        by_cell.setdefault(
+            (sess.ingest_cache_spec(spec), block, True), []).append(spec)
+    cells = set(by_cell)
+    sigs1 = {c: _jit_cache_size(sess._ingest_fn(c[0], block, True))
+             for c in cells}
+    if stats1["entries"] != len(cells):
+        findings.append(Finding(
+            rule="SK203", path=_SESSION_PATH, line=67,
+            symbol="ingest_cache_spec",
+            message=f"compiled-ingest cache holds {stats1['entries']} "
+                    f"entries for {len(cells)} distinct normalized "
+                    f"(spec, block, donate) cells over the audit grid — "
+                    f"cache identity and trace identity disagree"))
+
+    # steady state: the same grid again must be all hits
+    for spec in grid:
+        _drive(spec, block, rng)
+    stats2 = sess.ingest_cache_stats()
+    if stats2["entries"] != stats1["entries"]:
+        findings.append(Finding(
+            rule="SK203", path=_SESSION_PATH, line=89,
+            symbol="_ingest_fn_cached",
+            message=f"re-driving the identical session grid grew the "
+                    f"ingest cache from {stats1['entries']} to "
+                    f"{stats2['entries']} entries — live sessions retrace"))
+
+    # per-function view: a cell's jit wrapper compiles one signature
+    # per distinct state shape driven through it (tenant populations
+    # that share a cell legitimately differ in leading axis), and the
+    # re-drive must not have added ANY signature (shape-unstable or
+    # weak-key ingest would retrace per session).
+    multi = []
+    for c, specs in by_cell.items():
+        n_sigs = _jit_cache_size(sess._ingest_fn(c[0], block, True))
+        if n_sigs is None:
+            continue
+        if n_sigs > len(specs) or n_sigs != sigs1.get(c):
+            s0 = specs[0]
+            multi.append((s0.variant, s0.backend, len(specs),
+                          sigs1.get(c), n_sigs))
+    if multi:
+        findings.append(Finding(
+            rule="SK203", path=_SESSION_PATH, line=104,
+            symbol="_ingest_fn",
+            message=f"cells with (variant, backend, specs_driven, "
+                    f"sigs_after_pass1, sigs_after_pass2)={multi!r} "
+                    f"compiled more signatures than distinct state "
+                    f"shapes, or grew on an identical re-drive"))
+
+    report = dict(stats2)
+    report["cells"] = len(cells)
+    report["grid"] = len(list(grid))
+    return findings, report
+
+
+def _jit_cache_size(fn) -> Optional[int]:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None

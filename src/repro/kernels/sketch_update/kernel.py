@@ -318,7 +318,9 @@ def _apply_one(ids, counts, errors, item, w, variant: int):
     """Branchless weighted SpaceSaving± update on (R,128) arrays."""
     # ---- insert path (w > 0) ------------------------------------------
     wi = jnp.maximum(w, 0)
-    eq = ids == item
+    # sentinel slots (EMPTY/BLOCKED, both negative) never match: an
+    # id-(-1) update must not resurrect an empty slot's garbage count
+    eq = (ids == item) & (ids >= 0)
     monitored = eq.any()
     # flat argmin/argmax over the 2D store (row-major == 1D semantics)
     flat_eq = eq.reshape(-1)

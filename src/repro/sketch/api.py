@@ -279,7 +279,8 @@ def variants_for(kind: str) -> Tuple[str, ...]:
 # Input validation: one home for the block conventions
 # ---------------------------------------------------------------------------
 
-def validate_block(spec: SketchSpec, items, weights) -> None:
+def validate_block(spec: SketchSpec, items, weights, *,
+                   prior_mass: int = 0) -> int:
     """Check one (items, weights) block against the package conventions.
 
     The conventions every adapter assumes (DESIGN.md §11): item ids are
@@ -288,6 +289,16 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
     of a zero-weight slot is ignored), items and weights are equal-length
     1-D, and quantile kinds need every REAL (nonzero-weight) item inside
     the dyadic universe [0, 2^bits).
+
+    ``prior_mass`` is the positive mass already merged into the state
+    this block is headed for (sessions track it across ingests).  A
+    counter can hold at most that much, so the block is rejected when
+    ``prior_mass`` plus the block's worst PER-ITEM net weight could
+    carry a counter past int32 — the per-block magnitude-sum check
+    alone misses a saturated counter meeting a near-rail state, which
+    is exactly the precondition the SK201 range pass assumes
+    (``repro.analysis.range_interp``).  Returns the block's positive
+    mass (0 for traced blocks) so callers can accumulate it.
 
     Traced (jit-abstract) inputs skip the value checks — validation
     happens where values exist: at the host boundary
@@ -307,7 +318,7 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
             f"items/weights length mismatch: {i_shape} vs {w_shape}; pad "
             f"the short side with weight-0 entries (the padding convention)")
     if traced:
-        return
+        return 0
     i = np.asarray(items)
     w = np.asarray(weights)
     if i.dtype.kind not in "iu" or w.dtype.kind not in "iu":
@@ -341,6 +352,26 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
             f"({int32_max}): a single block this heavy could overflow "
             f"the int32 counters (adds saturate, losing mass). Split "
             f"the block or rescale the weights.")
+    # per-item cumulative mass vs. near-rail state: a counter already
+    # holding up to prior_mass takes this block's NET weight for its
+    # item in one merge, so the worst per-item net (not the block sum)
+    # is what must still fit under the rail.
+    pos_mass = int(w.astype(np.int64).clip(min=0).sum())
+    if prior_mass and pos_mass:
+        w64 = w[real].astype(np.int64)
+        uniq, inv = np.unique(i[real], return_inverse=True)
+        net = np.zeros(uniq.size, dtype=np.int64)
+        np.add.at(net, inv, w64)
+        worst = int(net.max(initial=0))
+        if worst > 0 and int(prior_mass) + worst > int32_max:
+            bad = int(uniq[int(np.argmax(net))])
+            raise ValueError(
+                f"item {bad} accumulates net weight {worst} in this "
+                f"block while the target state already holds up to "
+                f"{int(prior_mass)} positive mass: its counter could "
+                f"cross int32 max ({int32_max}) mid-merge (adds "
+                f"saturate, losing mass). Split the block, rescale "
+                f"weights, or checkpoint-and-reset the session.")
     if spec.kind == "quantile":
         hi = 1 << spec.bits
         if (i[real] >= hi).any():
@@ -357,6 +388,7 @@ def validate_block(spec: SketchSpec, items, weights) -> None:
                 f"[0, {spec.tenants} << {spec.bits}); pack keys with "
                 f"tenant.pack_keys(tenant, item, item_bits={spec.bits}) "
                 f"and keep items inside [0, 2^{spec.bits})")
+    return pos_mass
 
 
 # ---------------------------------------------------------------------------

@@ -397,12 +397,15 @@ def residual_phase_banked(ids2, cnt2, err2, h_uids, h_net, uoff, start,
             active = (rem > 0) & (maxe > 0)
             d = jnp.where(active, jnp.minimum(rem, maxe), 0)
             hot = (lane == sel[:, None]) & active[:, None]
-            d2 = d[:, None]
-            cnt2 = jnp.where(hot, cnt2 - d2, cnt2)
-            err2 = jnp.where(hot, err2 - d2, err2)
+            # saturating decrements: d <= maxe = err2[sel] and d <= rem,
+            # so all three are exact for in-range states; a count already
+            # at the negative rail absorbs the spread instead of wrapping
+            nd2 = jnp.negative(d)[:, None]
+            cnt2 = jnp.where(hot, sat_add(cnt2, nd2), cnt2)
+            err2 = jnp.where(hot, sat_add(err2, nd2), err2)
             sel = jnp.argmax(err2, axis=1)
             maxe = jnp.take_along_axis(err2, sel[:, None], axis=1)[:, 0]
-            return rem - d, cnt2, err2, sel, maxe
+            return sat_add(rem, jnp.negative(d)), cnt2, err2, sel, maxe
 
         sel0 = jnp.argmax(err2, axis=1)
         maxe0 = jnp.take_along_axis(err2, sel0[:, None], axis=1)[:, 0]

@@ -72,7 +72,8 @@ from .state import (EMPTY, VARIANT_LAZY, VARIANT_SSPM, SketchState, _INT_MAX,
 
 def _insert(state: SketchState, item: jax.Array, w: jax.Array) -> SketchState:
     ids, counts, errors = state
-    eq = ids == item
+    # sentinel slots (negative ids) never count as monitored
+    eq = (ids == item) & (ids >= 0)
     monitored = eq.any()
     slot_mon = jnp.argmax(eq)
 
@@ -102,7 +103,8 @@ def _delete(
     state: SketchState, item: jax.Array, w: jax.Array, variant: int
 ) -> SketchState:
     ids, counts, errors = state
-    eq = ids == item
+    # sentinel slots (negative ids) never count as monitored
+    eq = (ids == item) & (ids >= 0)
     monitored = eq.any()
     slot_mon = jnp.argmax(eq)
 
@@ -265,7 +267,10 @@ def partition_block(state: SketchState, uids: jax.Array, net: jax.Array,
     # padding to INT_MAX to keep the array sorted for searchsorted.
     usearch = jnp.where(uids >= 0, uids, _INT_MAX)
     pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
-    match = usearch[pos] == state.ids  # EMPTY/BLOCKED slots never match
+    # usearch is non-negative by construction, so sentinel slots could
+    # never match anyway — the explicit guard keeps the invariant local
+    # (and machine-checkable) instead of relying on the remap above.
+    match = (usearch[pos] == state.ids) & (state.ids >= 0)
     # Monitored deltas commute (insert: count += w; delete: count -= w; ids
     # and errors untouched) — one gather applies them all at once,
     # saturating at ±INT_MAX instead of wrapping.

@@ -271,7 +271,10 @@ def rank_many(state: DyadicShardedState, xs: jax.Array) -> jax.Array:
     owner = shard_of(nodes, S)                              # (n, bits)
     ids_r = state.bank.ids[owner, lvl]                      # (n, bits, k)
     cnt_r = state.bank.counts[owner, lvl]
-    eq = ids_r == nodes[..., None]
+    # guard the owner-row equality: for xs at the int32 rail, y = xs + 1
+    # wraps negative and 2*(y >> (l+1)) can land exactly on BLOCKED (-2),
+    # which would otherwise match a capacity-padding slot's INT_MAX count
+    eq = (ids_r == nodes[..., None]) & (ids_r >= 0)
     est = jnp.where(eq, cnt_r, 0).sum(axis=-1) * eq.any(axis=-1)
     r = jnp.where(take, jnp.maximum(est, 0), 0).sum(axis=1)
     # y >= 2^bits: the whole-universe node's frequency is the exact mass

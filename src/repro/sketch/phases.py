@@ -72,11 +72,20 @@ def segment_nets(s_items: jax.Array, s_weights: jax.Array):
     nh_after = jnp.concatenate(
         [nh[:, 1:], jnp.full((R, 1), B, jnp.int32)], axis=1)
     seg_end = jnp.clip(nh_after - 1, 0, B - 1)
+    # net[i] = c[seg_end] - c[i-1]: subtract the stored EXCLUSIVE prefix
+    # (shift of c) instead of computing c - w inline. Both operands are
+    # true prefix sums bounded by the block's validated |weight| total,
+    # so the difference never wraps int32; the former c[seg_end] - c + w
+    # form ran through an intermediate that can wrap at the rail (masked
+    # for valid blocks, adversarial near it — and opaque to the SK201
+    # range pass, which proves prefix-sum differences bounded).
+    ce = jnp.concatenate(
+        [jnp.zeros((c.shape[0], 1), c.dtype), c[:, :-1]], axis=1)
     if c.shape[0] == 1 and R > 1:
         # shared-weights fast path: one (B,) prefix sum, gathered per row
-        net = c[0][seg_end] - c + s_weights
+        net = c[0][seg_end] - ce[0]
     else:
-        net = jnp.take_along_axis(c, seg_end, axis=1) - c + s_weights
+        net = jnp.take_along_axis(c, seg_end, axis=1) - ce
     return head, net
 
 
@@ -213,18 +222,27 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
     B = uu.shape[0]
 
     def n_leq(x):
-        # #union values <= x; the (T - count) subtraction may wrap for
-        # INT_MAX-blocked slots — masked out by the comparison.
-        return jnp.where(counts <= x, x - counts + 1, 0)
+        # #union values <= x. Saturate the (x - count) headroom and clip
+        # it to [0, m]: for unmasked slots the true distance is already
+        # in that range (x <= min(counts) + m and count >= min(counts)),
+        # so the value is unchanged — but INT_MAX-blocked slots no
+        # longer wrap on the way to being masked out, and the SK201
+        # range pass can bound the per-slot pop count (and hence the
+        # sum) without the min-relational fact.
+        d = jnp.clip(sat_add(x, jnp.negative(counts)), 0, m)
+        return jnp.where(counts <= x, d + 1, 0)
 
     lo = counts.min()
     hi = sat_add(lo, m)  # saturate: water level can't pass _INT_MAX
 
     def probe(_, lh):
         lo, hi = lh
-        mid = lo + (hi - lo) // 2
+        # saturating midpoint: hi - lo is in [0, m] exactly, so both
+        # sat_adds are identities for valid states; near the int32 rail
+        # (lo = hi = INT_MAX) the former mid + 1 wrapped negative
+        mid = sat_add(lo, sat_add(hi, jnp.negative(lo)) // 2)
         ge = n_leq(mid).sum() >= m
-        return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+        return jnp.where(ge, lo, sat_add(mid, 1)), jnp.where(ge, mid, hi)
 
     steps = B.bit_length() + 1  # enough to bisect [lo, lo + m], m <= B
     T, _ = jax.lax.fori_loop(0, steps, probe, (lo, hi))
@@ -234,7 +252,11 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
     elig = counts <= T
     rank = jnp.cumsum(elig) - 1
     extra = elig & (rank < r)
-    t = jnp.where(counts <= T - 1, T - counts, 0) + extra
+    # same saturated-headroom form as n_leq: t_j = T - count_j is in
+    # [1, m] wherever the mask holds, clipping only redirects the
+    # masked-out (wrapping) lanes
+    t = jnp.where(counts <= T - 1,
+                  jnp.clip(sat_add(T, jnp.negative(counts)), 0, m), 0) + extra
     evicted = t > 0
     new_counts = sat_add(counts, t)
     v_last = new_counts - 1
@@ -242,7 +264,15 @@ def waterfill_unit_inserts(ids: jax.Array, counts: jax.Array,
     # stop at value T-1: position = #pops strictly below T-1 + #lower-
     # index slots also reaching T-1. Extra slots pop T: position =
     # #pops below T + rank among the extra set.
-    f_tm2 = n_leq(T - 2).sum()
+    # #pops strictly below T-1, phrased at T-1 with a strict mask: the
+    # per-slot tally (T-2) - count + 1 == (T-1) - count and the mask
+    # count <= T-2 == count < T-1, so this matches n_leq(T - 2) exactly
+    # — except that T - 2 wraps when the water level sits within 2 of
+    # the negative rail (T - 1 bottoms out at INT32_MIN, still valid,
+    # and the strict mask then correctly selects nothing)
+    f_tm2 = jnp.where(counts < T - 1,
+                      jnp.clip(sat_add(T - 1, jnp.negative(counts)), 0, m),
+                      0).sum()
     under = counts <= T - 1
     below_line = jnp.cumsum(under) - under  # exclusive prefix count
     pos = jnp.where(extra, f_tm1 + jnp.minimum(rank, r), f_tm2 + below_line)

@@ -165,6 +165,15 @@ class StreamSession:
         self._compiled = _ingest_fn(spec, self.block, donate)
         self.insertions = 0
         self.deletions = 0
+        # positive mass validated into this session so far — the
+        # prior_mass bound api.validate_block holds each new block
+        # against (a counter can never exceed it, so per-item nets are
+        # rejected before they could carry one past int32). A caller-
+        # provided resumed ``state`` starts at 0: its history is
+        # unknown, so the bound is best-effort until restored by the
+        # caller (``session.ingested_mass = ...`` after a checkpoint
+        # load).
+        self.ingested_mass = 0
         # resize bound widening, accumulated by elastic.reshard_session
         self.error_slack = 0
         # buffered (items, weights) fragments awaiting a flush
@@ -275,7 +284,8 @@ class StreamSession:
         """
         items = np.asarray(items).ravel()
         weights = np.asarray(weights).ravel()
-        api.validate_block(self.spec, items, weights)
+        self.ingested_mass += api.validate_block(
+            self.spec, items, weights, prior_mass=self.ingested_mass)
         items = items.astype(np.int32)
         weights = weights.astype(np.int32)
         for s in range(0, len(items), self.block):
@@ -301,7 +311,8 @@ class StreamSession:
             weights = np.ones(len(items), np.int32)
         else:
             weights = np.asarray(weights).ravel()
-        api.validate_block(self.spec, items, weights)
+        self.ingested_mass += api.validate_block(
+            self.spec, items, weights, prior_mass=self.ingested_mass)
         self._append(items.astype(np.int32), weights.astype(np.int32))
 
     def _append(self, items: np.ndarray, weights: np.ndarray) -> None:
@@ -332,6 +343,17 @@ class StreamSession:
                 f"item {item} is outside the dyadic universe "
                 f"[0, 2^{self.spec.bits}); raise SketchSpec.bits or bucket "
                 f"ids before ingest")
+        int32_max = int(np.iinfo(np.int32).max)
+        if abs(weight) > int32_max:
+            raise ValueError(
+                f"weight {weight} does not fit int32 (the device-side "
+                f"count dtype)")
+        if weight > 0 and self.ingested_mass + weight > int32_max:
+            raise ValueError(
+                f"observation of weight {weight} on a session already "
+                f"holding {self.ingested_mass} positive mass could carry "
+                f"a counter past int32 max ({int32_max}); rescale or "
+                f"checkpoint-and-reset the session")
         expire = (self.window is not None
                   and len(self._item_fifo) >= self.window)
         if expire:
@@ -343,6 +365,8 @@ class StreamSession:
             frag_w = np.asarray([weight], np.int32)
         self._append(frag_i, frag_w)
         self.insertions += weight
+        if weight > 0:
+            self.ingested_mass += weight
         if self.window is not None:
             self._item_fifo.append((item, weight))
             if expire:

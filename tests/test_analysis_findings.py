@@ -1,0 +1,171 @@
+"""Regression tests for the Layer-1 findings fixed at the linter's
+introduction (ISSUE 10, satellite 1).
+
+When SK101 first ran over the tree it flagged four real sites — the
+serial kernel's ``_apply_one``, the reference ``_insert``/``_delete``
+in ``blocks.py``, ``partition_block``'s searchsorted match, and the
+sharded dyadic ``rank_many`` owner-row equality.  Each carried the same
+latent bug shape: an ``ids == <data>`` equality with no ``ids >= 0``
+mask in the enclosing function, so a sentinel slot (EMPTY=-1,
+BLOCKED=-2) could match adversarial data and leak its garbage count.
+Each fixture below is the PRE-fix shape of one of those sites (lint
+must flag it — failing-before) next to its post-fix shape (lint must
+pass it), and the tree-wide tests pin both zero-tolerance rules at
+zero so none of them regress silently.
+"""
+import os
+import textwrap
+
+from repro.analysis.astlint import lint_source, lint_tree
+
+SKETCH_REL = "src/repro/sketch/fixture.py"
+KERNEL_REL = "src/repro/kernels/fixture/kernel.py"
+
+REPO_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "src", "repro")
+
+
+def sk101(findings):
+    return [f for f in findings if f.rule == "SK101"]
+
+
+class TestApplyOneRegression:
+    """kernels/sketch_update/kernel.py ``_apply_one``: the serial
+    baseline matched an updated item against raw ids, so an update for
+    any id equal to a sentinel resurrected an empty slot's count."""
+
+    BEFORE = textwrap.dedent("""
+        def _apply_one(ids, counts, errors, item, w, variant):
+            eq = ids == item
+            monitored = eq.any()
+            return eq, monitored
+    """)
+    AFTER = textwrap.dedent("""
+        def _apply_one(ids, counts, errors, item, w, variant):
+            eq = (ids == item) & (ids >= 0)
+            monitored = eq.any()
+            return eq, monitored
+    """)
+
+    def test_failing_before(self):
+        assert len(sk101(lint_source(self.BEFORE, KERNEL_REL))) == 1
+
+    def test_passing_after(self):
+        assert sk101(lint_source(self.AFTER, KERNEL_REL)) == []
+
+
+class TestReferenceInsertDeleteRegression:
+    """blocks.py ``_insert``/``_delete``: the reference (ground-truth)
+    eviction loop carried the same unguarded equality as the serial
+    kernel — a bug in the oracle every property test compares against."""
+
+    BEFORE = textwrap.dedent("""
+        def _insert(state, item, w):
+            ids, counts, errors = state
+            eq = ids == item
+            slot_mon = jnp.argmax(eq)
+            return eq, slot_mon
+
+        def _delete(state, item, w, variant):
+            ids, counts, errors = state
+            eq = ids == item
+            return eq
+    """)
+    AFTER = textwrap.dedent("""
+        def _insert(state, item, w):
+            ids, counts, errors = state
+            eq = (ids == item) & (ids >= 0)
+            slot_mon = jnp.argmax(eq)
+            return eq, slot_mon
+
+        def _delete(state, item, w, variant):
+            ids, counts, errors = state
+            eq = (ids == item) & (ids >= 0)
+            return eq
+    """)
+
+    def test_failing_before(self):
+        assert len(sk101(lint_source(self.BEFORE, SKETCH_REL))) == 2
+
+    def test_passing_after(self):
+        assert sk101(lint_source(self.AFTER, SKETCH_REL)) == []
+
+
+class TestPartitionBlockRegression:
+    """blocks.py ``partition_block``: the searchsorted match relied on a
+    non-local invariant (usearch remaps negatives to INT_MAX) for its
+    sentinel safety; the fix makes the guard local and checkable."""
+
+    BEFORE = textwrap.dedent("""
+        def partition_block(state, uids, net, variant):
+            usearch = jnp.where(uids >= 0, uids, _INT_MAX)
+            pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
+            match = usearch[pos] == state.ids
+            return match
+    """)
+    AFTER = textwrap.dedent("""
+        def partition_block(state, uids, net, variant):
+            usearch = jnp.where(uids >= 0, uids, _INT_MAX)
+            pos = jnp.clip(jnp.searchsorted(usearch, state.ids), 0, B - 1)
+            match = (usearch[pos] == state.ids) & (state.ids >= 0)
+            return match
+    """)
+
+    def test_failing_before(self):
+        # the uids >= 0 remap is NOT an ids-array guard: state.ids is
+        # the compared array and it is never masked
+        assert len(sk101(lint_source(self.BEFORE, SKETCH_REL))) == 1
+
+    def test_passing_after(self):
+        assert sk101(lint_source(self.AFTER, SKETCH_REL)) == []
+
+
+class TestRankManyRegression:
+    """dyadic_sharded.py ``rank_many``: for xs at the int32 rail the
+    dyadic node id computation wraps negative and can land exactly on
+    BLOCKED(-2), matching a capacity-padding slot holding INT_MAX."""
+
+    BEFORE = textwrap.dedent("""
+        def rank_many(state, xs):
+            ids_r = state.bank.ids[owner, lvl]
+            cnt_r = state.bank.counts[owner, lvl]
+            eq = ids_r == nodes[..., None]
+            est = jnp.where(eq, cnt_r, 0).sum(axis=-1)
+            return est
+    """)
+    AFTER = textwrap.dedent("""
+        def rank_many(state, xs):
+            ids_r = state.bank.ids[owner, lvl]
+            cnt_r = state.bank.counts[owner, lvl]
+            eq = (ids_r == nodes[..., None]) & (ids_r >= 0)
+            est = jnp.where(eq, cnt_r, 0).sum(axis=-1)
+            return est
+    """)
+
+    def test_failing_before(self):
+        assert len(sk101(lint_source(self.BEFORE, SKETCH_REL))) == 1
+
+    def test_passing_after(self):
+        assert sk101(lint_source(self.AFTER, SKETCH_REL)) == []
+
+
+class TestTreeIsClean:
+    """The acceptance bar: both zero-tolerance rules hold at zero over
+    the real tree, with no baseline to hide behind (SK101/SK102 refuse
+    suppression by construction — see findings.ZERO_BASELINE_RULES)."""
+
+    def test_no_sk101_in_tree(self):
+        fs = [f for f in lint_tree(REPO_SRC) if f.rule == "SK101"]
+        assert fs == [], [f.render() for f in fs]
+
+    def test_no_sk102_in_tree(self):
+        fs = [f for f in lint_tree(REPO_SRC) if f.rule == "SK102"]
+        assert fs == [], [f.render() for f in fs]
+
+    def test_baseline_contains_no_zero_tolerance_keys(self):
+        from repro.analysis import ZERO_BASELINE_RULES, load_baseline
+
+        bad = [k for k in load_baseline()
+               if k.split(":", 1)[0] in ZERO_BASELINE_RULES]
+        assert bad == []
